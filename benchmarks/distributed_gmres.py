@@ -1,0 +1,98 @@
+"""Distributed GMRES scaling: the sharding study the paper's 2 GB wall
+
+motivates.  Runs the row-sharded solver on 8 fake host devices (subprocess,
+so the main process keeps its 1-device view) and reports:
+
+  - wall time vs the single-device solver,
+  - collective op counts/bytes from the lowered HLO (the real scaling
+    quantity: per Arnoldi step CGS2 needs exactly 1 all-gather + 2 psums
+    vs MGS's j+1 collective rounds).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_CODE = textwrap.dedent("""
+    import json, time
+    import jax, jax.numpy as jnp
+    from repro.core import gmres, gmres_sharded, operators
+    from repro.roofline import parse_collectives
+
+    out = []
+    mesh = jax.make_mesh((8,), ('model',),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    for n in (2048, 8192):
+        a = operators.random_diagdom(jax.random.PRNGKey(0), n)
+        b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+
+        single = jax.jit(lambda a, b: gmres(a, b, m=20, tol=1e-5, gs='cgs2'))
+        single(a, b).x.block_until_ready()
+        t0 = time.perf_counter(); single(a, b).x.block_until_ready()
+        t_single = time.perf_counter() - t0
+
+        # s-step (communication-avoiding), single-device wall time; its
+        # value is the ROUND count: (s + 4)/s rounds per step vs 4 (CGS2).
+        # steps = one full m=20 cycle (residual checks are per-cycle).
+        from repro.core import gmres_sstep
+        ssol = jax.jit(lambda a, b: gmres_sstep(a, b, s=4, blocks=5,
+                                                tol=1e-5))
+        r = ssol(a, b); r.x.block_until_ready()
+        t0 = time.perf_counter(); r = ssol(a, b); r.x.block_until_ready()
+        out.append({"n": n, "gs": "SINGLEDEV_sstep4",
+                    "t_single_us": t_single * 1e6,
+                    "t_sharded_us": (time.perf_counter() - t0) * 1e6,
+                    "steps": int(r.inner_steps), "collective_ops": 0,
+                    "collective_bytes": 0})
+
+        for gs, pc in (('cgs2', None), ('mgs', None),
+                       ('cgs2', 'block_jacobi')):
+            sol = lambda a, b, gs=gs, pc=pc: gmres_sharded(
+                mesh, 'model', a, b, m=20, tol=1e-5, gs=gs, precond=pc)
+            jsol = jax.jit(sol)
+            lowered = jsol.lower(a, b)
+            colls = parse_collectives(lowered.compile().as_text())
+            nops = sum(c.count for c in colls)
+            cbytes = sum(c.result_bytes * c.count for c in colls)
+            r = jsol(a, b); r.x.block_until_ready()
+            t0 = time.perf_counter(); r = jsol(a, b); r.x.block_until_ready()
+            t = time.perf_counter() - t0
+            out.append({"n": n, "gs": gs + ("+bj" if pc else ""),
+                        "t_single_us": t_single * 1e6,
+                        "t_sharded_us": t * 1e6,
+                        "steps": int(r.inner_steps),
+                        "collective_ops": nops,
+                        "collective_bytes": cbytes})
+    print(json.dumps(out))
+""")
+
+
+def main():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run([sys.executable, "-c", _CODE], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        print(f"distributed_gmres_FAILED,0,{res.stderr[-200:]!r}")
+        return []
+    rows = json.loads(res.stdout.strip().splitlines()[-1])
+    print("name,us_per_call,derived")
+    for r in rows:
+        tag = (f"gmres_{r['gs'].replace('SINGLEDEV_', '')}_n{r['n']}"
+               if r["gs"].startswith("SINGLEDEV_")
+               else f"gmres_sharded8_{r['gs']}_n{r['n']}")
+        print(f"{tag},{r['t_sharded_us']:.0f},"
+              f"single_dev_us={r['t_single_us']:.0f};steps={r['steps']};"
+              f"coll_ops={r['collective_ops']};"
+              f"coll_bytes={r['collective_bytes']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

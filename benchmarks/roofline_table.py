@@ -1,0 +1,87 @@
+"""Render the SSRoofline table from the dry-run JSONL records."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(paths=None):
+    paths = paths or sorted(glob.glob(os.path.join(RESULTS, "dryrun_*.jsonl")))
+    recs = []
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                recs.append(json.loads(line))
+    # newest record per cell wins (re-runs append)
+    dedup = {}
+    for r in recs:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:8.2f}s "
+    if x >= 1e-3:
+        return f"{x * 1e3:8.2f}ms"
+    return f"{x * 1e6:8.1f}us"
+
+
+def table(recs, mesh="16x16"):
+    rows = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"{r['arch']:26s} {r['shape']:12s} SKIPPED "
+                        f"({r['reason'][:60]}...)")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"{r['arch']:26s} {r['shape']:12s} ERROR")
+            continue
+        rf = r["roofline"]
+        dom = rf["bottleneck"]
+        frac = (max(rf["compute_s"], 1e-30)
+                / max(rf["compute_s"], rf["memory_s"], rf["collective_s"]))
+        rows.append(
+            f"{r['arch']:26s} {r['shape']:12s} "
+            f"C={fmt_s(rf['compute_s'])} M={fmt_s(rf['memory_s'])} "
+            f"X={fmt_s(rf['collective_s'])} dom={dom:10s} "
+            f"roofline_frac={frac:5.2f} useful={rf['useful_ratio']:6.3f}")
+    return rows
+
+
+def main():
+    recs = load()
+    if not recs:
+        print("roofline_table,0,no dryrun records — run repro.launch.dryrun")
+        return []
+    print("name,us_per_call,derived")
+    for mesh in ("16x16", "2x16x16"):
+        ok = [r for r in recs if r["mesh"] == mesh and r["status"] == "ok"]
+        if not ok:
+            continue
+        for r in ok:
+            rf = r["roofline"]
+            dom_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+            print(f"roofline_{mesh}_{r['arch']}_{r['shape']},"
+                  f"{dom_s * 1e6:.0f},"
+                  f"dom={rf['bottleneck']};compute_s={rf['compute_s']:.3e};"
+                  f"memory_s={rf['memory_s']:.3e};"
+                  f"collective_s={rf['collective_s']:.3e};"
+                  f"useful={rf['useful_ratio']:.3f}")
+    return recs
+
+
+if __name__ == "__main__":
+    main()
+    print()
+    for mesh in ("16x16", "2x16x16"):
+        print(f"=== {mesh} ===")
+        for row in table(load(), mesh):
+            print(row)

@@ -1,0 +1,59 @@
+"""GMRES inside LM training: the Newton-Krylov optimizer on a reduced
+
+tinyllama, vs AdamW on the same stream — the paper's solver deployed as a
+first-class training feature (DESIGN.md SS3).
+
+    PYTHONPATH=src python examples/newton_krylov_lm.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data import SyntheticLM
+from repro.models import build
+from repro.optim import adamw, newton_krylov
+
+
+def main(steps: int = 8):
+    cfg = configs.get("tinyllama-1.1b").reduced(
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256, loss_chunk=32)
+    model = build(cfg)
+    pipe = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+
+    def loss_fn(p, batch):
+        return model.loss(p, batch)[0]
+
+    # ---- Newton-Krylov (GMRES inner solver) ----
+    params = model.init(jax.random.PRNGKey(0))
+    nk_init, nk_update = newton_krylov(loss_fn, m=8, tol=1e-2, damping=10.0)
+    nk_state = nk_init(params)
+    upd = jax.jit(nk_update)
+    print("Newton-Krylov (GMRES m=8):")
+    for step in range(steps):
+        batch = jax.tree.map(jnp.asarray, pipe.global_batch_at(step))
+        params, nk_state, m = upd(params, nk_state, batch)
+        print(f"  step {step}: loss={float(m['loss']):.4f} "
+              f"gmres_steps={int(m['gmres_steps'])} "
+              f"damping={float(m['damping']):.2f}")
+
+    # ---- AdamW baseline, same stream ----
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def adam_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, _ = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    print("AdamW:")
+    for step in range(steps):
+        batch = jax.tree.map(jnp.asarray, pipe.global_batch_at(step))
+        params, opt_state, loss = adam_step(params, opt_state, batch)
+        print(f"  step {step}: loss={float(loss):.4f}")
+
+
+if __name__ == "__main__":
+    main()

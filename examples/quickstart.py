@@ -1,0 +1,52 @@
+"""Quickstart: the paper's experiment in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Solve a dense nonsymmetric system with restarted GMRES(m) (the paper's
+   algorithm) fully on-device.
+2. Compare the paper's four offload strategies on the same system.
+3. Run the row-sharded distributed solver on whatever devices exist.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gmres, gmres_sharded, operators, strategies
+
+
+def main():
+    n = 1_500
+    key = jax.random.PRNGKey(0)
+    a = operators.random_diagdom(key, n)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+
+    # -- 1. device-resident solve (gpuR-vcl strategy, fully fused) --------
+    res = strategies.device_resident(a, b, m=30, tol=1e-6)
+    relres = float(res.residual / jnp.linalg.norm(b))
+    print(f"[1] GMRES(30): converged={bool(res.converged)} "
+          f"restarts={int(res.restarts)} inner={int(res.inner_steps)} "
+          f"relres={relres:.2e}")
+
+    # -- 2. the paper's strategy comparison (Table 1 analogue) ------------
+    a_np, b_np = np.asarray(a), np.asarray(b)
+    print("[2] strategy timings (N=1500):")
+    for name, fn in strategies.STRATEGIES.items():
+        t0 = time.perf_counter()
+        out = fn(a_np, b_np, m=30, tol=1e-5)
+        jax.block_until_ready(getattr(out, "x", out[0]))
+        print(f"    {name:18s} {1e3 * (time.perf_counter() - t0):8.1f} ms")
+
+    # -- 3. distributed solve over the host mesh --------------------------
+    ndev = len(jax.devices())
+    mesh = jax.make_mesh((ndev,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    res_d = gmres_sharded(mesh, "model", a[:1024, :1024], b[:1024],
+                          m=30, tol=1e-6)
+    print(f"[3] sharded over {ndev} device(s): converged="
+          f"{bool(res_d.converged)} residual={float(res_d.residual):.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Batched serving example: device-resident KV cache decode loop.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    return serve.main([
+        "--arch", "mixtral-8x22b", "--reduced",
+        "--batch", "4", "--prompt-len", "16", "--gen", "32",
+    ] + sys.argv[1:])
+
+
+if __name__ == "__main__":
+    main()

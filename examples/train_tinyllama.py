@@ -1,0 +1,21 @@
+"""End-to-end training driver: reduced tinyllama on synthetic data with the
+fault-tolerant runner, checkpointing, and real optimizer steps.
+
+    PYTHONPATH=src python examples/train_tinyllama.py
+"""
+import sys
+
+from repro.launch import train
+
+
+def main():
+    return train.main([
+        "--arch", "tinyllama-1.1b", "--reduced",
+        "--steps", "200", "--batch", "8", "--seq", "128",
+        "--lr", "1e-3", "--ckpt-dir", "/tmp/repro_example_ckpt",
+        "--ckpt-every", "50",
+    ] + sys.argv[1:])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: GMRES-on-JAX solver framework + multi-pod LM training/serving.
+
+Reproduction + TPU-native extension of "The performances of R GPU
+implementations of the GMRES method" (Oancea & Pospisil, 2018).
+"""
+
+__version__ = "1.0.0"

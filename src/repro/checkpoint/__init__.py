@@ -1,0 +1,6 @@
+from repro.checkpoint import checkpoint
+from repro.checkpoint.checkpoint import (save, restore, latest_step,
+                                         AsyncCheckpointer, cleanup)
+
+__all__ = ["checkpoint", "save", "restore", "latest_step",
+           "AsyncCheckpointer", "cleanup"]

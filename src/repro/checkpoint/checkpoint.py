@@ -1,0 +1,147 @@
+"""Checkpointing: atomic, checksummed, async-capable, restart-ready.
+
+Layout per step:
+    <dir>/step_000123/
+        shard_00000.npz     flattened leaves (np arrays)
+        manifest.json       treedef repr, leaf paths, shapes, dtypes, crc32s
+    <dir>/LATEST            text file with the newest complete step dir
+
+Writes go to ``step_x.tmp`` then ``os.rename`` — readers never observe a
+partial checkpoint (the fault-tolerance contract runtime/ relies on).
+``save_async`` runs the serialization off the training thread; ``wait()``
+joins before the next save (off-critical-path checkpointing).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, _ in flat:
+        out.append("/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path))
+    return out
+
+
+def save(directory: str, step: int, tree: Any, *, extra: Optional[dict] = None):
+    """Blocking checkpoint write; returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves, _ = _flatten(tree)
+    arrays = [np.asarray(l) for l in leaves]
+    crcs = [int(zlib.crc32(a.tobytes())) for a in arrays]
+    np.savez(os.path.join(tmp, "shard_00000.npz"),
+             **{f"leaf_{i}": a for i, a in enumerate(arrays)})
+    manifest = {
+        "step": step,
+        "n_leaves": len(arrays),
+        "paths": _paths(tree),
+        "shapes": [list(a.shape) for a in arrays],
+        "dtypes": [str(a.dtype) for a in arrays],
+        "crc32": crcs,
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):     # idempotent re-save
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(os.path.join(directory, "LATEST.tmp"), "w") as f:
+        f.write(os.path.basename(final))
+    os.rename(os.path.join(directory, "LATEST.tmp"),
+              os.path.join(directory, "LATEST"))
+    return final
+
+
+class AsyncCheckpointer:
+    """Serialize off the training thread; at most one write in flight."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        self._thread: Optional[threading.Thread] = None
+        self._err: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree: Any, *, extra=None):
+        self.wait()
+        # device -> host copy happens HERE (cheap, before threading) so the
+        # training loop can donate/overwrite device buffers immediately.
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def _run():
+            try:
+                save(self.directory, step, host_tree, extra=extra)
+            except BaseException as e:   # surfaced on next wait()
+                self._err = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+
+def latest_step(directory: str) -> Optional[int]:
+    latest = os.path.join(directory, "LATEST")
+    if not os.path.exists(latest):
+        return None
+    with open(latest) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(directory, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(directory: str, tree_like: Any, *, step: Optional[int] = None):
+    """Load into the structure of ``tree_like`` (verifies paths + crc32)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shard_00000.npz"))
+    arrays = [data[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
+    for a, crc in zip(arrays, manifest["crc32"]):
+        if int(zlib.crc32(a.tobytes())) != crc:
+            raise IOError(f"checkpoint corruption at step {step}")
+    ref_paths = _paths(tree_like)
+    if ref_paths != manifest["paths"]:
+        raise ValueError("checkpoint tree structure mismatch: "
+                         f"{len(ref_paths)} leaves vs {len(manifest['paths'])}")
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, arrays), manifest
+
+
+def cleanup(directory: str, keep: int = 3):
+    """Retain the newest ``keep`` complete checkpoints."""
+    import shutil
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)

@@ -1,0 +1,45 @@
+"""Assigned architecture registry: one module per arch, exact public configs.
+
+``get(name)`` -> ModelConfig; ``REGISTRY`` lists all ten assigned archs.
+Reduced smoke variants come from ``get(name).reduced()``.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "whisper_small",
+    "granite_3_8b",
+    "qwen2_7b",
+    "tinyllama_1_1b",
+    "granite_3_2b",
+    "zamba2_7b",
+    "xlstm_125m",
+    "llama4_maverick_400b_a17b",
+    "mixtral_8x22b",
+    "pixtral_12b",
+]
+
+# CLI aliases (assignment spelling -> module name)
+ALIASES = {
+    "whisper-small": "whisper_small",
+    "granite-3-8b": "granite_3_8b",
+    "qwen2-7b": "qwen2_7b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "granite-3-2b": "granite_3_2b",
+    "zamba2-7b": "zamba2_7b",
+    "xlstm-125m": "xlstm_125m",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "pixtral-12b": "pixtral_12b",
+}
+
+
+def get(name: str):
+    mod_name = ALIASES.get(name, name)
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get(a) for a in ARCH_IDS}

@@ -1,0 +1,26 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048, MoE 128 experts top-1 on every SECOND layer
+(interleaved, llama4-style) + 1 shared expert — the interleave + shared
+expert is what makes 48L/5120/8192/128e consistent with ~400B total / ~17B
+active.  [hf:meta-llama/Llama-4-Maverick-17B-128E]
+
+bf16 optimizer moments: 400B fp32 moments would not fit 256 x 16 GB HBM
+(napkin math in EXPERIMENTS.md SSDry-run)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5_120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8_192,
+    vocab_size=202_048,
+    num_experts=128,
+    top_k=1,
+    moe_every=2,
+    num_shared_experts=1,
+    rope_theta=500_000.0,
+    moment_dtype="bfloat16",
+)

@@ -1,0 +1,19 @@
+"""pixtral-12b [vlm]: 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072 — mistral-nemo-style decoder; pixtral-ViT frontend STUBBED
+(input_specs provides 1024 precomputed patch embeddings at width 1024)
+[hf:mistralai/Pixtral-12B-2409]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    num_layers=40,
+    d_model=5_120,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=131_072,
+    head_dim=128,
+    num_patches=1_024,
+    rope_theta=1_000_000.0,
+)

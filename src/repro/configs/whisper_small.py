@@ -1,0 +1,23 @@
+"""whisper-small [audio]: enc-dec, conv frontend stubbed.
+
+12L d_model=768 12H (kv=12) d_ff=3072 vocab=51865  [arXiv:2212.04356]
+Encoder: 12 layers over 1500 precomputed frame embeddings (stub = output of
+the two conv1d layers).  Decoder shapes follow the assignment's seq_len.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51_865,
+    encoder_layers=12,
+    encoder_seq=1_500,
+    positions="sinusoidal",
+    tie_embeddings=True,
+    norm_eps=1e-5,
+)

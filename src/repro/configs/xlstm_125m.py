@@ -1,0 +1,16 @@
+"""xlstm-125m [ssm]: 12L d_model=768 4H d_ff=0 vocab=50304 — mLSTM blocks
+with an sLSTM every 4th block (d_ff=0: no MLPs)  [arXiv:2405.04517]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50_304,
+    slstm_every=4,
+    ssm_chunk=256,
+)

@@ -1,0 +1,20 @@
+"""zamba2-7b [hybrid]: 81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000, ssm_state=64 — Mamba2 backbone + SHARED attention block every
+6 layers (13 sites, weight-tied)  [arXiv:2411.15242]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3_584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14_336,
+    vocab_size=32_000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    attn_every=6,
+    ssm_chunk=256,
+)

@@ -1,0 +1,19 @@
+"""repro.core — the paper's contribution: restarted GMRES(m) on JAX.
+
+Public API:
+  gmres, gmres_batched       single-device (or shard-local) solver
+  gmres_sharded              shard_map row-sharded distributed solver
+  strategies.*               the paper's four offload strategies
+  operators.*                dense / matrix-free / jvp operators
+  preconditioners.*          Jacobi / block-Jacobi / polynomial
+"""
+from repro.core.gmres import gmres, gmres_batched, gmres_jit, GmresResult
+from repro.core.sstep import gmres_sstep
+from repro.core.distributed import gmres_sharded, make_sharded_solver
+from repro.core import arnoldi, givens, operators, preconditioners, strategies
+
+__all__ = [
+    "gmres", "gmres_batched", "gmres_jit", "GmresResult", "gmres_sstep",
+    "gmres_sharded", "make_sharded_solver",
+    "arnoldi", "givens", "operators", "preconditioners", "strategies",
+]

@@ -1,0 +1,122 @@
+"""Incremental Givens QR for the GMRES Hessenberg least-squares problem.
+
+The paper's step 8 solves ``min_y || beta e_1 - H~_m y ||`` — maintained here
+as an incremental QR factorization updated one Hessenberg column at a time
+(O(m) per step, O(m N) total as in Kelley 1995), instead of refactorizing.
+
+All functions are shape-static and mask-driven so they live inside
+``jax.lax.fori_loop`` bodies under ``jit``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GivensState(NamedTuple):
+    """Rotations + rotated RHS for the first ``j`` Hessenberg columns.
+
+    r:  (m, m)   upper-triangular factor (rows/cols beyond j untouched)
+    cs: (m,)     rotation cosines (identity-initialized: cs=1)
+    sn: (m,)     rotation sines   (identity-initialized: sn=0)
+    g:  (m + 1,) rotated RHS; ``|g[j]|`` is the current LS residual norm
+    """
+
+    r: jax.Array
+    cs: jax.Array
+    sn: jax.Array
+    g: jax.Array
+
+
+def init(m: int, beta, dtype=jnp.float32) -> GivensState:
+    g = jnp.zeros((m + 1,), dtype=dtype).at[0].set(beta.astype(dtype))
+    # R starts as the identity: columns never written (early-exited steps)
+    # stay e_j, keeping the triangular solve nonsingular with y_j = 0.
+    return GivensState(
+        r=jnp.eye(m, dtype=dtype),
+        cs=jnp.ones((m,), dtype=dtype),
+        sn=jnp.zeros((m,), dtype=dtype),
+        g=g,
+    )
+
+
+def _rotation(a, b, eps):
+    """Stable Givens rotation zeroing ``b`` against ``a``."""
+    denom = jnp.sqrt(a * a + b * b)
+    safe = denom > eps
+    c = jnp.where(safe, a / jnp.where(safe, denom, 1.0), 1.0)
+    s = jnp.where(safe, b / jnp.where(safe, denom, 1.0), 0.0)
+    return c, s, jnp.where(safe, denom, a)
+
+
+def update(state: GivensState, h: jax.Array, j, *, active) -> GivensState:
+    """Fold Hessenberg column ``h`` (length m+1, entries > j+1 zero) in as column j.
+
+    ``active`` masks the update out entirely (converged / past-breakdown
+    steps write the identity column e_j so the final triangular solve stays
+    nonsingular and yields y_j = 0).
+    """
+    m = state.cs.shape[0]
+    dtype = state.g.dtype
+    eps = jnp.asarray(jnp.finfo(dtype).tiny ** 0.5, dtype)
+
+    # Apply previously computed rotations 0..j-1 to the new column.  Rotations
+    # at indices >= j are identity (cs=1, sn=0) so a full fixed-length scan is
+    # equivalent to the dynamic-length loop and keeps shapes static.
+    def apply_rot(i, col):
+        c, s = state.cs[i], state.sn[i]
+        hi, hi1 = col[i], col[i + 1]
+        col = col.at[i].set(c * hi + s * hi1)
+        col = col.at[i + 1].set(-s * hi + c * hi1)
+        return col
+
+    col = jax.lax.fori_loop(0, m, apply_rot, h.astype(dtype))
+
+    # New rotation zeroing the subdiagonal entry col[j+1] against col[j].
+    a = col[j]
+    b = col[j + 1]
+    c, s, rjj = _rotation(a, b, eps)
+
+    # Rotate the RHS: (g_j, g_{j+1}).
+    gj = state.g[j]
+    new_gj = c * gj
+    new_gj1 = -s * gj
+
+    # Assemble column j of R: rotated col with the (j, j) entry replaced by rjj
+    # and the subdiagonal annihilated.  Inactive steps write e_j instead.
+    iota = jnp.arange(m + 1)
+    col = col.at[j].set(rjj).at[j + 1].set(0.0)
+    unit = (iota == j).astype(dtype)
+    col = jnp.where(active, col, unit)
+
+    r = state.r.at[:, j].set(col[:m])
+    cs = state.cs.at[j].set(jnp.where(active, c, 1.0))
+    sn = state.sn.at[j].set(jnp.where(active, s, 0.0))
+    # Inactive steps zero g[j]: with the identity column e_j this forces
+    # y_j = 0 in back-substitution, so padded steps never touch the solution.
+    g = state.g.at[j].set(jnp.where(active, new_gj, 0.0))
+    g = g.at[j + 1].set(jnp.where(active, new_gj1, g[j + 1]))
+    return GivensState(r=r, cs=cs, sn=sn, g=g)
+
+
+def residual_norm(state: GivensState, j) -> jax.Array:
+    """|g[j+1]| — the LS residual after folding column j (Saad Prop. 6.9)."""
+    return jnp.abs(state.g[j + 1])
+
+
+def solve(state: GivensState, steps=None) -> jax.Array:
+    """Back-substitute ``R y = g[:m]``.
+
+    ``steps`` = number of Arnoldi steps actually taken; g entries at or
+    beyond it are zeroed so identity-filled (never-run) columns yield
+    y_j = 0 and ``x = x0 + V^T y`` is correct for any early-stop point.
+    """
+    m = state.cs.shape[0]
+    if m == 0:
+        return state.g[:0]
+    g = state.g[:m]
+    if steps is not None:
+        g = jnp.where(jnp.arange(m) < steps, g, 0.0)
+    return jax.scipy.linalg.solve_triangular(state.r, g, lower=False)

@@ -1,0 +1,168 @@
+"""Restarted GMRES(m) — jit-compilable, batched, early-stop-masked.
+
+Faithful to the paper's algorithm (Kelley 1995 listing, section 3):
+
+  1.  r0 = b - A x0, v1 = r0/||r0||
+  2.  m Arnoldi steps building V_m, H~_m          (arnoldi.py)
+  8.  y_m = argmin || beta e1 - H~_m y ||         (givens.py, incremental QR)
+  9.  restart with x_m = x0 + V_m y_m until ||r|| < eps
+
+Shape-static by construction: the inner loop always runs ``m`` steps with
+converged / broken-down steps masked to no-ops (identity Givens columns,
+zeroed g entries), so the whole restarted solve is ONE ``jax.jit`` program —
+the ``gpuR``/vcl "everything device-resident" strategy from the paper, taken
+to its logical conclusion: not a single scalar leaves the device between
+restarts.
+
+The same inner cycle, handed an ``axis_name``, becomes the shard_map
+distributed solver (core/distributed.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import arnoldi, givens
+from repro.core.operators import as_operator
+
+
+class GmresResult(NamedTuple):
+    x: jax.Array
+    residual: jax.Array      # final true residual norm ||b - A x||
+    restarts: jax.Array      # number of restart cycles executed
+    converged: jax.Array     # bool
+    inner_steps: jax.Array   # total Arnoldi steps actually active
+
+
+class _CycleState(NamedTuple):
+    v: jax.Array             # (m+1, n_local) Krylov basis, row-major
+    giv: givens.GivensState
+    done: jax.Array          # latched convergence/breakdown flag
+    steps: jax.Array         # active step count (== next j)
+
+
+def _gmres_cycle(matvec, x0, r0, beta, m, tol_abs, gs_step, axis_name,
+                 precond):
+    """One restart cycle: up to m Arnoldi steps + triangular solve.
+
+    The inner loop is a ``while_loop`` with TRUE early exit, not a masked
+    fixed-trip fori_loop: on fast-converging systems a fixed m=30 cycle
+    would waste (m - k) full mat-vec + orthogonalization steps as masked
+    no-ops (SSPerf: measured 6x overhead at k~5).  Early exit keeps the
+    whole solve one XLA program (vmap of while_loop is supported) while
+    doing only the work the mathematics needs.
+    """
+    n = x0.shape[0]
+    dtype = x0.dtype
+    eps = jnp.asarray(jnp.finfo(dtype).tiny ** 0.5, dtype)
+
+    v0 = r0 / jnp.maximum(beta, eps)
+    v = jnp.zeros((m + 1, n), dtype).at[0].set(v0)
+    state = _CycleState(
+        v=v,
+        giv=givens.init(m, beta, dtype),
+        done=beta <= tol_abs,
+        steps=jnp.zeros((), jnp.int32),
+    )
+
+    def cond(s: _CycleState):
+        return jnp.logical_not(s.done) & (s.steps < m)
+
+    def body(s: _CycleState):
+        j = s.steps
+        # --- Arnoldi: w = A M^{-1} v_j, orthogonalize against V[:j+1] ---
+        w = matvec(precond(s.v[j]))
+        st = gs_step(s.v, w, j, axis_name)
+        v = s.v.at[j + 1].set(st.v_next)
+        # --- Givens: fold column j, track LS residual ---
+        giv = givens.update(s.giv, st.h, j, active=jnp.asarray(True))
+        resid = givens.residual_norm(giv, j)
+        happy = st.h_last <= eps * 100.0
+        done = (resid <= tol_abs) | happy
+        return _CycleState(v=v, giv=giv, done=done, steps=j + 1)
+
+    state = lax.while_loop(cond, body, state)
+    y = givens.solve(state.giv, state.steps)          # zeros past early stop
+    dx = y @ state.v[:m]                              # V^T y with row basis
+    x = x0 + precond(dx)
+    return x, state.steps
+
+
+def gmres(
+    a,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    m: int = 30,
+    tol: float = 1e-5,
+    max_restarts: int = 50,
+    gs: str = "cgs2",
+    precond: Optional[Callable] = None,
+    axis_name: Optional[str] = None,
+) -> GmresResult:
+    """Right-preconditioned restarted GMRES(m).
+
+    Args:
+      a: dense (n, n) array, Operator, or matvec callable.  With
+        ``axis_name`` set, ``a`` maps a LOCAL shard to a LOCAL shard and all
+        reductions psum over that mesh axis.
+      b: right-hand side, shape (n,) (local shard under ``axis_name``).
+      x0: initial guess (zeros by default).
+      m: restart length (Krylov subspace dimension per cycle).
+      tol: relative residual target, ||b - Ax|| <= tol * ||b||.
+      max_restarts: restart-cycle budget.
+      gs: "cgs" (paper listing) | "mgs" (serial standard) | "cgs2" (TPU path).
+      precond: right preconditioner M^{-1} as a callable (identity default).
+      axis_name: mesh axis for the row-sharded distributed solve.
+
+    Returns GmresResult; residual is the TRUE residual recomputed from x.
+    """
+    matvec = as_operator(a)
+    gs_step = arnoldi.step(gs)
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+    if precond is None:
+        precond = lambda v: v
+
+    bnorm = arnoldi.norm(b, axis_name)
+    tol_abs = jnp.maximum(tol * bnorm, jnp.asarray(0.0, b.dtype))
+
+    def resid_of(x):
+        r = b - matvec(x)
+        return r, arnoldi.norm(r, axis_name)
+
+    r0, beta0 = resid_of(x0)
+
+    def cond(carry):
+        _, _, beta, k, _ = carry
+        return (beta > tol_abs) & (k < max_restarts)
+
+    def body(carry):
+        x, r, beta, k, steps = carry
+        x, inner = _gmres_cycle(
+            matvec, x, r, beta, m, tol_abs, gs_step, axis_name, precond
+        )
+        r, beta = resid_of(x)
+        return x, r, beta, k + 1, steps + inner
+
+    x, r, beta, k, steps = lax.while_loop(
+        cond, body, (x0, r0, beta0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    )
+    return GmresResult(
+        x=x, residual=beta, restarts=k, converged=beta <= tol_abs, inner_steps=steps
+    )
+
+
+def gmres_batched(a, b: jax.Array, **kw) -> GmresResult:
+    """vmap over a batch of right-hand sides, shape (batch, n), shared A."""
+    return jax.vmap(lambda rhs: gmres(a, rhs, **kw))(b)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tol", "max_restarts", "gs"))
+def gmres_jit(a, b, *, m=30, tol=1e-5, max_restarts=50, gs="cgs2"):
+    """Convenience fully-jit'd dense solve (the device-resident strategy)."""
+    return gmres(a, b, m=m, tol=tol, max_restarts=max_restarts, gs=gs)

@@ -1,0 +1,140 @@
+"""Linear operator abstractions for the GMRES solver suite.
+
+The paper solves dense ``Ax = b``; production Krylov use is matrix-free
+(Newton--Krylov, preconditioned operators).  Operators are registered as
+pytrees so they can be passed through ``jax.jit`` / ``vmap`` / ``shard_map``
+boundaries with their array payloads traced and their callables static.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DenseOperator:
+    """Explicit dense matrix operator (the paper's setting)."""
+
+    a: jax.Array  # (n, n)
+
+    def __call__(self, v: jax.Array) -> jax.Array:
+        # v: (n,) or (n, k)
+        return self.a @ v
+
+    @property
+    def shape(self):
+        return self.a.shape
+
+    @property
+    def dtype(self):
+        return self.a.dtype
+
+    def tree_flatten(self):
+        return (self.a,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FunctionOperator:
+    """Matrix-free operator ``v -> A @ v``.
+
+    ``captures`` holds any array payload the function closes over so that the
+    operator remains a faithful pytree (jit re-tracing sees value changes).
+    """
+
+    fn: Callable[..., jax.Array]
+    n: int
+    captures: Any = ()
+
+    def __call__(self, v: jax.Array) -> jax.Array:
+        return self.fn(v, *self.captures) if self.captures else self.fn(v)
+
+    @property
+    def shape(self):
+        return (self.n, self.n)
+
+    def tree_flatten(self):
+        return (self.captures,), (self.fn, self.n)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fn, n = aux
+        (captures,) = children
+        return cls(fn, n, captures)
+
+
+def as_operator(a) -> Callable[[jax.Array], jax.Array]:
+    """Normalize dense arrays / callables to a matvec callable."""
+    if isinstance(a, (DenseOperator, FunctionOperator)):
+        return a
+    if callable(a):
+        return a
+    return DenseOperator(jnp.asarray(a))
+
+
+def jvp_operator(f: Callable, primal, *, damping: float = 0.0) -> FunctionOperator:
+    """Gauss-Newton / Hessian-free operator: ``v -> J^T J v + damping * v``.
+
+    ``f`` maps a flat parameter vector to a flat residual vector.  The
+    operator is the classic jvp/vjp sandwich used by Newton--Krylov
+    optimizers; it is symmetric PSD so GMRES converges like MINRES on it.
+    """
+    n = primal.shape[0]
+
+    def matvec(v, p):
+        _, jv = jax.jvp(f, (p,), (v,))
+        (jtjv,) = jax.vjp(f, p)[1](jv)
+        return jtjv + damping * v
+
+    return FunctionOperator(matvec, n, captures=(primal,))
+
+
+def hvp_operator(loss: Callable, primal, *, damping: float = 0.0) -> FunctionOperator:
+    """Hessian-vector-product operator ``v -> H v + damping v`` (matrix-free)."""
+    n = primal.shape[0]
+
+    def matvec(v, p):
+        return jax.jvp(jax.grad(loss), (p,), (v,))[1] + damping * v
+
+    return FunctionOperator(matvec, n, captures=(primal,))
+
+
+def poisson_1d(n: int, dtype=jnp.float32) -> jax.Array:
+    """Dense 1-D Poisson (tridiagonal) test matrix — SPD, well-conditioned rows."""
+    a = (
+        2.0 * jnp.eye(n, dtype=dtype)
+        - jnp.eye(n, k=1, dtype=dtype)
+        - jnp.eye(n, k=-1, dtype=dtype)
+    )
+    return a
+
+
+def convection_diffusion(n: int, beta: float = 0.5, dtype=jnp.float32) -> jax.Array:
+    """Nonsymmetric convection-diffusion matrix — the canonical GMRES target."""
+    a = (
+        2.0 * jnp.eye(n, dtype=dtype)
+        + (-1.0 + beta) * jnp.eye(n, k=1, dtype=dtype)
+        + (-1.0 - beta) * jnp.eye(n, k=-1, dtype=dtype)
+    )
+    return a
+
+
+def random_diagdom(key, n: int, dtype=jnp.float32, *, dominance: float = 2.0) -> jax.Array:
+    """Random nonsymmetric diagonally-dominant matrix (paper's rnorm-style setup,
+
+    made well-conditioned so fp32 Krylov converges; the paper used random dense
+    matrices from ``rnorm`` which are near-singular without dominance).
+    """
+    a = jax.random.normal(key, (n, n), dtype=dtype) / jnp.sqrt(n).astype(dtype)
+    rowsum = jnp.abs(a).sum(axis=1)
+    return a + jnp.diag(dominance * rowsum.astype(dtype))

@@ -1,0 +1,104 @@
+"""Right preconditioners for GMRES — beyond-paper additions.
+
+The paper runs unpreconditioned GMRES (pracma's default).  On a pod, a good
+preconditioner is the cheapest way to cut collective rounds: fewer Arnoldi
+steps = fewer all-gathers.  All preconditioners here are jit-compatible
+callables ``v -> M^{-1} v`` built from the dense A (or its local shard).
+
+Polynomial preconditioning is the TPU-sweet-spot choice: it replaces
+latency-bound inner products with MXU-bound extra mat-vecs.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def identity() -> Callable:
+    return lambda v: v
+
+
+def jacobi(a: jax.Array) -> Callable:
+    """Diagonal scaling M = diag(A)."""
+    inv_d = 1.0 / jnp.diagonal(a)
+
+    def apply(v):
+        return inv_d * v
+
+    return apply
+
+
+def block_jacobi(a: jax.Array, block: int) -> Callable:
+    """Block-diagonal M: invert ``block``-sized diagonal blocks.
+
+    n must be divisible by ``block``; blocks are factorized once (host-side
+    cost amortized across the solve) and applied as a batched triangular
+    solve pair — a batched level-3 op, MXU-friendly.
+    """
+    n = a.shape[0]
+    assert n % block == 0, (n, block)
+    nb = n // block
+    blocks = jnp.stack([a[i * block:(i + 1) * block, i * block:(i + 1) * block]
+                        for i in range(nb)])
+    lu, piv = jax.vmap(jax.scipy.linalg.lu_factor)(blocks)
+
+    def apply(v):
+        vb = v.reshape(nb, block)
+        out = jax.vmap(jax.scipy.linalg.lu_solve)((lu, piv), vb)
+        return out.reshape(n)
+
+    return apply
+
+
+def neumann(a: jax.Array, *, order: int = 2, omega: float | None = None) -> Callable:
+    """Truncated Neumann series for M^{-1} ~= sum_k (I - w D^{-1} A)^k w D^{-1}.
+
+    Pure mat-vec chain — converts preconditioning work into level-2/3 ops
+    with zero extra collectives beyond the mat-vecs themselves.
+    """
+    inv_d = 1.0 / jnp.diagonal(a)
+    if omega is None:
+        omega = 1.0
+
+    def apply(v):
+        z = omega * inv_d * v
+        acc = z
+        for _ in range(order):
+            z = z - omega * inv_d * (a @ z)
+            acc = acc + z
+        return acc
+
+    return apply
+
+
+def chebyshev(a: jax.Array, *, order: int = 4, lam_min: float, lam_max: float) -> Callable:
+    """Chebyshev polynomial preconditioner for spectra in [lam_min, lam_max].
+
+    Classic three-term recurrence; like Neumann, trades inner products for
+    mat-vecs, but with the optimal polynomial for a known spectral interval.
+    """
+    theta = 0.5 * (lam_max + lam_min)
+    delta = 0.5 * (lam_max - lam_min)
+    sigma1 = theta / delta
+
+    def apply(v):
+        rho_old = 1.0 / sigma1
+        z = v / theta
+        z_old = jnp.zeros_like(v)
+        for _ in range(order - 1):
+            rho = 1.0 / (2.0 * sigma1 - rho_old)
+            z_new = rho * (2.0 / delta * (v - a @ z) + rho_old * (z - z_old)) + z
+            z_old, z, rho_old = z, z_new, rho
+        return z
+
+    return apply
+
+
+PRECONDITIONERS = {
+    "none": lambda a, **kw: identity(),
+    "jacobi": lambda a, **kw: jacobi(a),
+    "block_jacobi": lambda a, block=64, **kw: block_jacobi(a, block),
+    "neumann": lambda a, order=2, **kw: neumann(a, order=order),
+}

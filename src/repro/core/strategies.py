@@ -1,0 +1,170 @@
+"""The paper's package comparison, recast as accelerator-offload strategies.
+
+The paper benchmarks four implementations of the SAME restarted GMRES(m):
+
+  =================  ==========================================================
+  paper              this module
+  =================  ==========================================================
+  pracma::gmres      ``serial_numpy``    — pure host NumPy, single-threaded
+                       control flow, MGS (what pracma does).
+  gmatrix            ``offload_matvec``  — ONLY the level-2 mat-vec runs on the
+                       device (A resident there, as gmatrix's ``gmatrix()``
+                       objects are); every call ships v across the boundary
+                       and the result back.  Level-1 ops stay on the host,
+                       below the device-profitability threshold (Morris 2016:
+                       N > 5e5).
+  gputools           ``transfer_per_call`` — the mat-vec runs on the device
+                       but operands live on the host (gputools semantics):
+                       every call pays the FULL H2D transfer of A.  This is
+                       why Table 1 shows speedup < 1 at small N.
+  gpuR (vcl)         ``device_resident`` — everything device-side and
+                       asynchronous.  Our realization is strictly stronger
+                       than gpuR's: the WHOLE restarted solve is one XLA
+                       program (core.gmres), so there is no per-op dispatch
+                       at all, not merely no per-op transfer.
+  =================  ==========================================================
+
+The host solver below is deliberately plain NumPy with Python loops — it is
+the measurement baseline, not a strawman: it mirrors pracma::gmres
+(MGS + dense Givens LS) operation for operation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gmres import gmres, GmresResult
+
+
+# --------------------------------------------------------------------------
+# Host (NumPy) restarted GMRES, parameterized by the mat-vec callable.
+# --------------------------------------------------------------------------
+def _host_gmres(matvec: Callable[[np.ndarray], np.ndarray], b, x0, m, tol,
+                max_restarts):
+    n = b.shape[0]
+    dtype = b.dtype
+    x = np.array(x0, dtype=dtype, copy=True)
+    bnorm = np.linalg.norm(b)
+    tol_abs = tol * bnorm if bnorm > 0 else tol
+    restarts = 0
+    inner = 0
+
+    for restarts in range(1, max_restarts + 1):
+        r = b - matvec(x)
+        beta = np.linalg.norm(r)
+        if beta <= tol_abs:
+            restarts -= 1
+            break
+        v = np.zeros((m + 1, n), dtype=dtype)
+        v[0] = r / beta
+        h = np.zeros((m + 1, m), dtype=dtype)
+        cs = np.ones(m, dtype=dtype)
+        sn = np.zeros(m, dtype=dtype)
+        g = np.zeros(m + 1, dtype=dtype)
+        g[0] = beta
+        k = m
+        for j in range(m):
+            inner += 1
+            w = matvec(v[j])
+            for i in range(j + 1):            # MGS — pracma's scheme
+                h[i, j] = np.dot(v[i], w)
+                w = w - h[i, j] * v[i]
+            h[j + 1, j] = np.linalg.norm(w)
+            if h[j + 1, j] > 1e-30:
+                v[j + 1] = w / h[j + 1, j]
+            for i in range(j):                 # apply old rotations
+                t = cs[i] * h[i, j] + sn[i] * h[i + 1, j]
+                h[i + 1, j] = -sn[i] * h[i, j] + cs[i] * h[i + 1, j]
+                h[i, j] = t
+            denom = np.hypot(h[j, j], h[j + 1, j])
+            if denom > 1e-30:
+                cs[j], sn[j] = h[j, j] / denom, h[j + 1, j] / denom
+            else:
+                cs[j], sn[j] = 1.0, 0.0
+            h[j, j], h[j + 1, j] = denom, 0.0
+            g[j + 1] = -sn[j] * g[j]
+            g[j] = cs[j] * g[j]
+            if abs(g[j + 1]) <= tol_abs:
+                k = j + 1
+                break
+        y = np.zeros(k, dtype=dtype)
+        for i in range(k - 1, -1, -1):         # back-substitution
+            y[i] = (g[i] - h[i, i + 1:k] @ y[i + 1:k]) / h[i, i]
+        x = x + y @ v[:k]
+    r = b - matvec(x)
+    beta = float(np.linalg.norm(r))
+    return x, beta, restarts, beta <= tol_abs, inner
+
+
+def serial_numpy(a: np.ndarray, b: np.ndarray, x0=None, *, m=30, tol=1e-5,
+                 max_restarts=50):
+    """pracma::gmres analogue — everything on the host."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    x0 = np.zeros_like(b) if x0 is None else np.asarray(x0)
+    return _host_gmres(lambda v: a @ v, b, x0, m, tol, max_restarts)
+
+
+@jax.jit
+def _device_gemv(a_dev, v):
+    return a_dev @ v
+
+
+def offload_matvec(a: np.ndarray, b: np.ndarray, x0=None, *, m=30, tol=1e-5,
+                   max_restarts=50):
+    """gmatrix analogue: A device-resident, per-call v H2D + result D2H."""
+    a_dev = jax.device_put(jnp.asarray(a))
+
+    def matvec(v):
+        out = _device_gemv(a_dev, jax.device_put(jnp.asarray(v)))
+        return np.asarray(out)            # D2H sync — the offload boundary
+
+    b = np.asarray(b)
+    x0 = np.zeros_like(b) if x0 is None else np.asarray(x0)
+    return _host_gmres(matvec, b, x0, m, tol, max_restarts)
+
+
+def transfer_per_call(a: np.ndarray, b: np.ndarray, x0=None, *, m=30, tol=1e-5,
+                      max_restarts=50):
+    """gputools analogue: operands host-resident; EVERY call re-ships A."""
+    a_host = np.asarray(a)
+
+    def matvec(v):
+        a_dev = jax.device_put(jnp.asarray(a_host))   # the H2D wall
+        out = _device_gemv(a_dev, jax.device_put(jnp.asarray(v)))
+        return np.asarray(out)
+
+    b = np.asarray(b)
+    x0 = np.zeros_like(b) if x0 is None else np.asarray(x0)
+    return _host_gmres(matvec, b, x0, m, tol, max_restarts)
+
+
+@functools.lru_cache(maxsize=32)
+def _resident_solver(m, tol, max_restarts, gs):
+    return jax.jit(functools.partial(gmres, m=m, tol=tol,
+                                     max_restarts=max_restarts, gs=gs))
+
+
+def device_resident(a, b, x0=None, *, m=30, tol=1e-5, max_restarts=50,
+                    gs="cgs2") -> GmresResult:
+    """gpuR/vcl analogue: one fused XLA program, nothing leaves the device.
+
+    The solver is jit-cached across calls (steady-state timing, matching
+    the paper's warm-GPU measurements).
+    """
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    return _resident_solver(m, tol, max_restarts, gs)(a, b, x0)
+
+
+STRATEGIES = {
+    "serial_numpy": serial_numpy,
+    "offload_matvec": offload_matvec,
+    "transfer_per_call": transfer_per_call,
+    "device_resident": device_resident,
+}

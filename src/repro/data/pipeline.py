@@ -1,0 +1,114 @@
+"""Deterministic, host-sharded synthetic LM data pipeline.
+
+Every batch is a pure function of (seed, step, host) — the property that
+makes elastic restarts exact: after a failure the surviving hosts reshard
+the SAME token stream at the SAME step with a different host count and no
+sample is lost or duplicated (tests/test_data.py proves it).
+
+A real deployment swaps `_tokens_for_slots` for a tokenized corpus reader
+with identical slot semantics; everything above (sharding math, packing,
+prefetch) is production-shaped.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+class SyntheticLM:
+    """Zipfian token stream with EOS-delimited documents + packing."""
+
+    def __init__(self, *, vocab_size: int, seq_len: int, global_batch: int,
+                 num_hosts: int = 1, host_id: int = 0, seed: int = 0,
+                 eos_id: int = 1, zipf_a: float = 1.2):
+        assert global_batch % num_hosts == 0, (global_batch, num_hosts)
+        self.vocab = vocab_size
+        self.seq = seq_len
+        self.global_batch = global_batch
+        self.local_batch = global_batch // num_hosts
+        self.num_hosts = num_hosts
+        self.host_id = host_id
+        self.seed = seed
+        self.eos = eos_id
+        self.zipf_a = zipf_a
+
+    # -- deterministic slot -> tokens -------------------------------------
+    def _tokens_for_slots(self, step: int, slots: np.ndarray) -> np.ndarray:
+        """slots: (local_batch,) GLOBAL sample indices for this step."""
+        out = np.empty((len(slots), self.seq + 1), np.int32)
+        for i, slot in enumerate(slots):
+            rng = np.random.Generator(np.random.Philox(
+                key=self.seed, counter=[step, int(slot), 0, 0]))
+            # zipf-ish distribution clipped to vocab, 2.. (0=pad, 1=eos)
+            toks = rng.zipf(self.zipf_a, size=self.seq + 1)
+            toks = (toks % (self.vocab - 2)) + 2
+            # sprinkle document boundaries (packing)
+            doc_lens = rng.geometric(1.0 / 512.0, size=8)
+            pos = np.cumsum(doc_lens)
+            pos = pos[pos < self.seq]
+            toks[pos] = self.eos
+            out[i] = toks
+        return out
+
+    def batch(self, step: int) -> dict:
+        """Local shard of the global batch at ``step`` (numpy, host-side)."""
+        base = np.arange(self.local_batch, dtype=np.int64)
+        slots = base * self.num_hosts + self.host_id   # strided global slots
+        toks = self._tokens_for_slots(step, slots)
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:].copy(),
+            "mask": (toks[:, 1:] != 0).astype(np.float32),
+        }
+
+    def global_batch_at(self, step: int) -> dict:
+        """All-host batch (for single-process dry-runs and tests)."""
+        shards = []
+        for h in range(self.num_hosts):
+            other = SyntheticLM(
+                vocab_size=self.vocab, seq_len=self.seq,
+                global_batch=self.global_batch, num_hosts=self.num_hosts,
+                host_id=h, seed=self.seed, eos_id=self.eos,
+                zipf_a=self.zipf_a)
+            shards.append(other.batch(step))
+        # interleave back to global order (slot = b * H + h)
+        out = {}
+        for k in shards[0]:
+            stacked = np.stack([s[k] for s in shards], axis=1)
+            out[k] = stacked.reshape(self.global_batch,
+                                     *shards[0][k].shape[1:])
+        return out
+
+
+class Prefetcher:
+    """Background-thread prefetch (double buffering off the host loop)."""
+
+    def __init__(self, pipeline: SyntheticLM, start_step: int = 0,
+                 depth: int = 2):
+        self.pipeline = pipeline
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self.pipeline.batch(step)
+            self.q.put((step, batch))
+            step += 1
+
+    def next(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass

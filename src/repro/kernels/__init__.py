@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  matvec.py     tiled dense GEMV — the paper's offloaded hot spot
+  cgs2.py       fused Gram-Schmidt projection (Arnoldi orthogonalization)
+  attention.py  blockwise flash attention w/ GQA + sliding window
+  ssd.py        Mamba2 SSD chunk scan, state carried in VMEM (zamba2 lever)
+  gated_norm.py fused SiLU-gate + RMSNorm (the SSD elementwise floor)
+  ref.py        pure-jnp oracles (ground truth for the allclose sweeps)
+  ops.py        mode dispatch (ref | pallas | interpret)
+"""
+from repro.kernels import ops, ref
+from repro.kernels.attention import attention as flash_attention
+from repro.kernels.cgs2 import cgs2 as cgs2_fused, gs_project as gs_project_fused
+from repro.kernels.gated_norm import gated_rmsnorm, gated_rmsnorm_ref
+from repro.kernels.matvec import matvec as matvec_tiled
+from repro.kernels.ssd import ssd_scan, ssd_scan_ref
+
+__all__ = [
+    "ops", "ref", "flash_attention", "cgs2_fused", "gs_project_fused",
+    "matvec_tiled", "ssd_scan", "ssd_scan_ref", "gated_rmsnorm",
+    "gated_rmsnorm_ref",
+]

@@ -1,0 +1,158 @@
+"""Pallas TPU kernel: blockwise (flash) attention with GQA + sliding window.
+
+The model stack's compute hot spot.  Online-softmax blockwise attention
+(Dao 2022 adapted to TPU): for each query tile, stream key/value tiles
+HBM->VMEM, maintain running max ``m``, normalizer ``l`` and accumulator
+``acc`` in VMEM scratch, rescaling on the fly.  Never materializes the
+(sq, skv) score matrix — the whole point on a 16 MiB-VMEM chip at 32k
+context.
+
+TPU adaptation vs. the CUDA original:
+  - tiles are MXU-aligned (bq, bk multiples of 128 on the lane dim);
+  - no warp-level reductions — the VPU reduces across lanes natively;
+  - causal + sliding-window out-of-horizon tiles are skipped with
+    @pl.when block-level guards, the TPU analogue of CUDA's per-CTA early
+    return (the DMA still issues; a grid-pruning variant is a §Perf item).
+
+GQA: query head h reads kv head h // (hq // hkv) — done in the index maps,
+so no K/V replication ever hits HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale, causal, window, q_offset, bq, bk):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Query tile qi covers absolute positions [q_offset + qi*bq, ... + bq).
+    q_lo = q_offset + qi * bq
+    q_hi = q_lo + bq - 1
+    k_lo = ki * bk
+    k_hi = k_lo + bk - 1
+    need = True
+    if causal:
+        need = need & (k_lo <= q_hi)
+    if window is not None:
+        need = need & (k_hi > q_lo - window)
+
+    @pl.when(need)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                  # (bq, bk)
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]                        # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                     # (bq, bk)
+        correction = jnp.exp(m_prev - m_new)       # (bq, 1)
+        l_ref[...] = correction * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * correction + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        # Fully-masked rows (front-padded queries) have l == 0; guard the
+        # divide — those rows are sliced off by the wrapper anyway.
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret"),
+)
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              scale: float | None = None, block_q: int = 128,
+              block_k: int = 128, interpret: bool = False):
+    """Flash attention.  q: (b, hq, sq, d), k/v: (b, hkv, skv, d).
+
+    Queries are aligned at the END of the key axis (prefill: sq == skv;
+    decode: sq < skv).  GQA via hq % hkv == 0.  Matches ref.attention.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    sqp = (sq + bq - 1) // bq * bq
+    skvp = (skv + bk - 1) // bk * bk
+
+    # Front-pad queries (their positions fall before the context start and
+    # mask to zero rows), back-pad keys (their positions fall beyond every
+    # real query's causal horizon).
+    qp = jnp.pad(q, ((0, 0), (0, 0), (sqp - sq, 0), (0, 0))) if sqp != sq else q
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, skvp - skv), (0, 0))) if skvp != skv else k
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, skvp - skv), (0, 0))) if skvp != skv else v
+    if not causal and (sqp != sq or skvp != skv):
+        raise NotImplementedError("non-causal attention needs tile-aligned shapes")
+
+    # Absolute position of the first (possibly padded) query row.
+    q_offset = (skv - sq) - (sqp - sq)
+
+    qf = qp.reshape(b * hq, sqp, d)
+    kf = kp.reshape(b * hkv, skvp, d)
+    vf = vp.reshape(b * hkv, skvp, d)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bk=bk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, sqp // bq, skvp // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+        name="flash_attention",
+    )(qf, kf, vf)
+    out = out.reshape(b, hq, sqp, d)
+    return out[:, :, sqp - sq:, :]

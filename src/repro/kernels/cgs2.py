@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused Gram-Schmidt projection pass.
+
+One Arnoldi orthogonalization pass is two level-2 ops over the SAME basis
+matrix V (m1, n):
+
+    h = mask * (V @ w)        (project)
+    w' = w - h @ V            (update)
+
+Done naively (the jnp reference) V is streamed from HBM twice per pass.
+This kernel fuses both into a single ``pallas_call`` with a two-phase grid:
+
+    phase 0: accumulate h tile-by-tile, h lives in the OUTPUT VMEM block
+             (revisited every step -> never leaves VMEM);
+    phase 1: re-stream V and write w' = w - h @ V per tile.
+
+V is still read twice from HBM (the dependency h <- all of w is fundamental)
+BUT w is read once, h/partials never round-trip to HBM, and there is no
+intermediate (m1, n_tiles) partial array — vs. the XLA lowering of the
+reference which materializes partial reductions and re-loads h.
+
+For the ROW-SHARDED distributed solver the phase boundary is also where the
+psum of h would sit; the kernel is written per-shard so the collective stays
+outside (shard_map composes with pallas_call).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gs_kernel(v_ref, w_ref, mask_ref, h_ref, wout_ref):
+    phase = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((phase == 0) & (j == 0))
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    @pl.when(phase == 0)
+    def _project():
+        # (m1, bn) @ (bn, 1) -> (m1, 1), f32 accumulate.
+        h_ref[...] += jax.lax.dot_general(
+            v_ref[...], w_ref[...],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=h_ref.dtype,
+        ) * mask_ref[...]
+
+    @pl.when(phase == 1)
+    def _update():
+        # w' = w - h^T V : (1, m1) @ (m1, bn) -> (1, bn) -> (bn, 1)
+        hv = jax.lax.dot_general(
+            h_ref[...] * mask_ref[...], v_ref[...],
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=h_ref.dtype,
+        )  # (1, bn)
+        wout_ref[...] = w_ref[...] - hv.T.astype(wout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gs_project(v: jax.Array, w: jax.Array, mask: jax.Array, *,
+               block_n: int = 1024, interpret: bool = False):
+    """Fused h = mask*(V@w); w' = w - h@V.  v: (m1, n), w: (n,), mask: (m1,)."""
+    m1, n = v.shape
+    bn = min(block_n, n)
+    if n % bn:
+        np_ = (n + bn - 1) // bn * bn
+        h, wout = gs_project(
+            jnp.pad(v, ((0, 0), (0, np_ - n))), jnp.pad(w, (0, np_ - n)),
+            mask, block_n=bn, interpret=interpret)
+        return h, wout[:n]
+
+    h, wout = pl.pallas_call(
+        _gs_kernel,
+        grid=(2, n // bn),
+        in_specs=[
+            pl.BlockSpec((m1, bn), lambda p, j: (0, j)),
+            pl.BlockSpec((bn, 1), lambda p, j: (j, 0)),
+            pl.BlockSpec((m1, 1), lambda p, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m1, 1), lambda p, j: (0, 0)),
+            pl.BlockSpec((bn, 1), lambda p, j: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), w.dtype),
+        ],
+        interpret=interpret,
+        name="gmres_gs_fused",
+    )(v, w[:, None].astype(v.dtype), mask[:, None].astype(jnp.float32))
+    return h[:, 0], wout[:, 0]
+
+
+def cgs2(v: jax.Array, w: jax.Array, mask: jax.Array, *,
+         block_n: int = 1024, interpret: bool = False):
+    """Reorthogonalized (two-pass) fused Gram-Schmidt; returns (h, w'')."""
+    h1, w1 = gs_project(v, w, mask, block_n=block_n, interpret=interpret)
+    h2, w2 = gs_project(v, w1, mask, block_n=block_n, interpret=interpret)
+    return h1 + h2, w2

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused SiLU-gate + RMSNorm (the Mamba2 block tail).
+
+The zamba2 chunk-size sweep (EXPERIMENTS.md SSPerf) REFUTED the
+(Q,Q)-scores hypothesis and located the SSD memory floor in the
+d_inner-wide elementwise chains: ``y * silu(z)`` then RMSNorm is, to XLA's
+per-op accounting, four full passes over a (tokens, 2*d_model) activation
+(mul+silu, square, mean-reduce, scale) plus their intermediates.
+
+This kernel does the whole tail in ONE HBM pass per operand: a (bt, d)
+tile is loaded once, gated, row-reduced and normalized entirely in VMEM.
+
+    out = rmsnorm(y * silu(z)) * w
+
+Tiling: rows = tokens (any blocking), d kept whole per tile (d_inner <=
+16k fits VMEM: 256 x 14336 x 4 B = 14.7 MiB for two operands at bt=128 —
+choose bt accordingly; default bt=128, f32 in/out).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(y_ref, z_ref, w_ref, o_ref, *, eps):
+    y = y_ref[...].astype(jnp.float32)
+    z = z_ref[...].astype(jnp.float32)
+    g = y * (z * jax.nn.sigmoid(z))                 # y * silu(z)
+    ms = jnp.mean(g * g, axis=-1, keepdims=True)
+    out = g * jax.lax.rsqrt(ms + eps) * w_ref[...].astype(jnp.float32)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "eps", "interpret"))
+def gated_rmsnorm(y: jax.Array, z: jax.Array, w: jax.Array, *,
+                  eps: float = 1e-5, block_t: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """out = rmsnorm(y * silu(z), w).  y/z: (..., t, d), w: (d,)."""
+    shape = y.shape
+    d = shape[-1]
+    yf = y.reshape(-1, d)
+    zf = z.reshape(-1, d)
+    t = yf.shape[0]
+    bt = min(block_t, t)
+    if t % bt:
+        pad = (t + bt - 1) // bt * bt - t
+        yf = jnp.pad(yf, ((0, pad), (0, 0)))
+        zf = jnp.pad(zf, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(yf.shape[0] // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(yf.shape, y.dtype),
+        interpret=interpret,
+        name="gated_rmsnorm",
+    )(yf, zf, w[None, :])
+    return out[:t].reshape(shape)
+
+
+def gated_rmsnorm_ref(y, z, w, *, eps: float = 1e-5):
+    """Pure-jnp oracle (matches models/ssm.py's unfused tail)."""
+    g = (y.astype(jnp.float32)
+         * jax.nn.silu(z.astype(jnp.float32)))
+    ms = jnp.mean(g * g, axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(ms + eps)
+            * w.astype(jnp.float32)).astype(y.dtype)

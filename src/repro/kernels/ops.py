@@ -1,0 +1,89 @@
+"""Dispatch layer: Pallas kernels on TPU, jnp references elsewhere.
+
+``use_kernels(True/False/"interpret")`` flips every call site in the solver
+and the model stack at once.  On this CPU container the kernels are
+exercised through interpret mode (tests/benchmarks); the model/dry-run path
+lowers the jnp references, which XLA fuses for the roofline analysis — the
+Pallas kernels are the TPU-target artifacts.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+from repro.kernels import attention as _attention_k
+from repro.kernels import cgs2 as _cgs2_k
+from repro.kernels import matvec as _matvec_k
+from repro.kernels import ref as _ref
+
+_MODE = "ref"  # "ref" | "pallas" | "interpret"
+
+
+def set_mode(mode: str) -> None:
+    global _MODE
+    assert mode in ("ref", "pallas", "interpret"), mode
+    _MODE = mode
+
+
+def get_mode() -> str:
+    return _MODE
+
+
+@contextlib.contextmanager
+def use_kernels(mode: str = "interpret"):
+    prev = _MODE
+    set_mode(mode)
+    try:
+        yield
+    finally:
+        set_mode(prev)
+
+
+def _kernel_kw():
+    return {"interpret": _MODE == "interpret"}
+
+
+def matvec(a, x, **kw):
+    if _MODE == "ref":
+        return _ref.matvec(a, x)
+    return _matvec_k.matvec(a, x, **_kernel_kw(), **kw)
+
+
+def gs_project(v, w, mask, **kw):
+    if _MODE == "ref":
+        return _ref.gs_project(v, w, mask)
+    return _cgs2_k.gs_project(v, w, mask, **_kernel_kw(), **kw)
+
+
+def cgs2(v, w, mask, **kw):
+    if _MODE == "ref":
+        return _ref.cgs2(v, w, mask)
+    return _cgs2_k.cgs2(v, w, mask, **_kernel_kw(), **kw)
+
+
+def attention(q, k, v, *, causal=True, window=None, scale=None,
+              q_chunk=None, **kw):
+    if _MODE == "ref":
+        return _ref.attention(q, k, v, causal=causal, scale=scale,
+                              window=window, q_chunk=q_chunk)
+    # the Pallas kernel is natively blocked; q_chunk is a ref-path knob
+    return _attention_k.attention(q, k, v, causal=causal, window=window,
+                                  scale=scale, **_kernel_kw(), **kw)
+
+
+def ssd_scan(x, dt, lg, b, c, *, heads, chunk, **kw):
+    """x: (BH, S, P); dt/lg: (BH, S); b/c: (B, S, N) -> y (BH, S, P)."""
+    from repro.kernels import ssd as _ssd
+    if _MODE == "ref":
+        return _ssd.ssd_scan_ref(x, dt, lg, b, c, heads=heads, chunk=chunk)
+    return _ssd.ssd_scan(x, dt, lg, b, c, heads=heads, chunk=chunk,
+                         **_kernel_kw(), **kw)
+
+
+def gated_rmsnorm(y, z, w, *, eps=1e-5, **kw):
+    from repro.kernels import gated_norm as _gn
+    if _MODE == "ref":
+        return _gn.gated_rmsnorm_ref(y, z, w, eps=eps)
+    return _gn.gated_rmsnorm(y, z, w, eps=eps, **_kernel_kw(), **kw)

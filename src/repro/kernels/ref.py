@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests assert against (allclose sweeps
+over shapes/dtypes, interpret=True on CPU).  They are also the fallback
+implementation the model/solver stacks use when kernels are disabled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matvec(a: jax.Array, x: jax.Array) -> jax.Array:
+    """y = A @ x.  a: (m, n), x: (n,) -> (m,)."""
+    return (a @ x[:, None])[:, 0] if x.ndim == 1 else a @ x
+
+
+def gs_project(v: jax.Array, w: jax.Array, mask: jax.Array):
+    """One classical Gram-Schmidt pass: h = mask*(V w); w' = w - h V.
+
+    v: (m1, n) row-major basis, w: (n,), mask: (m1,) 0/1 rows valid.
+    Returns (h, w').
+    """
+    h = (v @ w) * mask
+    return h, w - h @ v
+
+
+def cgs2(v: jax.Array, w: jax.Array, mask: jax.Array):
+    """Two GS passes (reorthogonalization); returns (h1+h2, w'')."""
+    h1, w1 = gs_project(v, w, mask)
+    h2, w2 = gs_project(v, w1, mask)
+    return h1 + h2, w2
+
+
+def attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+              window: int | None = None, q_chunk: int | None = None):
+    """Reference multi-head attention.
+
+    q: (b, hq, sq, d), k/v: (b, hkv, skv, d); GQA when hq > hkv.
+    ``window`` = sliding-window size (Mistral-style, counts the diagonal).
+    Positions are aligned at the END (decode: sq last queries of skv keys).
+
+    ``q_chunk``: scan over query chunks so the f32 score tensor peaks at
+    (b, h, q_chunk, skv) instead of (b, h, sq, skv) — the XLA-level
+    flash-attention memory shape (SSPerf hillclimb 1 iter 2).  Numerics are
+    identical (softmax is complete over skv within each chunk).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    skv = k.shape[2]
+    group = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+
+    def chunk_out(q_c, qpos_c):
+        qr = q_c.reshape(b, hkv, group, q_c.shape[2], d)
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qr.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        kpos = jnp.arange(skv)
+        mask = jnp.ones((q_c.shape[2], skv), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos_c[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos_c[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+        return out.reshape(b, hq, q_c.shape[2], d).astype(q.dtype)
+
+    qpos = jnp.arange(sq) + (skv - sq)
+    if not q_chunk or sq % q_chunk or sq <= q_chunk:
+        return chunk_out(q, qpos)
+
+    nc = sq // q_chunk
+    qs = q.reshape(b, hq, nc, q_chunk, d).transpose(2, 0, 1, 3, 4)
+    ps = qpos.reshape(nc, q_chunk)
+
+    def body(_, args):
+        q_c, qpos_c = args
+        return None, chunk_out(q_c, qpos_c)
+
+    _, outs = jax.lax.scan(body, None, (qs, ps))
+    return outs.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq, d)

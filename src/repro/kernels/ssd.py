@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (the zamba2 lever).
+
+The chunk-size sweep (EXPERIMENTS.md SSPerf) showed the XLA lowering of the
+SSD scan is floor-bound by materialized intermediates.  This kernel runs
+one chunk per grid step ENTIRELY in VMEM:
+
+  - the (Q, Q) masked-decay score matrix never exists in HBM,
+  - the inter-chunk state H (N, P) lives in VMEM scratch, carried across
+    the sequential chunk dimension of the grid (never round-trips),
+  - per chunk, HBM traffic is exactly the inputs x/dt/lg/B/C and output y.
+
+Grid: (batch*heads, n_chunks), chunks innermost/sequential.  B/C are
+shared across heads (n_groups=1, Mamba2's default) — the index map reads
+head bh from the (b, ...) B/C arrays with bh // heads, so no replication
+hits HBM.
+
+Layout: x (BH, S, P); dt/lg (BH, S); B/C (B, S, N); out y (BH, S, P).
+VMEM/step at Q=256, P=64, N=64: x/y 128 KiB, scores 256 KiB, H 16 KiB —
+comfortable with double buffering.  Matches ref ``ssd_chunk_ref`` (the
+jnp oracle distilled from models/ssm.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, lg_ref, b_ref, c_ref, o_ref, h_ref, *, q):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q,)
+    lg = lg_ref[0].astype(jnp.float32)        # (Q,) log-decay (negative)
+    b = b_ref[0].astype(jnp.float32)          # (Q, N)
+    c = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    cum = jnp.cumsum(lg)                      # (Q,) inclusive
+    total = cum[-1]
+
+    # intra-chunk: scores[t, u] = (C_t . B_u) exp(cum_t - cum_u) dt_u, u<=t
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    decay = cum[:, None] - cum[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (q, q), 1))
+    decay = jnp.where(tri, decay, -jnp.inf)
+    scores = cb * jnp.exp(decay) * dt[None, :]
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: y += (C * exp(cum)) @ H
+    y = y + jax.lax.dot_general(c * jnp.exp(cum)[:, None], h_ref[...],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # state update: H' = exp(total) H + B^T diag(exp(total - cum) dt) x
+    su = (jnp.exp(total - cum) * dt)[:, None]             # (Q, 1)
+    s_new = jax.lax.dot_general(b, su * x, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    h_ref[...] = jnp.exp(total) * h_ref[...] + s_new
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("heads", "chunk", "interpret"))
+def ssd_scan(x, dt, lg, b, c, *, heads: int, chunk: int = 256,
+             interpret: bool = False):
+    """Chunked SSD.  x: (BH, S, P); dt/lg: (BH, S); b/c: (B, S, N).
+
+    BH = batch * heads (head-major within batch).  Returns y (BH, S, P).
+    """
+    bh, s, p_dim = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    return pl.pallas_call(
+        functools.partial(_kernel, q=q),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, p_dim), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, q), lambda i, j: (i, j)),
+            pl.BlockSpec((1, q), lambda i, j: (i, j)),
+            pl.BlockSpec((1, q, n), lambda i, j, h=heads: (i // h, j, 0)),
+            pl.BlockSpec((1, q, n), lambda i, j, h=heads: (i // h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p_dim), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p_dim), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p_dim), jnp.float32)],
+        interpret=interpret,
+        name="ssd_chunk_scan",
+    )(x, dt, lg, b, c)
+
+
+def ssd_scan_ref(x, dt, lg, b, c, *, heads: int, chunk: int = 256):
+    """jnp oracle — the models/ssm.py chunk recurrence, head-flattened."""
+    bh, s, p_dim = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    batch = bh // heads
+    bb = jnp.repeat(b, heads, axis=0)                    # (BH, S, N)
+    cc = jnp.repeat(c, heads, axis=0)
+
+    def per_row(x_r, dt_r, lg_r, b_r, c_r):
+        def body(h, args):
+            xc, dtc, lgc, bc, ccx = args                 # (q, .)
+            cum = jnp.cumsum(lgc)
+            total = cum[-1]
+            cb = ccx @ bc.T
+            decay = cum[:, None] - cum[None, :]
+            tri = jnp.tril(jnp.ones((q, q), bool))
+            w = jnp.where(tri, jnp.exp(decay), 0.0)
+            y = (cb * w * dtc[None, :]) @ xc
+            y = y + (ccx * jnp.exp(cum)[:, None]) @ h
+            su = (jnp.exp(total - cum) * dtc)[:, None]
+            h = jnp.exp(total) * h + bc.T @ (su * xc)
+            return h, y
+
+        rc = lambda t: t.reshape((nc, q) + t.shape[1:])
+        _, ys = jax.lax.scan(body, jnp.zeros((n, p_dim), jnp.float32),
+                             (rc(x_r.astype(jnp.float32)), rc(dt_r),
+                              rc(lg_r), rc(b_r.astype(jnp.float32)),
+                              rc(c_r.astype(jnp.float32))))
+        return ys.reshape(s, p_dim)
+
+    y = jax.vmap(per_row)(x, dt.astype(jnp.float32), lg.astype(jnp.float32),
+                          bb, cc)
+    return y.astype(x.dtype)

@@ -1,0 +1,10 @@
+"""Launch layer: meshes, sharded step factories, drivers, multi-pod dry-run."""
+from repro.launch.mesh import make_production_mesh, make_host_mesh
+from repro.launch.steps import (TrainState, make_train_step,
+                                make_prefill_step, make_serve_step,
+                                make_optimizer, state_shardings,
+                                abstract_state)
+
+__all__ = ["make_production_mesh", "make_host_mesh", "TrainState",
+           "make_train_step", "make_prefill_step", "make_serve_step",
+           "make_optimizer", "state_shardings", "abstract_state"]

@@ -1,0 +1,120 @@
+"""Step factories: sharded train / prefill / decode programs.
+
+Everything the launcher and the dry-run lower comes from here, so the
+jitted programs benchmarks measure and the programs production runs are the
+same objects.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import build, cache_specs, input_specs, param_specs
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adamw, schedules
+from repro.sharding import (batch_shardings, cache_shardings,
+                            param_shardings, replicated)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+
+
+def make_optimizer(cfg: ModelConfig, *, peak_lr: float = 3e-4,
+                   warmup: int = 100, total: int = 10_000):
+    return adamw(schedules.cosine_warmup(peak_lr, warmup_steps=warmup,
+                                         total_steps=total),
+                 moment_dtype=cfg.moment_dtype)
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, opt) -> TrainState:
+    ap = param_specs(cfg)
+    ps = param_shardings(mesh, ap)
+    ao = jax.eval_shape(opt.init, ap)
+    # moments mirror the param tree; scalars replicate
+    mo = param_shardings(mesh, ao.m)
+    vo = param_shardings(mesh, ao.v)
+    so = NamedSharding(mesh, P())
+    return TrainState(params=ps, opt=type(ao)(step=so, m=mo, v=vo))
+
+
+def abstract_state(cfg: ModelConfig, opt) -> TrainState:
+    ap = param_specs(cfg)
+    return TrainState(params=ap, opt=jax.eval_shape(opt.init, ap))
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+                    opt=None, jit: bool = True):
+    """Returns (step_fn, state_shardings, batch_shardings_tree)."""
+    model = build(cfg)
+    opt = opt or make_optimizer(cfg)
+
+    def train_step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state.params, batch)
+        params, opt_state, opt_metrics = opt.update(grads, state.opt,
+                                                    state.params)
+        return TrainState(params=params, opt=opt_state), {**metrics,
+                                                          **opt_metrics}
+
+    st_sh = state_shardings(cfg, mesh, opt)
+    ab = input_specs(cfg, shape)
+    b_sh = batch_shardings(mesh, ab, shape.global_batch)
+    if not jit:
+        return train_step, st_sh, b_sh
+    fn = jax.jit(train_step,
+                 in_shardings=(st_sh, b_sh),
+                 out_shardings=(st_sh, replicated(mesh, {"_": 0})["_"]),
+                 donate_argnums=(0,))
+    return fn, st_sh, b_sh
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+                      jit: bool = True):
+    model = build(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    p_sh = param_shardings(mesh, param_specs(cfg))
+    ab = input_specs(cfg, shape)
+    b_sh = batch_shardings(mesh, ab, shape.global_batch)
+    if not jit:
+        return prefill_step, p_sh, b_sh
+    fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                 out_shardings=NamedSharding(mesh, P()))
+    return fn, p_sh, b_sh
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+                    jit: bool = True, greedy: bool = True):
+    """Single-token decode step: (params, cache, token, pos) ->
+
+    (next_token, logits?, new_cache).  Cache is donated — decode is a
+    steady-state loop over device-resident state (the gpuR lesson, again).
+    """
+    model = build(cfg)
+
+    def serve_step(params, cache, token, pos):
+        logits, new_cache = model.decode(params, cache, token, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, new_cache
+
+    p_sh = param_shardings(mesh, param_specs(cfg))
+    c_ab = cache_specs(cfg, shape)
+    c_sh = cache_shardings(mesh, c_ab, shape.global_batch)
+    tok_sh = batch_shardings(mesh, {"t": jax.ShapeDtypeStruct(
+        (shape.global_batch,), jnp.int32)}, shape.global_batch)["t"]
+    pos_sh = NamedSharding(mesh, P())
+    if not jit:
+        return serve_step, p_sh, c_sh
+    fn = jax.jit(serve_step,
+                 in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+                 out_shardings=(tok_sh, c_sh),
+                 donate_argnums=(1,))
+    return fn, p_sh, (c_sh, tok_sh, pos_sh)

@@ -1,0 +1,396 @@
+"""Per-scan-unit cost programs for the roofline analysis.
+
+Why this exists (SSPerf iteration 0, recorded in EXPERIMENTS.md): XLA's
+``compiled.cost_analysis()`` on the partitioned module attributes ~ZERO
+flops/bytes/collectives to ``while``-loop bodies — scanned layer stacks
+disappear from the numbers entirely (verified: granite-3-8b train FLOPs are
+depth-invariant for 1/2/4 layers).  Differential-depth extrapolation
+therefore measures nothing.
+
+Fix: compile each scan unit (one layer of each kind) as its OWN program
+with the SAME shardings the full model uses, cost-analyze that (no loop ->
+counted correctly), and compose
+
+    total(term) = base_program(term) + sum_i units_i x unit_i(term)
+
+where base_program is the full lowering (embeddings, lm head, loss,
+optimizer — everything outside the scans, which XLA does count).
+
+Adjustments:
+  - train units are lowered as value_and_grad(sum(layer(x))) wrt (params, x)
+    = 1 fwd + full bwd.  With remat="full" the real program recomputes the
+    fwd inside bwd: flops x (4/3) (fwd:bwd ~ 1:2); bytes/collectives are
+    left as measured (remat trades bytes DOWN, so this is conservative).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import attention, encdec, layers as L, moe, ssm, \
+    transformer, xlstm
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.sharding import partition
+
+REMAT_FLOPS_FACTOR = 4.0 / 3.0
+
+
+def _act_sharding(mesh, batch):
+    baxes = partition.batch_axes_for(mesh, batch)
+    return NamedSharding(mesh, P(baxes))
+
+
+def _param_shardings_for(mesh, abstract):
+    return partition.param_shardings(mesh, abstract)
+
+
+def _cache_shardings_for(mesh, abstract, batch):
+    return partition.cache_shardings(mesh, abstract, batch)
+
+
+def _stats(compiled, *, flops_factor=1.0):
+    from repro.launch.dryrun import _stats_of
+    st = _stats_of(compiled)
+    st["flops"] *= flops_factor
+    return st
+
+
+def _compile_unit(fn, mesh, args, in_shardings):
+    jfn = jax.jit(fn, in_shardings=in_shardings)
+    return jfn.lower(*args).compile()
+
+
+def _train_unit(layer_fn, abstract_params, mesh, cfg, shape, extra=None):
+    """value_and_grad of sum(layer(params, x [, extra]))."""
+    cdt = L.dtype_of(cfg.compute_dtype)
+    b, s = shape.global_batch, shape.seq_len
+    x = jax.ShapeDtypeStruct((b, s, cfg.d_model), cdt)
+
+    def obj(p, x, *extra_args):
+        y = layer_fn(p, x, *extra_args)
+        return jnp.sum(y.astype(jnp.float32))
+
+    grad_fn = jax.value_and_grad(obj, argnums=(0, 1))
+    p_sh = _param_shardings_for(mesh, abstract_params)
+    x_sh = _act_sharding(mesh, b)
+    args = [abstract_params, x]
+    shardings = [p_sh, x_sh]
+    if extra is not None:
+        args += [extra[0]]
+        shardings += [extra[1]]
+    factor = REMAT_FLOPS_FACTOR if cfg.remat != "none" else 1.0
+    return _stats(_compile_unit(grad_fn, mesh, args, tuple(shardings)),
+                  flops_factor=factor)
+
+
+def _fwd_unit(layer_fn, abstract_params, mesh, cfg, shape, seq=None,
+              extra=None):
+    cdt = L.dtype_of(cfg.compute_dtype)
+    b = shape.global_batch
+    s = seq if seq is not None else shape.seq_len
+    x = jax.ShapeDtypeStruct((b, s, cfg.d_model), cdt)
+    p_sh = _param_shardings_for(mesh, abstract_params)
+    x_sh = _act_sharding(mesh, b)
+    args = [abstract_params, x]
+    shardings = [p_sh, x_sh]
+    if extra is not None:
+        args += [extra[0]]
+        shardings += [extra[1]]
+    return _stats(_compile_unit(layer_fn, mesh, args, tuple(shardings)))
+
+
+def _decode_unit(step_fn, abstract_params, abstract_cache, mesh, cfg, shape):
+    cdt = L.dtype_of(cfg.compute_dtype)
+    b = shape.global_batch
+    x = jax.ShapeDtypeStruct((b, 1, cfg.d_model), cdt)
+    p_sh = _param_shardings_for(mesh, abstract_params)
+    x_sh = _act_sharding(mesh, b)
+    c_sh = _cache_shardings_for(mesh, abstract_cache, b)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+    return _stats(_compile_unit(step_fn, mesh,
+                                [abstract_params, x, abstract_cache, pos],
+                                (p_sh, x_sh, c_sh, pos_sh)))
+
+
+# --------------------------------------------------------------------------
+# family-specific units
+# --------------------------------------------------------------------------
+def _positions(b, s):
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+
+def unit_costs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> list:
+    """Returns [(units, stats_dict), ...] for every scan-unit kind."""
+    cdt = L.dtype_of(cfg.compute_dtype)
+    key = jax.random.PRNGKey(0)
+    kind = shape.kind
+    fam = cfg.family
+    b = shape.global_batch
+    out = []
+
+    def dense_layer(p, x):
+        pos = _positions(x.shape[0], x.shape[1])
+        return transformer.dense_layer_apply(p, x, cfg, pos, cdt)
+
+    def moe_layer(p, x):
+        pos = _positions(x.shape[0], x.shape[1])
+        return transformer.moe_layer_apply(p, x, cfg, pos, cdt)
+
+    def dense_decode(p, x, c, pos):
+        h, c2 = attention.decode(p["attn"],
+                                 L.rmsnorm(x, p["ln1"], cfg.norm_eps), c,
+                                 pos, cfg, compute_dtype=cdt,
+                                 rope=cfg.positions == "rope",
+                                 window=cfg.window)
+        x = x + h
+        return x + L.mlp_apply(p["mlp"],
+                               L.rmsnorm(x, p["ln2"], cfg.norm_eps), cdt), c2
+
+    def moe_decode(p, x, c, pos):
+        h, c2 = attention.decode(p["attn"],
+                                 L.rmsnorm(x, p["ln1"], cfg.norm_eps), c,
+                                 pos, cfg, compute_dtype=cdt,
+                                 rope=cfg.positions == "rope",
+                                 window=cfg.window)
+        x = x + h
+        return x + moe.apply(p["moe"], L.rmsnorm(x, p["ln2"], cfg.norm_eps),
+                             cfg, compute_dtype=cdt), c2
+
+    if fam in ("dense", "vlm", "moe"):
+        n_moe = cfg.num_layers // cfg.moe_every if cfg.num_experts else 0
+        n_dense = cfg.num_layers - n_moe
+        if n_dense:
+            ap = jax.eval_shape(
+                lambda k: transformer.dense_layer_init(k, cfg, jnp.float32),
+                key)
+            if kind == "train":
+                out.append((n_dense, _train_unit(dense_layer, ap, mesh, cfg,
+                                                 shape)))
+            elif kind == "prefill":
+                out.append((n_dense, _fwd_unit(dense_layer, ap, mesh, cfg,
+                                               shape)))
+            else:
+                ac = jax.eval_shape(functools.partial(
+                    attention.init_cache, cfg, b, shape.seq_len))
+                out.append((n_dense, _decode_unit(dense_decode, ap, ac, mesh,
+                                                  cfg, shape)))
+        if n_moe:
+            ap = jax.eval_shape(
+                lambda k: transformer.moe_layer_init(k, cfg, jnp.float32),
+                key)
+            if kind == "train":
+                out.append((n_moe, _train_unit(moe_layer, ap, mesh, cfg,
+                                               shape)))
+            elif kind == "prefill":
+                out.append((n_moe, _fwd_unit(moe_layer, ap, mesh, cfg,
+                                             shape)))
+            else:
+                ac = jax.eval_shape(functools.partial(
+                    attention.init_cache, cfg, b, shape.seq_len))
+                out.append((n_moe, _decode_unit(moe_decode, ap, ac, mesh,
+                                                cfg, shape)))
+        return out
+
+    if fam == "encdec":
+        ap_enc = jax.eval_shape(
+            lambda k: encdec._enc_layer_init(k, cfg, jnp.float32), key)
+        ap_dec = jax.eval_shape(
+            lambda k: encdec._dec_layer_init(k, cfg, jnp.float32), key)
+        enc_out_spec = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                            cdt)
+        enc_sh = _act_sharding(mesh, b)
+
+        def enc_layer(p, x):
+            h = attention.apply(p["attn"], encdec._ln(x, p["ln1"],
+                                                      cfg.norm_eps), cfg,
+                                causal=False, compute_dtype=cdt, rope=False)
+            x = x + h
+            return x + encdec._mlp_bias_apply(
+                p["mlp"], encdec._ln(x, p["ln2"], cfg.norm_eps), cdt)
+
+        def dec_layer(p, x, enc_out):
+            h = attention.apply(p["self_attn"],
+                                encdec._ln(x, p["ln1"], cfg.norm_eps), cfg,
+                                causal=True, compute_dtype=cdt, rope=False)
+            x = x + h
+            kv = attention.encoder_kv(p["cross_attn"], enc_out, cfg,
+                                      compute_dtype=cdt)
+            x = x + attention.cross_apply(
+                p["cross_attn"], encdec._ln(x, p["ln_x"], cfg.norm_eps), kv,
+                cfg, compute_dtype=cdt)
+            return x + encdec._mlp_bias_apply(
+                p["mlp"], encdec._ln(x, p["ln2"], cfg.norm_eps), cdt)
+
+        if kind == "train":
+            # encoder unit uses encoder_seq, not shape.seq_len
+            enc_shape = ShapeConfig("enc", cfg.encoder_seq, b, "train")
+            out.append((cfg.encoder_layers,
+                        _train_unit(enc_layer, ap_enc, mesh, cfg, enc_shape)))
+            out.append((cfg.num_layers,
+                        _train_unit(dec_layer, ap_dec, mesh, cfg, shape,
+                                    extra=(enc_out_spec, enc_sh))))
+        elif kind == "prefill":
+            out.append((cfg.encoder_layers,
+                        _fwd_unit(enc_layer, ap_enc, mesh, cfg, shape,
+                                  seq=cfg.encoder_seq)))
+            out.append((cfg.num_layers,
+                        _fwd_unit(dec_layer, ap_dec, mesh, cfg, shape,
+                                  extra=(enc_out_spec, enc_sh))))
+        else:
+            ac = jax.eval_shape(functools.partial(
+                attention.init_cache, cfg, b, shape.seq_len))
+            hkv, hd = cfg.num_kv_heads, cfg.head_dim
+            cross_kv = (jax.ShapeDtypeStruct((b, hkv, cfg.encoder_seq, hd),
+                                             jnp.bfloat16),) * 2
+
+            def dec_decode(p, x, c, pos, ckv):
+                h, c2 = attention.decode(
+                    p["self_attn"], encdec._ln(x, p["ln1"], cfg.norm_eps), c,
+                    pos, cfg, compute_dtype=cdt, rope=False)
+                x = x + h
+                x = x + attention.cross_apply(
+                    p["cross_attn"], encdec._ln(x, p["ln_x"], cfg.norm_eps),
+                    ckv, cfg, compute_dtype=cdt)
+                return x + encdec._mlp_bias_apply(
+                    p["mlp"], encdec._ln(x, p["ln2"], cfg.norm_eps), cdt), c2
+
+            x = jax.ShapeDtypeStruct((b, 1, cfg.d_model), cdt)
+            ckv_sh = _cache_shardings_for(
+                mesh, {"cross": cross_kv}, b)["cross"]
+            st = _stats(_compile_unit(
+                dec_decode, mesh,
+                [ap_dec, x, ac, jax.ShapeDtypeStruct((), jnp.int32),
+                 cross_kv],
+                (_param_shardings_for(mesh, ap_dec), _act_sharding(mesh, b),
+                 _cache_shardings_for(mesh, ac, b), NamedSharding(mesh, P()),
+                 ckv_sh)))
+            out.append((cfg.num_layers, st))
+        return out
+
+    if fam == "hybrid":
+        from repro.models import hybrid as hy
+        ap_m = jax.eval_shape(
+            lambda k: hy._mamba_layer_init(k, cfg, jnp.float32), key)
+        ap_a = jax.eval_shape(
+            lambda k: hy._shared_attn_init(k, cfg, jnp.float32), key)
+        n_sites = cfg.num_layers // cfg.attn_every
+
+        def mamba_layer(p, x):
+            return x + ssm.apply(p["block"],
+                                 L.rmsnorm(x, p["ln"], cfg.norm_eps), cfg,
+                                 compute_dtype=cdt)
+
+        def attn_block(p, x):
+            pos = _positions(x.shape[0], x.shape[1])
+            return hy._shared_attn_apply(p, x, cfg, pos, cdt)
+
+        if kind == "train":
+            out.append((cfg.num_layers,
+                        _train_unit(mamba_layer, ap_m, mesh, cfg, shape)))
+            out.append((n_sites,
+                        _train_unit(attn_block, ap_a, mesh, cfg, shape)))
+        elif kind == "prefill":
+            out.append((cfg.num_layers,
+                        _fwd_unit(mamba_layer, ap_m, mesh, cfg, shape)))
+            out.append((n_sites,
+                        _fwd_unit(attn_block, ap_a, mesh, cfg, shape)))
+        else:
+            a_state = jax.eval_shape(functools.partial(
+                ssm.init_state, cfg, b))
+
+            def mamba_decode(p, x, st, pos):
+                del pos
+                h, st2 = ssm.decode(p["block"],
+                                    L.rmsnorm(x, p["ln"], cfg.norm_eps), st,
+                                    cfg, compute_dtype=cdt)
+                return x + h, st2
+
+            out.append((cfg.num_layers,
+                        _decode_unit(mamba_decode, ap_m, a_state, mesh, cfg,
+                                     shape)))
+            ac = jax.eval_shape(functools.partial(
+                attention.init_cache, cfg, b, shape.seq_len))
+
+            def attn_decode(p, x, c, pos):
+                h, c2 = attention.decode(
+                    p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), c, pos,
+                    cfg, compute_dtype=cdt)
+                x = x + h
+                return x + L.mlp_apply(
+                    p["mlp"], L.rmsnorm(x, p["ln2"], cfg.norm_eps), cdt), c2
+
+            out.append((n_sites,
+                        _decode_unit(attn_decode, ap_a, ac, mesh, cfg,
+                                     shape)))
+        return out
+
+    if fam == "ssm":
+        ap_m = jax.eval_shape(lambda k: {
+            "ln": jnp.ones((cfg.d_model,), jnp.float32),
+            "block": xlstm.mlstm_init(k, cfg, jnp.float32)}, key)
+        ap_s = jax.eval_shape(lambda k: {
+            "ln": jnp.ones((cfg.d_model,), jnp.float32),
+            "block": xlstm.slstm_init(k, cfg, jnp.float32)}, key)
+        n_s = cfg.num_layers // cfg.slstm_every
+        n_m = cfg.num_layers - n_s
+
+        def m_layer(p, x):
+            return x + xlstm.mlstm_apply(
+                p["block"], L.rmsnorm(x, p["ln"], cfg.norm_eps), cfg,
+                compute_dtype=cdt)
+
+        def s_layer(p, x):
+            return x + xlstm.slstm_apply(
+                p["block"], L.rmsnorm(x, p["ln"], cfg.norm_eps), cfg,
+                compute_dtype=cdt)
+
+        if kind == "train":
+            out.append((n_m, _train_unit(m_layer, ap_m, mesh, cfg, shape)))
+            out.append((n_s, _train_unit(s_layer, ap_s, mesh, cfg, shape)))
+        elif kind == "prefill":
+            out.append((n_m, _fwd_unit(m_layer, ap_m, mesh, cfg, shape)))
+            out.append((n_s, _fwd_unit(s_layer, ap_s, mesh, cfg, shape)))
+        else:
+            m_state = jax.eval_shape(functools.partial(
+                xlstm.mlstm_state, cfg, b))
+            s_state = jax.eval_shape(functools.partial(
+                xlstm.slstm_state, cfg, b))
+
+            def m_decode(p, x, st, pos):
+                del pos
+                h, st2 = xlstm.mlstm_decode(
+                    p["block"], L.rmsnorm(x, p["ln"], cfg.norm_eps), st, cfg,
+                    compute_dtype=cdt)
+                return x + h, st2
+
+            def s_decode(p, x, st, pos):
+                del pos
+                h, st2 = xlstm.slstm_decode(
+                    p["block"], L.rmsnorm(x, p["ln"], cfg.norm_eps), st, cfg,
+                    compute_dtype=cdt)
+                return x + h, st2
+
+            out.append((n_m, _decode_unit(m_decode, ap_m, m_state, mesh, cfg,
+                                          shape)))
+            out.append((n_s, _decode_unit(s_decode, ap_s, s_state, mesh, cfg,
+                                          shape)))
+        return out
+
+    raise ValueError(fam)
+
+
+def composed_stats(cfg, shape, mesh, base_stats: dict) -> tuple:
+    """total = base (full program, scans ~invisible) + sum units x unit."""
+    units = unit_costs(cfg, shape, mesh)
+    total = dict(base_stats)
+    detail = []
+    for n, st in units:
+        for k in total:
+            total[k] = total[k] + n * st[k]
+        detail.append({"units": n, **st})
+    return total, detail

@@ -1,0 +1,10 @@
+"""LM substrate: configs, layers, families, unified Model API."""
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+from repro.models.model import (Model, build, input_specs, cache_specs,
+                                param_specs, param_count, active_param_count)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "shape_applicable",
+    "Model", "build", "input_specs", "cache_specs", "param_specs",
+    "param_count", "active_param_count",
+]

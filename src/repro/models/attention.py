@@ -1,0 +1,197 @@
+"""GQA multi-head attention: train/prefill path + cached decode step.
+
+Decode caches:
+  - full cache: (b, hkv, S, hd) written at slot = position
+  - ring cache (sliding window): (b, hkv, W, hd) written at slot = pos % W —
+    this is what makes mixtral's long_500k decode O(W) memory.
+
+Keys are cached POST-RoPE (absolute positions), so ring slots need no
+re-rotation; masks are built from the stored absolute position of each slot.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+def init(key, cfg, d_model=None, dtype=jnp.float32):
+    d = d_model or cfg.d_model
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], d, hq * hd, dtype),
+        "wk": L.dense_init(ks[1], d, hkv * hd, dtype),
+        "wv": L.dense_init(ks[2], d, hkv * hd, dtype),
+        "wo": L.dense_init(ks[3], hq * hd, d, dtype, scale=1.0 / (hq * hd) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg, compute_dtype, positions, rope: bool):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    x = x.astype(compute_dtype)
+    q = x @ p["wq"].astype(compute_dtype)
+    k = x @ p["wk"].astype(compute_dtype)
+    v = x @ p["wv"].astype(compute_dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(compute_dtype)
+        k = k + p["bk"].astype(compute_dtype)
+        v = v + p["bv"].astype(compute_dtype)
+    q = q.reshape(b, s, hq, hd).swapaxes(1, 2)    # (b, hq, s, hd)
+    k = k.reshape(b, s, hkv, hd).swapaxes(1, 2)
+    v = v.reshape(b, s, hkv, hd).swapaxes(1, 2)
+    if rope:
+        q = L.apply_rope(q, positions[:, None, :], cfg.rope_theta)
+        k = L.apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    return q, k, v
+
+
+Q_CHUNK = 512   # f32 score peak = (b, h, Q_CHUNK, skv) — flash-in-XLA
+
+
+def apply(p, x, cfg, *, positions=None, causal=True, window=None,
+          compute_dtype=jnp.bfloat16, rope=True):
+    """Full-sequence attention (train / prefill).  x: (b, s, d)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, x, cfg, compute_dtype, positions, rope)
+    q_chunk = Q_CHUNK if s > 2 * Q_CHUNK else None
+    out = ops.attention(q, k, v, causal=causal, window=window,
+                        q_chunk=q_chunk)
+    out = out.swapaxes(1, 2).reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return out @ p["wo"].astype(compute_dtype)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (b, hkv, S_or_W, hd) bf16 — or int8 when quantized
+    v: jax.Array
+    kpos: jax.Array       # (S_or_W,) absolute position per slot, -1 = empty
+    k_scale: Optional[jax.Array] = None   # (b, hkv, S_or_W, 1) absmax/127
+    v_scale: Optional[jax.Array] = None
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16,
+               d_model=None) -> KVCache:
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    slots = min(seq_len, cfg.window) if cfg.window else seq_len
+    if getattr(cfg, "kv_quant", False):
+        return KVCache(
+            k=jnp.zeros((batch, hkv, slots, hd), jnp.int8),
+            v=jnp.zeros((batch, hkv, slots, hd), jnp.int8),
+            kpos=jnp.full((slots,), -1, jnp.int32),
+            k_scale=jnp.zeros((batch, hkv, slots, 1), jnp.float16),
+            v_scale=jnp.zeros((batch, hkv, slots, 1), jnp.float16),
+        )
+    return KVCache(
+        k=jnp.zeros((batch, hkv, slots, hd), dtype),
+        v=jnp.zeros((batch, hkv, slots, hd), dtype),
+        kpos=jnp.full((slots,), -1, jnp.int32),
+    )
+
+
+def _quantize_kv(x):
+    """Per-(slot, head) absmax int8 quantization.  x: (b, hkv, s, hd)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = absmax / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32)
+                           / jnp.maximum(scale, 1e-8)), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float16)
+
+
+def _dequantize_kv(q, scale):
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)
+
+
+def decode(p, x, cache: KVCache, pos, cfg, *, compute_dtype=jnp.bfloat16,
+           rope=True, window=None):
+    """Single-token decode.  x: (b, 1, d); pos: scalar absolute position.
+
+    Returns (out (b, 1, d), new_cache).  Works for both full and ring
+    caches — the ring is just slot = pos % slots with stored positions.
+    """
+    b = x.shape[0]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    group = hq // hkv
+    positions = jnp.broadcast_to(pos[None], (b, 1)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, compute_dtype, positions, rope)
+
+    slots = cache.k.shape[2]
+    slot = (pos % slots).astype(jnp.int32)
+    quant = cache.k_scale is not None          # static (pytree structure)
+    if quant:
+        k_q, k_s = _quantize_kv(k_new)
+        v_q, v_s = _quantize_kv(v_new)
+        upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+            buf, val.astype(buf.dtype), slot, axis=2)
+        k_store, v_store = upd(cache.k, k_q), upd(cache.v, v_q)
+        k_scale, v_scale = upd(cache.k_scale, k_s), upd(cache.v_scale, v_s)
+        k = _dequantize_kv(k_store, k_scale)
+        v = _dequantize_kv(v_store, v_scale)
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), slot, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), slot, axis=2)
+        k_store, v_store = k, v
+        k_scale = v_scale = None
+    kpos = jax.lax.dynamic_update_slice_in_dim(
+        cache.kpos, pos[None].astype(jnp.int32), slot, axis=0)
+
+    # scores over all slots, masked by stored absolute positions
+    qh = q.reshape(b, hkv, group, hd)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bkgd,bksd->bkgs", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale    # (b, hkv, g, slots)
+    valid = (kpos >= 0) & (kpos <= pos)
+    if window is not None:
+        valid &= kpos > pos - window
+    logits = jnp.where(valid[None, None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", w, v.astype(jnp.float32))
+    out = out.reshape(b, 1, hq * hd).astype(compute_dtype)
+    out = out @ p["wo"].astype(compute_dtype)
+    return out, KVCache(k=k_store, v=v_store, kpos=kpos,
+                        k_scale=k_scale, v_scale=v_scale)
+
+
+def cross_init(key, cfg, dtype=jnp.float32):
+    """Cross-attention projections (whisper decoder)."""
+    return init(key, cfg, dtype=dtype)
+
+
+def cross_apply(p, x, enc_kv, cfg, *, compute_dtype=jnp.bfloat16):
+    """Cross-attention: queries from x (b, sq, d), K/V precomputed from the
+
+    encoder output (b, hkv, se, hd) pair ``enc_kv`` — computed once at
+    prefill, reused every decode step.
+    """
+    b, sq, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    x = x.astype(compute_dtype)
+    q = (x @ p["wq"].astype(compute_dtype)).reshape(b, sq, hq, hd).swapaxes(1, 2)
+    k, v = enc_kv
+    out = ops.attention(q, k.astype(compute_dtype), v.astype(compute_dtype),
+                        causal=False)
+    out = out.swapaxes(1, 2).reshape(b, sq, hq * hd)
+    return out @ p["wo"].astype(compute_dtype)
+
+
+def encoder_kv(p, enc_out, cfg, *, compute_dtype=jnp.bfloat16):
+    """Precompute cross-attention K/V from encoder output (b, se, d)."""
+    b, se, _ = enc_out.shape
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    e = enc_out.astype(compute_dtype)
+    k = (e @ p["wk"].astype(compute_dtype)).reshape(b, se, hkv, hd).swapaxes(1, 2)
+    v = (e @ p["wv"].astype(compute_dtype)).reshape(b, se, hkv, hd).swapaxes(1, 2)
+    return k, v

@@ -1,0 +1,189 @@
+"""Whisper-style encoder-decoder backbone (conv frontend stubbed).
+
+Per the assignment the audio frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (b, encoder_seq, d_model) — the output of
+whisper's two conv layers.  Everything downstream is faithful: LayerNorm
+(+bias) pre-norm blocks, GELU MLPs with biases, MHA (kv == q heads),
+sinusoidal positions, tied decoder embedding / lm head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention, layers as L
+from repro.models.config import ModelConfig
+
+
+def _ln_init(d, dtype):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def _mlp_bias_init(key, d, f, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": L.dense_init(k1, d, f, dtype), "b1": jnp.zeros((f,), dtype),
+        "w2": L.dense_init(k2, f, d, dtype), "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def _mlp_bias_apply(p, x, cdt):
+    x = x.astype(cdt)
+    h = jax.nn.gelu(x @ p["w1"].astype(cdt) + p["b1"].astype(cdt))
+    return h @ p["w2"].astype(cdt) + p["b2"].astype(cdt)
+
+
+def _ln(x, p, eps):
+    return L.layernorm(x, p["w"], p["b"], eps)
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1": _ln_init(d, dtype),
+        "attn": attention.init(k1, cfg, dtype=dtype),
+        "ln2": _ln_init(d, dtype),
+        "mlp": _mlp_bias_init(k2, d, cfg.d_ff, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1": _ln_init(d, dtype),
+        "self_attn": attention.init(k1, cfg, dtype=dtype),
+        "ln_x": _ln_init(d, dtype),
+        "cross_attn": attention.cross_init(k2, cfg, dtype=dtype),
+        "ln2": _ln_init(d, dtype),
+        "mlp": _mlp_bias_init(k3, d, cfg.d_ff, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    pdt = L.dtype_of(cfg.param_dtype)
+    ke, kd, kemb = jax.random.split(key, 3)
+    enc_keys = jax.random.split(ke, cfg.encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg, pdt))(enc_keys),
+        "enc_final_ln": _ln_init(cfg.d_model, pdt),
+        "embed": L.embed_init(kemb, cfg.vocab_size, cfg.d_model, pdt),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg, pdt))(dec_keys),
+        "dec_final_ln": _ln_init(cfg.d_model, pdt),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (b, se, d) stubbed conv output -> encoder states (b, se, d)."""
+    cdt = L.dtype_of(cfg.compute_dtype)
+    b, se, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (b, se))
+    x = frames.astype(cdt) + L.sinusoidal(pos, cfg.d_model).astype(cdt)
+
+    def body(x, p):
+        h = attention.apply(p["attn"], _ln(x, p["ln1"], cfg.norm_eps), cfg,
+                            causal=False, compute_dtype=cdt, rope=False)
+        x = x + h
+        x = x + _mlp_bias_apply(p["mlp"], _ln(x, p["ln2"], cfg.norm_eps), cdt)
+        return x, None
+
+    x, _ = lax.scan(body, x, params["enc_layers"])
+    return _ln(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+def decode_train(params, cfg: ModelConfig, tokens, enc_out):
+    """Teacher-forced decoder.  tokens: (b, s) -> hidden (b, s, d)."""
+    cdt = L.dtype_of(cfg.compute_dtype)
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"][tokens].astype(cdt)
+    x = x + L.sinusoidal(pos, cfg.d_model).astype(cdt)
+
+    def body(x, p):
+        h = attention.apply(p["self_attn"], _ln(x, p["ln1"], cfg.norm_eps),
+                            cfg, causal=True, compute_dtype=cdt, rope=False)
+        x = x + h
+        kv = attention.encoder_kv(p["cross_attn"], enc_out, cfg,
+                                  compute_dtype=cdt)
+        h = attention.cross_apply(p["cross_attn"],
+                                  _ln(x, p["ln_x"], cfg.norm_eps), kv, cfg,
+                                  compute_dtype=cdt)
+        x = x + h
+        x = x + _mlp_bias_apply(p["mlp"], _ln(x, p["ln2"], cfg.norm_eps), cdt)
+        return x, None
+
+    x, _ = lax.scan(body, x, params["dec_layers"])
+    return _ln(x, params["dec_final_ln"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    enc_out = encode(params, cfg, batch["frames"])
+    x = decode_train(params, cfg, batch["tokens"], enc_out)
+    cdt = L.dtype_of(cfg.compute_dtype)
+    loss = L.chunked_softmax_xent(x, params["embed"].T, batch["labels"],
+                                  batch["mask"], chunk=cfg.loss_chunk,
+                                  compute_dtype=cdt)
+    return loss, {"loss": loss}
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    enc_out = encode(params, cfg, batch["frames"])
+    x = decode_train(params, cfg, batch["tokens"], enc_out)
+    cdt = L.dtype_of(cfg.compute_dtype)
+    return L.logits_for(x[:, -1], params["embed"].T, cdt)
+
+
+# --------------------------------------------------------------------------
+# cached decode
+# --------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Self-attn KV stacked over decoder layers + per-layer cross KV."""
+    one = attention.init_cache(cfg, batch, max_len, dtype)
+    self_kv = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), one)
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    cross = (jnp.zeros((cfg.num_layers, batch, hkv, cfg.encoder_seq, hd), dtype),
+             jnp.zeros((cfg.num_layers, batch, hkv, cfg.encoder_seq, hd), dtype))
+    return {"self": self_kv, "cross": cross}
+
+
+def precompute_cross(params, cfg: ModelConfig, frames, dtype=jnp.bfloat16):
+    """Encoder pass + per-layer cross K/V (prefill side of serving)."""
+    enc_out = encode(params, cfg, frames)
+    cdt = L.dtype_of(cfg.compute_dtype)
+
+    def per_layer(p):
+        k, v = attention.encoder_kv(p, enc_out, cfg, compute_dtype=cdt)
+        return k.astype(dtype), v.astype(dtype)
+
+    return jax.vmap(per_layer, in_axes=0)(
+        params["dec_layers"]["cross_attn"])
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    cdt = L.dtype_of(cfg.compute_dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    x = params["embed"][token][:, None, :].astype(cdt)
+    x = x + L.sinusoidal(pos[None, None], cfg.d_model).astype(cdt)
+
+    def body(x, args):
+        p, c, (ck, cv) = args
+        h, c2 = attention.decode(p["self_attn"],
+                                 _ln(x, p["ln1"], cfg.norm_eps), c, pos, cfg,
+                                 compute_dtype=cdt, rope=False)
+        x = x + h
+        h = attention.cross_apply(p["cross_attn"],
+                                  _ln(x, p["ln_x"], cfg.norm_eps), (ck, cv),
+                                  cfg, compute_dtype=cdt)
+        x = x + h
+        x = x + _mlp_bias_apply(p["mlp"], _ln(x, p["ln2"], cfg.norm_eps), cdt)
+        return x, c2
+
+    x, new_self = lax.scan(body, x, (params["dec_layers"], cache["self"],
+                                     cache["cross"]))
+    x = _ln(x, params["dec_final_ln"], cfg.norm_eps)
+    logits = L.logits_for(x[:, 0], params["embed"].T, cdt)
+    return logits, {"self": new_self, "cross": cache["cross"]}

@@ -1,0 +1,289 @@
+"""Hybrid stacks: zamba2 (Mamba2 + shared attention) and xLSTM (mLSTM/sLSTM).
+
+zamba2: ``num_layers`` Mamba2 blocks; after every ``attn_every`` of them one
+SHARED-weight full transformer block (attention + MLP) runs — zamba2's
+signature trick: one set of attention weights, applied at many depths (13
+sites for 81 layers / every 6).  Each site keeps its OWN KV cache.  The
+stack is scanned over groups of (attn_every mamba + 1 shared-attn site);
+leftover mamba layers form a scanned tail.
+
+xLSTM: groups of ``slstm_every`` blocks, the last of each group an sLSTM
+(sequential scan), the rest mLSTM (chunk-parallel).  d_ff == 0: no MLPs —
+the xLSTM blocks carry the full capacity, per the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention, layers as L, ssm, xlstm
+from repro.models.config import ModelConfig
+
+
+# ==========================================================================
+# zamba2
+# ==========================================================================
+def _mamba_layer_init(key, cfg, dtype):
+    return {"ln": jnp.ones((cfg.d_model,), dtype),
+            "block": ssm.init(key, cfg, dtype)}
+
+
+def _shared_attn_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.ones((d,), dtype),
+        "attn": attention.init(k1, cfg, dtype=dtype),
+        "ln2": jnp.ones((d,), dtype),
+        "mlp": L.mlp_init(k2, d, cfg.d_ff, dtype),
+    }
+
+
+def _zamba_split(cfg):
+    g = cfg.attn_every
+    ng = cfg.num_layers // g
+    tail = cfg.num_layers - ng * g
+    return g, ng, tail
+
+
+def zamba_init(cfg: ModelConfig, key) -> dict:
+    pdt = L.dtype_of(cfg.param_dtype)
+    g, ng, tail = _zamba_split(cfg)
+    ke, kg, kt, ka, kh = jax.random.split(key, 5)
+    gkeys = jax.random.split(kg, ng * g).reshape(ng, g, 2)
+    params = {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model, pdt),
+        "groups": jax.vmap(jax.vmap(
+            lambda k: _mamba_layer_init(k, cfg, pdt)))(gkeys),
+        "shared_attn": _shared_attn_init(ka, cfg, pdt),
+        "final_norm": jnp.ones((cfg.d_model,), pdt),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab_size, pdt),
+    }
+    if tail:
+        tkeys = jax.random.split(kt, tail)
+        params["tail"] = jax.vmap(
+            lambda k: _mamba_layer_init(k, cfg, pdt))(tkeys)
+    return params
+
+
+def _shared_attn_apply(p, x, cfg, positions, cdt):
+    h = attention.apply(p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
+                        positions=positions, causal=True, compute_dtype=cdt)
+    x = x + h
+    return x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["ln2"], cfg.norm_eps), cdt)
+
+
+def zamba_forward(params, cfg: ModelConfig, tokens):
+    cdt = L.dtype_of(cfg.compute_dtype)
+    g, ng, tail = _zamba_split(cfg)
+    x = params["embed"][tokens].astype(cdt)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def mamba_apply(p, x):
+        return x + ssm.apply(p["block"], L.rmsnorm(x, p["ln"], cfg.norm_eps),
+                             cfg, compute_dtype=cdt)
+
+    def group_body(x, gp):
+        def m_body(x, p):
+            return mamba_apply(p, x), None
+        x, _ = lax.scan(m_body, x, gp)
+        x = _shared_attn_apply(params["shared_attn"], x, cfg, positions, cdt)
+        return x, None
+
+    x, _ = lax.scan(group_body, x, params["groups"])
+    if tail:
+        def t_body(x, p):
+            return mamba_apply(p, x), None
+        x, _ = lax.scan(t_body, x, params["tail"])
+    return L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def zamba_loss(params, cfg, batch):
+    x = zamba_forward(params, cfg, batch["tokens"])
+    cdt = L.dtype_of(cfg.compute_dtype)
+    loss = L.chunked_softmax_xent(x, params["lm_head"], batch["labels"],
+                                  batch["mask"], chunk=cfg.loss_chunk,
+                                  compute_dtype=cdt)
+    return loss, {"loss": loss}
+
+
+def zamba_prefill(params, cfg, batch):
+    x = zamba_forward(params, cfg, batch["tokens"])
+    cdt = L.dtype_of(cfg.compute_dtype)
+    return L.logits_for(x[:, -1], params["lm_head"], cdt)
+
+
+class ZambaCache(NamedTuple):
+    group_ssm: Any      # SsmState stacked (ng, g, ...)
+    tail_ssm: Any       # SsmState stacked (tail, ...) or None
+    attn: Any           # KVCache stacked (ng, ...)
+
+
+def zamba_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> ZambaCache:
+    g, ng, tail = _zamba_split(cfg)
+    one_ssm = ssm.init_state(cfg, batch)
+    one_kv = attention.init_cache(cfg, batch, max_len, dtype)
+    stack = lambda t, pre: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, pre + a.shape), t)
+    return ZambaCache(
+        group_ssm=stack(one_ssm, (ng, g)),
+        tail_ssm=stack(one_ssm, (tail,)) if tail else None,
+        attn=stack(one_kv, (ng,)),
+    )
+
+
+def zamba_decode(params, cfg: ModelConfig, cache: ZambaCache, token, pos):
+    cdt = L.dtype_of(cfg.compute_dtype)
+    g, ng, tail = _zamba_split(cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    x = params["embed"][token][:, None, :].astype(cdt)
+
+    def mamba_step(p, x, st):
+        h, st2 = ssm.decode(p["block"], L.rmsnorm(x, p["ln"], cfg.norm_eps),
+                            st, cfg, compute_dtype=cdt)
+        return x + h, st2
+
+    def group_body(x, args):
+        gp, gst, kv = args
+
+        def m_body(x, a):
+            p, st = a
+            return mamba_step(p, x, st)
+
+        x, gst2 = lax.scan(m_body, x, (gp, gst))
+        sa = params["shared_attn"]
+        h, kv2 = attention.decode(sa["attn"],
+                                  L.rmsnorm(x, sa["ln1"], cfg.norm_eps),
+                                  kv, pos, cfg, compute_dtype=cdt)
+        x = x + h
+        x = x + L.mlp_apply(sa["mlp"], L.rmsnorm(x, sa["ln2"], cfg.norm_eps),
+                            cdt)
+        return x, (gst2, kv2)
+
+    x, (gss, kvs) = lax.scan(group_body, x,
+                             (params["groups"], cache.group_ssm, cache.attn))
+    tss = cache.tail_ssm
+    if tail:
+        def t_body(x, a):
+            p, st = a
+            return mamba_step(p, x, st)
+        x, tss = lax.scan(t_body, x, (params["tail"], cache.tail_ssm))
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_for(x[:, 0], params["lm_head"], cdt)
+    return logits, ZambaCache(group_ssm=gss, tail_ssm=tss, attn=kvs)
+
+
+# ==========================================================================
+# xLSTM
+# ==========================================================================
+def _xlstm_split(cfg):
+    se = cfg.slstm_every
+    assert cfg.num_layers % se == 0, (cfg.num_layers, se)
+    return se, cfg.num_layers // se
+
+
+def xlstm_init(cfg: ModelConfig, key) -> dict:
+    pdt = L.dtype_of(cfg.param_dtype)
+    se, ng = _xlstm_split(cfg)
+    ke, km, ks, kh = jax.random.split(key, 4)
+    mkeys = jax.random.split(km, ng * (se - 1)).reshape(ng, se - 1, 2)
+    skeys = jax.random.split(ks, ng)
+    return {
+        "embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model, pdt),
+        "mlstm": jax.vmap(jax.vmap(lambda k: {
+            "ln": jnp.ones((cfg.d_model,), pdt),
+            "block": xlstm.mlstm_init(k, cfg, pdt)}))(mkeys),
+        "slstm": jax.vmap(lambda k: {
+            "ln": jnp.ones((cfg.d_model,), pdt),
+            "block": xlstm.slstm_init(k, cfg, pdt)})(skeys),
+        "final_norm": jnp.ones((cfg.d_model,), pdt),
+        "lm_head": L.dense_init(kh, cfg.d_model, cfg.vocab_size, pdt),
+    }
+
+
+def xlstm_forward(params, cfg: ModelConfig, tokens):
+    cdt = L.dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+
+    def group_body(x, gp):
+        def m_body(x, p):
+            h = xlstm.mlstm_apply(p["block"],
+                                  L.rmsnorm(x, p["ln"], cfg.norm_eps), cfg,
+                                  compute_dtype=cdt)
+            return x + h, None
+        x, _ = lax.scan(m_body, x, gp["m"])
+        sp = gp["s"]
+        x = x + xlstm.slstm_apply(sp["block"],
+                                  L.rmsnorm(x, sp["ln"], cfg.norm_eps), cfg,
+                                  compute_dtype=cdt)
+        return x, None
+
+    x, _ = lax.scan(group_body, x, {"m": params["mlstm"],
+                                    "s": params["slstm"]})
+    return L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def xlstm_loss(params, cfg, batch):
+    x = xlstm_forward(params, cfg, batch["tokens"])
+    cdt = L.dtype_of(cfg.compute_dtype)
+    loss = L.chunked_softmax_xent(x, params["lm_head"], batch["labels"],
+                                  batch["mask"], chunk=cfg.loss_chunk,
+                                  compute_dtype=cdt)
+    return loss, {"loss": loss}
+
+
+def xlstm_prefill(params, cfg, batch):
+    x = xlstm_forward(params, cfg, batch["tokens"])
+    cdt = L.dtype_of(cfg.compute_dtype)
+    return L.logits_for(x[:, -1], params["lm_head"], cdt)
+
+
+class XlstmCache(NamedTuple):
+    m: Any    # MlstmState stacked (ng, se-1, ...)
+    s: Any    # SlstmState stacked (ng, ...)
+
+
+def xlstm_init_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> XlstmCache:
+    se, ng = _xlstm_split(cfg)
+    stack = lambda t, pre: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, pre + a.shape), t)
+    return XlstmCache(
+        m=stack(xlstm.mlstm_state(cfg, batch), (ng, se - 1)),
+        s=stack(xlstm.slstm_state(cfg, batch), (ng,)),
+    )
+
+
+def xlstm_decode(params, cfg: ModelConfig, cache: XlstmCache, token, pos):
+    cdt = L.dtype_of(cfg.compute_dtype)
+    x = params["embed"][token][:, None, :].astype(cdt)
+
+    def group_body(x, args):
+        gp, gm, gs = args
+
+        def m_body(x, a):
+            p, st = a
+            h, st2 = xlstm.mlstm_decode(p["block"],
+                                        L.rmsnorm(x, p["ln"], cfg.norm_eps),
+                                        st, cfg, compute_dtype=cdt)
+            return x + h, st2
+
+        x, gm2 = lax.scan(m_body, x, (gp["m"], gm))
+        sp = gp["s"]
+        h, gs2 = xlstm.slstm_decode(sp["block"],
+                                    L.rmsnorm(x, sp["ln"], cfg.norm_eps),
+                                    gs, cfg, compute_dtype=cdt)
+        return x + h, (gm2, gs2)
+
+    x, (ms, ss) = lax.scan(group_body, x,
+                           ({"m": params["mlstm"], "s": params["slstm"]},
+                            cache.m, cache.s))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.logits_for(x[:, 0], params["lm_head"], cdt)
+    return logits, XlstmCache(m=ms, s=ss)

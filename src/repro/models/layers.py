@@ -1,0 +1,142 @@
+"""Shared neural-net primitives (pure JAX — no flax/optax in this container).
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every init
+function is shape-deterministic so ``jax.eval_shape`` over it yields the
+abstract parameter tree used by the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, *, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / math.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rmsnorm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# positions
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., seq, head_dim), positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal(positions, d_model: int):
+    """positions (..., s) -> (..., s, d) classic transformer sin/cos table."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU — llama/granite/qwen/mixtral family)
+# --------------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p, x, compute_dtype):
+    x = x.astype(compute_dtype)
+    g = x @ p["w_gate"].astype(compute_dtype)
+    u = x @ p["w_up"].astype(compute_dtype)
+    return (jax.nn.silu(g) * u) @ p["w_down"].astype(compute_dtype)
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+def chunked_softmax_xent(x, lm_head, labels, mask, *, chunk: int,
+                         compute_dtype):
+    """Cross-entropy WITHOUT materializing full (b, s, V) logits.
+
+    x: (b, s, d) final hidden states; lm_head: (d, V); labels/mask: (b, s).
+    Scans over sequence chunks; inside a chunk the logits exist only as a
+    (b, chunk, V) transient (vocab-sharded under pjit).  Returns mean nll.
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        s = s + pad
+    nchunk = s // chunk
+    xc = x.reshape(b, nchunk, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, nchunk, chunk).swapaxes(0, 1)
+    mc = mask.reshape(b, nchunk, chunk).swapaxes(0, 1)
+    w = lm_head.astype(compute_dtype)
+
+    def body(carry, args):
+        xi, li, mi = args
+        logits = (xi.astype(compute_dtype) @ w).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mi
+        return (carry[0] + nll.sum(), carry[1] + mi.sum()), None
+
+    (tot, cnt), _ = lax.scan(body, (jnp.zeros((), jnp.float32),
+                                    jnp.zeros((), jnp.float32)),
+                             (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def logits_for(x_last, lm_head, compute_dtype):
+    """Decode-path logits for the sampled position(s): (b, d) -> (b, V)."""
+    return (x_last.astype(compute_dtype)
+            @ lm_head.astype(compute_dtype)).astype(jnp.float32)

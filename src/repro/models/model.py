@@ -1,0 +1,158 @@
+"""Unified model API: build(config) -> Model, plus abstract input specs.
+
+``Model`` exposes exactly the four entry points the launcher lowers:
+  loss        training step objective       (train_* shapes)
+  prefill     full-sequence forward         (prefill_* shapes)
+  decode      one-token cached step         (decode_* / long_* shapes)
+  init_cache  cache constructor (used via eval_shape in the dry-run)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, transformer
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, dict], tuple]
+    prefill: Callable[[Any, dict], jax.Array]
+    decode: Callable[[Any, Any, jax.Array, jax.Array], tuple]
+    init_cache: Callable[..., Any]
+
+
+def build(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=functools.partial(_flip(transformer.init_params), cfg),
+            loss=functools.partial(_bind(transformer.loss_fn), cfg),
+            prefill=functools.partial(_bind(transformer.prefill), cfg),
+            decode=functools.partial(_bind2(transformer.decode_step), cfg),
+            init_cache=functools.partial(transformer.init_cache, cfg),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(_flip(encdec.init_params), cfg),
+            loss=functools.partial(_bind(encdec.loss_fn), cfg),
+            prefill=functools.partial(_bind(encdec.prefill), cfg),
+            decode=functools.partial(_bind2(encdec.decode_step), cfg),
+            init_cache=functools.partial(encdec.init_cache, cfg),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(_flip(hybrid.zamba_init), cfg),
+            loss=functools.partial(_bind(hybrid.zamba_loss), cfg),
+            prefill=functools.partial(_bind(hybrid.zamba_prefill), cfg),
+            decode=functools.partial(_bind2(hybrid.zamba_decode), cfg),
+            init_cache=functools.partial(hybrid.zamba_init_cache, cfg),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(_flip(hybrid.xlstm_init), cfg),
+            loss=functools.partial(_bind(hybrid.xlstm_loss), cfg),
+            prefill=functools.partial(_bind(hybrid.xlstm_prefill), cfg),
+            decode=functools.partial(_bind2(hybrid.xlstm_decode), cfg),
+            init_cache=functools.partial(hybrid.xlstm_init_cache, cfg),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def _flip(init_fn):
+    # init(cfg, key) -> init(cfg)(key)
+    return lambda cfg, key: init_fn(cfg, key)
+
+
+def _bind(fn):
+    # fn(params, cfg, batch) ordered as (cfg, params, batch)
+    return lambda cfg, params, batch: fn(params, cfg, batch)
+
+
+def _bind2(fn):
+    return lambda cfg, params, cache, token, pos: fn(params, cfg, cache,
+                                                     token, pos)
+
+
+# --------------------------------------------------------------------------
+# abstract inputs (the dry-run's ShapeDtypeStruct stand-ins)
+# --------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract batch for (arch x shape) — no device allocation.
+
+    train/prefill: token batch (+ stubbed modality embeddings);
+    decode: one new token + position (the KV cache spec comes separately
+    from ``cache_specs`` since it is carried state, not an input).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    S = jax.ShapeDtypeStruct
+
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": S((b, s), i32),
+            "labels": S((b, s), i32),
+            "mask": S((b, s), f32),
+        }
+        if cfg.family == "encdec":
+            specs["frames"] = S((b, cfg.encoder_seq, cfg.d_model), f32)
+        if cfg.family == "vlm" and cfg.num_patches:
+            specs["patches"] = S((b, cfg.num_patches, transformer.D_VISION),
+                                 f32)
+        if shape.kind == "prefill":
+            specs.pop("labels")
+            specs.pop("mask")
+        return specs
+
+    # decode: one token per sequence, scalar position
+    return {"token": S((b,), i32), "pos": S((), i32)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> Any:
+    """Abstract KV/state cache for decode shapes via eval_shape."""
+    model = build(cfg)
+    return jax.eval_shape(
+        functools.partial(model.init_cache, shape.global_batch,
+                          shape.seq_len, dtype))
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    """Abstract parameter tree (shapes only) via eval_shape."""
+    model = build(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+    specs = param_specs(cfg)
+    return sum(math.prod(p.shape) for p in jax.tree.leaves(specs))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active-per-token params (MoE: top_k + shared experts only)."""
+    total = param_count(cfg)
+    if not cfg.num_experts:
+        return total
+    specs = param_specs(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    inactive = 0
+    for path, p in flat:
+        keys = "/".join(str(k) for k in path)
+        if any(w in keys for w in ("w_gate", "w_up", "w_down")) \
+                and "moe" in keys and "shared" not in keys:
+            n = 1
+            for d in p.shape:
+                n *= d
+            inactive += n * (1 - cfg.top_k / cfg.num_experts)
+    return int(total - inactive)

@@ -1,0 +1,128 @@
+"""Capacity-based top-k Mixture-of-Experts (GShard-style groups, EP-sharded).
+
+Design notes (napkin math in EXPERIMENTS.md SSPerf):
+
+- Dense one-hot dispatch einsum (the textbook GShard formulation) builds a
+  (tokens, E, C) tensor — at llama4 scale (1M tokens x 128 experts) that is
+  O(10^13) elements.  Rejected.
+- A GLOBAL argsort over tokens x k assignments is O(T log T) memory-lean but
+  lowers to a cross-device sort (heavy all-to-all chains under GSPMD).
+  Rejected for the baseline.
+- Chosen: GROUPED dispatch.  Tokens are grouped by their data-parallel
+  shard (group = one sequence; decode: one group per batch row-block), the
+  position-in-expert cumsum and gather/scatter stay group-local (no
+  cross-device traffic), and only the expert einsum crosses the data/model
+  axes — XLA inserts the one unavoidable all-to-all there.
+
+Capacity C = ceil(S * k / E * capacity_factor) per group; overflow tokens
+are dropped (standard GShard semantics), underflow slots gather a zero row.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import partition
+
+
+def init(key, cfg, dtype=jnp.float32):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": L.dense_init(ks[0], d, e, jnp.float32),   # router in f32
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                   * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                 * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   / math.sqrt(f)).astype(dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = L.mlp_init(ks[4], d, cfg.d_ff, dtype)
+    return p
+
+
+def _dispatch_indices(sel, weights, e: int, cap: int):
+    """Group-local dispatch bookkeeping.
+
+    sel: (S, k) selected expert ids; weights: (S, k) router weights.
+    Returns (disp_idx (e*cap,) token index per slot with sentinel S,
+             slot_w (e*cap,) combine weight per slot).
+    """
+    s, k = sel.shape
+    e_flat = sel.reshape(-1)                                   # (S*k,)
+    w_flat = weights.reshape(-1)
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)        # (S*k, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot                  # rank+1 where sel
+    pos_in_e = pos.sum(axis=1) - 1                             # (S*k,)
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, e_flat * cap + pos_in_e, e * cap)   # overflow slot
+    token_of = jnp.arange(s * k, dtype=jnp.int32) // k
+    disp_idx = jnp.full((e * cap + 1,), s, jnp.int32).at[dest].set(token_of)
+    slot_w = jnp.zeros((e * cap + 1,), w_flat.dtype).at[dest].set(w_flat)
+    return disp_idx[:-1], slot_w[:-1]
+
+
+def apply(p, x, cfg, *, compute_dtype=jnp.bfloat16):
+    """x: (b, s, d) -> (b, s, d).  Groups = batch rows (data-sharded)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = max(1, math.ceil(s * k / e * cfg.capacity_factor))
+
+    logits = (x.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))               # (b, s, E)
+    weights, sel = jax.lax.top_k(logits, k)                    # (b, s, k)
+    weights = jax.nn.softmax(weights, axis=-1)                 # over selected
+
+    disp_idx, slot_w = jax.vmap(
+        lambda sl, w: _dispatch_indices(sl, w, e, cap))(sel, weights)
+    # disp_idx: (b, E*cap); slot_w: (b, E*cap)
+
+    x_pad = jnp.concatenate(
+        [x, jnp.zeros((b, 1, d), x.dtype)], axis=1)            # sentinel row
+    xe = jnp.take_along_axis(
+        x_pad, disp_idx[..., None], axis=1)                    # (b, E*cap, d)
+    xe = xe.reshape(b, e, cap, d).astype(compute_dtype)
+
+    # Expert FFN — the cross-axis einsum (tokens: data-sharded groups,
+    # experts: model-sharded weights); SwiGLU like the dense MLP.
+    # Explicit activation constraints pin GSPMD to the intended pattern:
+    # EP (experts on tensor axis) when divisible, else TP-within-expert
+    # (hidden f on the tensor axis) — mirroring _moe_in_spec.
+    #
+    # DECODE (s == 1): replicate the (tiny) token batch across the fsdp
+    # axis instead.  With batch data-sharded, GSPMD's only way to contract
+    # the fsdp-sharded d dim of the expert weights is to ALL-GATHER the
+    # weights (3 x 1.34 GB/layer/step measured on llama4) — replicated
+    # activations let it partial-sum locally and all-reduce the ~30 MB
+    # outputs instead (SSPerf hillclimb 2 follow-up).
+    ep = partition.expert_parallel_ok(e)
+    bspec = None if s == 1 else "batch"
+    xe = partition.constrain(xe, bspec, "tensor" if ep else None,
+                             None, None)
+    wg = p["w_gate"].astype(compute_dtype)
+    wu = p["w_up"].astype(compute_dtype)
+    wd = p["w_down"].astype(compute_dtype)
+    g = jnp.einsum("becd,edf->becf", xe, wg)
+    u = jnp.einsum("becd,edf->becf", xe, wu)
+    g = partition.constrain(g, bspec, "tensor" if ep else None, None,
+                            None if ep else "tensor")
+    u = partition.constrain(u, bspec, "tensor" if ep else None, None,
+                            None if ep else "tensor")
+    y = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, wd)   # (b, E, cap, d)
+    y = partition.constrain(y, bspec, "tensor" if ep else None, None,
+                            None)
+
+    y = (y.reshape(b, e * cap, d)
+         * slot_w[..., None].astype(compute_dtype))
+    out = jnp.zeros((b, s + 1, d), compute_dtype)
+    out = jax.vmap(lambda o, idx, vals: o.at[idx].add(vals))(
+        out, disp_idx, y)[:, :s]
+
+    if cfg.num_shared_experts:
+        out = out + L.mlp_apply(p["shared"], x, compute_dtype)
+    return out

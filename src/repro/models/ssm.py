@@ -1,0 +1,209 @@
+"""Mamba2 (SSD — state-space duality) block, chunked for TPU.
+
+Recurrence per head (scalar-identity A, Mamba2's choice):
+
+    h_t = a_t * h_{t-1} + dt_t * (B_t (x) x_t)        h: (N, P)
+    y_t = C_t . h_t + D * x_t                          a_t = exp(dt_t * A)
+
+Chunked computation (chunk length Q = cfg.ssm_chunk):
+  - intra-chunk: attention-like (Q, Q) lower-triangular score matmul
+  - inter-chunk: lax.scan carrying the (N, P) state per head
+
+The scan-over-chunks form is deliberate: vectorizing all chunks at once
+materializes b*s*Q*h score elements (terabytes at zamba2 train shapes —
+napkin math in EXPERIMENTS.md), while the scan keeps one chunk's (Q, Q)
+scores live at a time and the HLO compact.  The per-chunk body is also the
+natural target for a future Pallas SSD kernel (SSPerf candidate).
+
+Decode: single-step recurrence on (conv_state, ssm_state) — O(1) per token,
+which is why zamba2/xlstm run the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, h, p_dim, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n          # conv over [x, B, C] (n_groups = 1)
+    ks = jax.random.split(key, 6)
+    # in_proj -> [z (d_inner), x (d_inner), B (n), C (n), dt (h)]
+    out_w = d_inner * 2 + 2 * n + h
+    return {
+        "in_proj": L.dense_init(ks[0], d, out_w, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) / math.sqrt(cfg.ssm_conv)
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": L.dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+class SsmState(NamedTuple):
+    conv: jax.Array   # (b, K-1, conv_dim) last inputs for the causal conv
+    h: jax.Array      # (b, heads, N, P) ssm state
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32) -> SsmState:
+    d_inner, h, p_dim, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return SsmState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        h=jnp.zeros((batch, h, n, p_dim), jnp.float32),
+    )
+
+
+def _split_proj(proj, cfg):
+    d_inner, h, p_dim, n = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, prev=None):
+    """Depthwise causal conv, width K.  xbc: (b, s, c); prev: (b, K-1, c)."""
+    k = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([prev, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(k))
+    return jax.nn.silu(out + conv_b), xp[:, -(k - 1):]
+
+
+def _ssd_chunk_scan(xh, dt, a_log, b_in, c_in, h0, chunk: int):
+    """Chunked SSD.  xh: (b, s, h, p); dt: (b, s, h); b_in/c_in: (b, s, n).
+
+    Returns (y (b, s, h, p), h_final (b, h, n, p)).
+    """
+    b, s, nh, p_dim = xh.shape
+    n = b_in.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    a = -jnp.exp(a_log)                                  # (h,) negative
+    lg = dt * a                                          # (b, s, h) log-decay
+    # reshape into chunks, scan over chunk axis
+    def rc(t, extra=()):
+        return t.reshape((b, nc, q) + t.shape[2:]).swapaxes(0, 1)
+
+    xs = (rc(xh), rc(dt), rc(lg), rc(b_in), rc(c_in))
+
+    def body(h_prev, args):
+        xc, dtc, lgc, bc, cc = args                      # xc: (b, q, h, p)
+        cum = jnp.cumsum(lgc, axis=1)                    # (b, q, h) inclusive
+        total = cum[:, -1]                               # (b, h)
+        # --- intra-chunk (lower-triangular attention-like) ---
+        # scores[t, u] = C_t.B_u * exp(cum_t - cum_u) * dt_u   for u <= t
+        cb = jnp.einsum("btn,bun->btu", cc, bc)          # (b, q, q)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]  # (b, t, u, h)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        # mask BEFORE exp: upper-triangle log-decays are positive and would
+        # overflow to inf, poisoning the backward pass through where().
+        decay = jnp.where(tri[None, :, :, None], decay, -jnp.inf)
+        w = jnp.exp(decay)
+        scores = cb[..., None] * w * dtc[:, None, :, :]  # (b, t, u, h)
+        y_intra = jnp.einsum("btuh,buhp->bthp", scores, xh_f32(xc))
+        # --- inter-chunk: contribution of entering state ---
+        y_off = jnp.einsum("btn,bhnp,bth->bthp", cc, h_prev, jnp.exp(cum))
+        # --- state update: S = sum_u exp(total - cum_u) dt_u B_u (x) x_u ---
+        su = jnp.exp(total[:, None] - cum) * dtc         # (b, q, h)
+        s_new = jnp.einsum("bun,buh,buhp->bhnp", bc, su, xh_f32(xc))
+        h_new = jnp.exp(total)[:, :, None, None] * h_prev + s_new
+        return h_new, y_intra + y_off
+
+    h_fin, ys = lax.scan(body, h0, xs)                   # ys: (nc, b, q, h, p)
+    y = ys.swapaxes(0, 1).reshape(b, s, nh, p_dim)
+    return y, h_fin
+
+
+def xh_f32(x):
+    return x.astype(jnp.float32)
+
+
+def apply(p, x, cfg, *, compute_dtype=jnp.bfloat16):
+    """Full-sequence Mamba2 block.  x: (b, s, d) -> (b, s, d).
+
+    With ``kernels.ops`` in pallas/interpret mode the SSD scan and the
+    gate+norm tail run through the fused Pallas kernels (kernels/ssd.py,
+    kernels/gated_norm.py); the default ref mode keeps the pure-jnp path
+    the dry-run lowers.
+    """
+    from repro.kernels import ops
+    b, s, d = x.shape
+    d_inner, nh, p_dim, n = _dims(cfg)
+    proj = x.astype(compute_dtype) @ p["in_proj"].astype(compute_dtype)
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"].astype(compute_dtype),
+                          p["conv_b"].astype(compute_dtype))
+    xin, b_in, c_in = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b, s, h)
+    xh = xin.reshape(b, s, nh, p_dim)
+    if ops.get_mode() == "ref":
+        y, _ = _ssd_chunk_scan(xh, dt, p["a_log"], b_in.astype(jnp.float32),
+                               c_in.astype(jnp.float32),
+                               jnp.zeros((b, nh, n, p_dim), jnp.float32),
+                               cfg.ssm_chunk)
+    else:
+        # head-major flatten for the Pallas kernel: (b*h, s, p)
+        a = -jnp.exp(p["a_log"])                              # (h,)
+        x_k = xh.transpose(0, 2, 1, 3).reshape(b * nh, s, p_dim)
+        dt_k = dt.transpose(0, 2, 1).reshape(b * nh, s)
+        lg_k = (dt.transpose(0, 2, 1) * a[None, :, None]).reshape(b * nh, s)
+        y_k = ops.ssd_scan(x_k.astype(jnp.float32), dt_k, lg_k,
+                           b_in.astype(jnp.float32),
+                           c_in.astype(jnp.float32), heads=nh,
+                           chunk=min(cfg.ssm_chunk, s))
+        y = y_k.reshape(b, nh, s, p_dim).transpose(0, 2, 1, 3)
+    y = y + p["d_skip"][None, None, :, None] * xh_f32(xh)
+    y = y.reshape(b, s, d_inner)
+    if ops.get_mode() == "ref":
+        y = y.astype(compute_dtype) * jax.nn.silu(z)          # gate
+        y = L.rmsnorm(y, p["norm"], cfg.norm_eps)
+    else:
+        y = ops.gated_rmsnorm(y, z.astype(jnp.float32), p["norm"],
+                              eps=cfg.norm_eps).astype(compute_dtype)
+    return y.astype(compute_dtype) @ p["out_proj"].astype(compute_dtype)
+
+
+def decode(p, x, state: SsmState, cfg, *, compute_dtype=jnp.bfloat16):
+    """Single-token step.  x: (b, 1, d) -> (b, 1, d), new state."""
+    b = x.shape[0]
+    d_inner, nh, p_dim, n = _dims(cfg)
+    proj = x.astype(compute_dtype) @ p["in_proj"].astype(compute_dtype)
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc, conv_prev = _causal_conv(xbc, p["conv_w"].astype(compute_dtype),
+                                  p["conv_b"].astype(compute_dtype),
+                                  prev=state.conv.astype(compute_dtype))
+    xin, b_in, c_in = jnp.split(xbc[:, 0], [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b, h)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a)                               # (b, h)
+    xh = xin.reshape(b, nh, p_dim).astype(jnp.float32)
+    dbx = jnp.einsum("bn,bh,bhp->bhnp", b_in.astype(jnp.float32), dt, xh)
+    h_new = decay[:, :, None, None] * state.h + dbx
+    y = jnp.einsum("bn,bhnp->bhp", c_in.astype(jnp.float32), h_new)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, d_inner).astype(compute_dtype)
+    y = y * jax.nn.silu(z)
+    y = L.rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(compute_dtype), SsmState(
+        conv=conv_prev.astype(state.conv.dtype), h=h_new)

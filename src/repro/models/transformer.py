@@ -1,0 +1,258 @@
+"""Decoder-only transformer stack (dense / MoE / VLM families).
+
+Layers are scanned with stacked parameters (leading L axis) so the HLO is
+one layer long regardless of depth — mandatory for 40-80-layer dry-run
+compiles and the standard production trick (MaxText does the same).
+
+MoE models stack in "superblocks" of ``moe_every`` layers whose LAST layer
+is MoE (llama4: dense/MoE alternation with moe_every=2; mixtral:
+moe_every=1, all-MoE).  VLM (pixtral) prepends projected patch embeddings
+from the stubbed vision frontend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention, layers as L, moe
+from repro.models.config import ModelConfig
+
+D_VISION = 1024   # stubbed vision-frontend output width (pixtral)
+
+
+# --------------------------------------------------------------------------
+# layer init / apply
+# --------------------------------------------------------------------------
+def dense_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.ones((d,), dtype),
+        "attn": attention.init(k1, cfg, dtype=dtype),
+        "ln2": jnp.ones((d,), dtype),
+        "mlp": L.mlp_init(k2, d, cfg.d_ff, dtype),
+    }
+
+
+def moe_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.ones((d,), dtype),
+        "attn": attention.init(k1, cfg, dtype=dtype),
+        "ln2": jnp.ones((d,), dtype),
+        "moe": moe.init(k2, cfg, dtype=dtype),
+    }
+
+
+def _attn_block(p, x, cfg, positions, cdt):
+    h = attention.apply(p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg,
+                        positions=positions, causal=True, window=cfg.window,
+                        compute_dtype=cdt)
+    return x + h
+
+
+def dense_layer_apply(p, x, cfg, positions, cdt):
+    x = _attn_block(p, x, cfg, positions, cdt)
+    return x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["ln2"], cfg.norm_eps), cdt)
+
+
+def moe_layer_apply(p, x, cfg, positions, cdt):
+    x = _attn_block(p, x, cfg, positions, cdt)
+    return x + moe.apply(p["moe"], L.rmsnorm(x, p["ln2"], cfg.norm_eps), cfg,
+                         compute_dtype=cdt)
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+              if cfg.remat == "dots" else None)
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+# --------------------------------------------------------------------------
+# parameter tree
+# --------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key) -> dict:
+    pdt = L.dtype_of(cfg.param_dtype)
+    ke, kl, kh, kp = jax.random.split(key, 4)
+    params: dict = {"embed": L.embed_init(ke, cfg.vocab_size, cfg.d_model, pdt)}
+
+    if cfg.num_experts:
+        ns = cfg.num_layers // cfg.moe_every
+        nd = cfg.moe_every - 1
+        keys = jax.random.split(kl, ns * (nd + 1)).reshape(ns, nd + 1, 2)
+        if nd:
+            params["dense_layers"] = jax.vmap(jax.vmap(
+                lambda k: dense_layer_init(k, cfg, pdt)))(keys[:, :nd])
+        params["moe_layers"] = jax.vmap(
+            lambda k: moe_layer_init(k, cfg, pdt))(keys[:, nd])
+    else:
+        keys = jax.random.split(kl, cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda k: dense_layer_init(k, cfg, pdt))(keys)
+
+    params["final_norm"] = jnp.ones((cfg.d_model,), pdt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kh, cfg.d_model, cfg.vocab_size, pdt)
+    if cfg.num_patches:
+        params["patch_proj"] = L.dense_init(kp, D_VISION, cfg.d_model, pdt)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+def forward(params, cfg: ModelConfig, tokens, *, patches=None):
+    """tokens: (b, s) -> final hidden states (b, s_total, d)."""
+    cdt = L.dtype_of(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(cdt)
+    if cfg.num_patches:
+        assert patches is not None
+        xp = patches.astype(cdt) @ params["patch_proj"].astype(cdt)
+        x = jnp.concatenate([xp, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.positions == "sinusoidal":
+        x = x + L.sinusoidal(positions, cfg.d_model).astype(cdt)
+
+    if cfg.num_experts:
+        nd = cfg.moe_every - 1
+
+        def super_body(x, ps):
+            if nd:
+                def d_body(x, p):
+                    return _maybe_remat(
+                        lambda pp, xx: dense_layer_apply(pp, xx, cfg,
+                                                         positions, cdt),
+                        cfg)(p, x), None
+                x, _ = lax.scan(d_body, x, ps["dense"])
+            x = _maybe_remat(
+                lambda pp, xx: moe_layer_apply(pp, xx, cfg, positions, cdt),
+                cfg)(ps["moe"], x)
+            return x, None
+
+        stacked = {"moe": params["moe_layers"]}
+        if nd:
+            stacked["dense"] = params["dense_layers"]
+        x, _ = lax.scan(super_body, x, stacked)
+    else:
+        def body(x, p):
+            return _maybe_remat(
+                lambda pp, xx: dense_layer_apply(pp, xx, cfg, positions, cdt),
+                cfg)(p, x), None
+        x, _ = lax.scan(body, x, params["layers"])
+
+    return L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """batch: tokens (b,s), labels (b,s), mask (b,s) [, patches].
+
+    For VLM the loss covers the TEXT region only (hidden states sliced to
+    the last s positions).
+    """
+    x = forward(params, cfg, batch["tokens"], patches=batch.get("patches"))
+    s = batch["tokens"].shape[1]
+    x = x[:, -s:]
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    cdt = L.dtype_of(cfg.compute_dtype)
+    loss = L.chunked_softmax_xent(x, head, batch["labels"], batch["mask"],
+                                  chunk=cfg.loss_chunk, compute_dtype=cdt)
+    return loss, {"loss": loss}
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    """Prefill forward; returns last-position logits (b, V)."""
+    x = forward(params, cfg, batch["tokens"], patches=batch.get("patches"))
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    cdt = L.dtype_of(cfg.compute_dtype)
+    return L.logits_for(x[:, -1], head, cdt)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    one = attention.init_cache(cfg, batch, max_len, dtype)
+
+    def stack(shape_prefix):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, shape_prefix + a.shape), one)
+
+    if cfg.num_experts:
+        ns = cfg.num_layers // cfg.moe_every
+        nd = cfg.moe_every - 1
+        cache = {"moe": stack((ns,))}
+        if nd:
+            cache["dense"] = stack((ns, nd))
+        return cache
+    return stack((cfg.num_layers,))
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    """One-token decode.  token: (b,) int32; pos: scalar int32 position.
+
+    Returns (logits (b, V), new cache).
+    """
+    cdt = L.dtype_of(cfg.compute_dtype)
+    x = params["embed"][token][:, None, :].astype(cdt)     # (b, 1, d)
+    pos = jnp.asarray(pos, jnp.int32)
+    if cfg.positions == "sinusoidal":
+        x = x + L.sinusoidal(pos[None, None], cfg.d_model).astype(cdt)
+
+    def attn_step(p, x, c):
+        h, c2 = attention.decode(p["attn"],
+                                 L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                 c, pos, cfg, compute_dtype=cdt,
+                                 rope=cfg.positions == "rope",
+                                 window=cfg.window)
+        return x + h, c2
+
+    if cfg.num_experts:
+        nd = cfg.moe_every - 1
+
+        def super_body(x, args):
+            ps, cs = args
+            new_c = {}
+            if nd:
+                def d_body(x, a):
+                    p, c = a
+                    x, c2 = attn_step(p, x, c)
+                    x = x + L.mlp_apply(p["mlp"],
+                                        L.rmsnorm(x, p["ln2"], cfg.norm_eps),
+                                        cdt)
+                    return x, c2
+                x, new_c["dense"] = lax.scan(d_body, x,
+                                             (ps["dense"], cs["dense"]))
+            x, c2 = attn_step(ps["moe"], x, cs["moe"])
+            x = x + moe.apply(ps["moe"]["moe"],
+                              L.rmsnorm(x, ps["moe"]["ln2"], cfg.norm_eps),
+                              cfg, compute_dtype=cdt)
+            new_c["moe"] = c2
+            return x, new_c
+
+        stacked_p = {"moe": params["moe_layers"]}
+        stacked_c = {"moe": cache["moe"]}
+        if nd:
+            stacked_p["dense"] = params["dense_layers"]
+            stacked_c["dense"] = cache["dense"]
+        x, new_cache = lax.scan(super_body, x, (stacked_p, stacked_c))
+    else:
+        def body(x, args):
+            p, c = args
+            x, c2 = attn_step(p, x, c)
+            x = x + L.mlp_apply(p["mlp"],
+                                L.rmsnorm(x, p["ln2"], cfg.norm_eps), cdt)
+            return x, c2
+        x, new_cache = lax.scan(body, x, (params["layers"], cache))
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["lm_head"] if "lm_head" in params else params["embed"].T
+    return L.logits_for(x[:, 0], head, cdt), new_cache

@@ -1,0 +1,236 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) + sLSTM (scalar, scan).
+
+mLSTM is a gated linear-attention recurrence with exponential gating and a
+log-space stabilizer (Beck et al. 2024).  Training uses the chunkwise
+parallel form (same scan-over-chunks pattern as ssm.py — intra-chunk
+quadratic, inter-chunk carried state (C, n, m)); decode is the O(1)
+stabilized recurrence.
+
+sLSTM has recurrent (hidden-to-gate) weights -> strictly sequential; it runs
+as a ``lax.scan`` over time with block-diagonal per-head recurrent matrices.
+This is the honest adaptation: sLSTM is *not* parallelizable over time (the
+paper says as much), so the framework treats it as a scan layer and the
+xlstm-125m config keeps it to every 4th block.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+
+_EPS = 1e-6
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+def mlstm_init(key, cfg, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.num_heads
+    p_dim = d // h
+    ks = jax.random.split(key, 6)
+    return {
+        "wqkv": L.dense_init(ks[0], d, 3 * d, dtype),
+        "wif": L.dense_init(ks[1], d, 2 * h, jnp.float32, scale=0.01),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.asarray([3.0] * h, jnp.float32),   # open forget gates
+        "norm": jnp.ones((d,), dtype),
+        "wo": L.dense_init(ks[2], d, d, dtype),
+    }
+
+
+class MlstmState(NamedTuple):
+    c: jax.Array   # (b, h, p, p) matrix memory
+    n: jax.Array   # (b, h, p) normalizer
+    m: jax.Array   # (b, h) stabilizer
+
+
+def mlstm_state(cfg, batch: int) -> MlstmState:
+    h = cfg.num_heads
+    p_dim = cfg.d_model // h
+    return MlstmState(
+        c=jnp.zeros((batch, h, p_dim, p_dim), jnp.float32),
+        n=jnp.zeros((batch, h, p_dim), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+def _gates(p, x):
+    """log input / forget gates.  x: (b, s, d) -> (b, s, h) each."""
+    g = x.astype(jnp.float32) @ p["wif"]
+    li, lf = jnp.split(g, 2, axis=-1)
+    return li + p["b_i"], jax.nn.log_sigmoid(lf + p["b_f"])
+
+
+def _qkv(p, x, cfg, compute_dtype):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    p_dim = d // h
+    qkv = x.astype(compute_dtype) @ p["wqkv"].astype(compute_dtype)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    rs = lambda t: t.reshape(b, s, h, p_dim)
+    return rs(q), rs(k) / math.sqrt(p_dim), rs(v)
+
+
+def mlstm_apply(p, x, cfg, *, compute_dtype=jnp.bfloat16):
+    """Chunk-parallel mLSTM.  x: (b, s, d) -> (b, s, d)."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    p_dim = d // h
+    q, k, v = _qkv(p, x, cfg, compute_dtype)
+    li, lf = _gates(p, x)                                  # (b, s, h)
+    qc = min(cfg.ssm_chunk, s)
+    assert s % qc == 0, (s, qc)
+    nc = s // qc
+
+    rc = lambda t: t.reshape((b, nc, qc) + t.shape[2:]).swapaxes(0, 1)
+    xs = (rc(q.astype(jnp.float32)), rc(k.astype(jnp.float32)),
+          rc(v.astype(jnp.float32)), rc(li), rc(lf))
+    state0 = mlstm_state(cfg, b)
+
+    def body(st: MlstmState, args):
+        qx, kx, vx, lix, lfx = args                        # (b, qc, h, .)
+        f_cum = jnp.cumsum(lfx, axis=1)                    # inclusive
+        total = f_cum[:, -1]                               # (b, h)
+        # log-weight of source u at row t: F_t - F_u + li_u
+        src = lix - f_cum                                  # (b, qc, h)
+        g_cummax = lax.cummax(src, axis=1)                 # row-wise max helper
+        m_intra = f_cum + g_cummax
+        m_carry = st.m[:, None, :] + f_cum                 # (b, qc, h)
+        m_row = jnp.maximum(m_intra, m_carry)
+        # intra weights (b, t, u, h), masked lower-tri
+        lw = (f_cum[:, :, None, :] - f_cum[:, None, :, :]
+              + lix[:, None, :, :] - m_row[:, :, None, :])
+        tri = jnp.tril(jnp.ones((qc, qc), bool))
+        # mask in LOG space before exp (inf * 0 = nan in the backward pass)
+        lw = jnp.where(tri[None, :, :, None], lw, -jnp.inf)
+        w = jnp.exp(lw)
+        carry_w = jnp.exp(m_carry - m_row)                 # (b, qc, h)
+        # numerator and normalizer
+        qk = jnp.einsum("bthp,buhp->btuh", qx, kx)
+        y_num = jnp.einsum("btuh,buhp->bthp", qk * w, vx)
+        y_num = y_num + jnp.einsum("bthp,bhpj,bth->bthj", qx, st.c, carry_w)
+        n_row = (jnp.einsum("btuh,buhp->bthp", w, kx)
+                 + st.n[:, None] * carry_w[..., None])
+        denom = jnp.abs(jnp.einsum("bthp,bthp->bth", qx, n_row))
+        denom = jnp.maximum(denom, jnp.exp(-m_row)) + _EPS
+        y = y_num / denom[..., None]
+        # state update
+        m_new = jnp.maximum(st.m + total, total + jnp.max(src, axis=1))
+        upd_w = jnp.exp(total[:, None] - f_cum + lix - m_new[:, None])
+        c_new = (st.c * jnp.exp(st.m + total - m_new)[..., None, None]
+                 + jnp.einsum("buh,buhp,buhj->bhpj", upd_w, kx, vx))
+        n_new = (st.n * jnp.exp(st.m + total - m_new)[..., None]
+                 + jnp.einsum("buh,buhp->bhp", upd_w, kx))
+        return MlstmState(c=c_new, n=n_new, m=m_new), y
+
+    _, ys = lax.scan(body, state0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, d).astype(compute_dtype)
+    y = L.rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["wo"].astype(compute_dtype)
+
+
+def mlstm_decode(p, x, st: MlstmState, cfg, *, compute_dtype=jnp.bfloat16):
+    """O(1) stabilized step.  x: (b, 1, d)."""
+    b, _, d = x.shape
+    h = cfg.num_heads
+    p_dim = d // h
+    q, k, v = _qkv(p, x, cfg, compute_dtype)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))  # (b, h, p)
+    li, lf = _gates(p, x)
+    li, lf = li[:, 0], lf[:, 0]                            # (b, h)
+    m_new = jnp.maximum(lf + st.m, li)
+    fp = jnp.exp(lf + st.m - m_new)
+    ip = jnp.exp(li - m_new)
+    c = fp[..., None, None] * st.c + ip[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = fp[..., None] * st.n + ip[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n)),
+                        jnp.exp(-m_new)) + _EPS
+    y = jnp.einsum("bhp,bhpj->bhj", q, c) / denom[..., None]
+    y = y.reshape(b, 1, d).astype(compute_dtype)
+    y = L.rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["wo"].astype(compute_dtype), MlstmState(c=c, n=n, m=m_new)
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+def slstm_init(key, cfg, dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.num_heads
+    p_dim = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        # input projections for gates (z, i, f, o)
+        "wx": L.dense_init(ks[0], d, 4 * d, dtype),
+        # block-diagonal recurrent weights per head, per gate
+        "r": (jax.random.normal(ks[1], (4, h, p_dim, p_dim), jnp.float32)
+              / math.sqrt(p_dim)).astype(dtype),
+        "b": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                              jnp.full((d,), 3.0, jnp.float32),
+                              jnp.zeros((d,), jnp.float32)]),
+        "norm": jnp.ones((d,), dtype),
+        "wo": L.dense_init(ks[2], d, d, dtype),
+    }
+
+
+class SlstmState(NamedTuple):
+    c: jax.Array   # (b, d)
+    n: jax.Array   # (b, d)
+    h: jax.Array   # (b, d)
+    m: jax.Array   # (b, d)
+
+
+def slstm_state(cfg, batch: int) -> SlstmState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SlstmState(c=z, n=z, h=z, m=jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def _slstm_cell(p, xg, st: SlstmState, cfg):
+    """One time step.  xg: (b, 4d) precomputed input projection."""
+    b = xg.shape[0]
+    d, h = cfg.d_model, cfg.num_heads
+    p_dim = d // h
+    hh = st.h.reshape(b, h, p_dim)
+    rec = jnp.einsum("bhp,ghpj->gbhj", hh, p["r"].astype(jnp.float32))
+    rec = rec.reshape(4, b, d)
+    zi, ii, fi, oi = jnp.split(xg.astype(jnp.float32) + p["b"], 4, axis=-1)
+    z = jnp.tanh(zi + rec[0])
+    li = ii + rec[1]                                   # log input gate (exp)
+    lf = jax.nn.log_sigmoid(fi + rec[2])               # log forget gate
+    o = jax.nn.sigmoid(oi + rec[3])
+    m_new = jnp.maximum(lf + st.m, li)
+    fp = jnp.exp(lf + st.m - m_new)
+    ip = jnp.exp(li - m_new)
+    c = fp * st.c + ip * z
+    n = fp * st.n + ip
+    hout = o * c / jnp.maximum(n, _EPS)
+    return SlstmState(c=c, n=n, h=hout, m=m_new)
+
+
+def slstm_apply(p, x, cfg, *, compute_dtype=jnp.bfloat16):
+    """Sequential sLSTM over time.  x: (b, s, d) -> (b, s, d)."""
+    b, s, d = x.shape
+    xg = x.astype(compute_dtype) @ p["wx"].astype(compute_dtype)  # (b, s, 4d)
+
+    def body(st, xg_t):
+        st = _slstm_cell(p, xg_t, st, cfg)
+        return st, st.h
+
+    _, hs = lax.scan(body, slstm_state(cfg, b), xg.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(compute_dtype)        # (b, s, d)
+    y = L.rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["wo"].astype(compute_dtype)
+
+
+def slstm_decode(p, x, st: SlstmState, cfg, *, compute_dtype=jnp.bfloat16):
+    xg = (x.astype(compute_dtype) @ p["wx"].astype(compute_dtype))[:, 0]
+    st = _slstm_cell(p, xg, st, cfg)
+    y = st.h[:, None].astype(compute_dtype)
+    y = L.rmsnorm(y, p["norm"], cfg.norm_eps)
+    return y @ p["wo"].astype(compute_dtype), st

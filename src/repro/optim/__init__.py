@@ -1,0 +1,6 @@
+from repro.optim.adamw import adamw, AdamWState, Optimizer, global_norm
+from repro.optim import schedules, compression
+from repro.optim.newton_krylov import newton_krylov, NKState
+
+__all__ = ["adamw", "AdamWState", "Optimizer", "global_norm", "schedules",
+           "compression", "newton_krylov", "NKState"]

@@ -1,0 +1,84 @@
+"""AdamW with configurable moment dtype (pure JAX, pytree state).
+
+bf16 moments are the memory lever that lets the 400 B llama4 config fit
+256 x 16 GB HBM (see EXPERIMENTS.md SSDry-run napkin math): fp32 master
+params + bf16 m/v = 8 bytes/param instead of 12.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: any
+    v: any
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def adamw(lr: Callable | float, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          moment_dtype: str = "float32",
+          grad_clip: Optional[float] = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+    mdt = dtype_of(moment_dtype)
+
+    def init(params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state: AdamWState, params):
+        step = state.step + 1
+        lr_t = jnp.asarray(lr_fn(step), jnp.float32)
+
+        if grad_clip is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gnorm = jnp.zeros((), jnp.float32)
+
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr_t * delta
+            return newp.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step=step, m=new_m, v=new_v), \
+            {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init=init, update=update)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))

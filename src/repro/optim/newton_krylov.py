@@ -1,0 +1,78 @@
+"""Newton--Krylov optimizer: GMRES as the inner solver of LM training.
+
+This is where the paper's solver becomes a first-class training feature:
+each outer step solves the damped Gauss-Newton/Hessian system
+
+    (H + lambda I) p = -g        H v = jvp(grad L)(v)   (matrix-free)
+
+with restarted GMRES (core.gmres) on the FLATTENED parameter vector, then
+applies x <- x + p with a trust-region-ish damping update (Levenberg-
+Marquardt schedule).  Entirely matrix-free: memory = a few parameter-sized
+vectors + the (m+1, n) Krylov basis — choose small m (5-10).
+
+This is the standard deployment shape of Krylov methods in deep learning
+(Hessian-free optimization, Martens 2010), and it is architecture-agnostic:
+any ``loss(params, batch)`` works, which is how every assigned architecture
+exercises the paper's technique (DESIGN.md SS5).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core import gmres
+from repro.core.operators import FunctionOperator
+
+
+class NKState(NamedTuple):
+    step: jax.Array
+    damping: jax.Array
+
+
+def newton_krylov(loss_fn: Callable, *, m: int = 8, tol: float = 1e-3,
+                  max_restarts: int = 1, damping: float = 1.0,
+                  lr: float = 1.0):
+    """loss_fn(params, batch) -> scalar.  Returns (init, update)."""
+
+    def init(params) -> NKState:
+        del params
+        return NKState(step=jnp.zeros((), jnp.int32),
+                       damping=jnp.asarray(damping, jnp.float32))
+
+    def update(params, state: NKState, batch):
+        flat, unravel = ravel_pytree(params)
+        n = flat.shape[0]
+
+        def flat_loss(fp):
+            return loss_fn(unravel(fp), batch)
+
+        g = jax.grad(flat_loss)(flat)
+
+        def hvp(v, p):
+            return (jax.jvp(jax.grad(flat_loss), (p,), (v,))[1]
+                    + state.damping * v)
+
+        op = FunctionOperator(hvp, n, captures=(flat,))
+        res = gmres(op, -g, m=m, tol=tol, max_restarts=max_restarts,
+                    gs="cgs2")
+        new_flat = flat + lr * res.x
+
+        # Levenberg-Marquardt damping schedule on actual-vs-predicted
+        loss0 = flat_loss(flat)
+        loss1 = flat_loss(new_flat)
+        improved = loss1 < loss0
+        new_damping = jnp.where(improved, state.damping * 0.7,
+                                state.damping * 2.0)
+        new_flat = jnp.where(improved, new_flat, flat)
+        return unravel(new_flat), NKState(step=state.step + 1,
+                                          damping=new_damping), {
+            "loss": loss0, "loss_after": loss1,
+            "gmres_residual": res.residual,
+            "gmres_steps": res.inner_steps,
+            "damping": state.damping,
+        }
+
+    return init, update

@@ -1,0 +1,30 @@
+"""LR schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_warmup(peak: float, *, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else \
+            jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def inverse_sqrt(peak: float, *, warmup_steps: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        decay = peak * jnp.sqrt(warmup_steps / jnp.maximum(step, 1.0))
+        return jnp.where(step < warmup_steps, warm, decay)
+    return fn

@@ -1,0 +1,162 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), in SECONDS per step:
+
+    compute    = FLOPs_per_chip / peak_FLOPs_per_chip
+    memory     = HBM_bytes_per_chip / HBM_bandwidth
+    collective = sum over collective ops of ring-model time on the slowest
+                 axis the op spans (bytes x (g-1)/g / link_bw, x2 for
+                 all-reduce)
+
+FLOPs / bytes come from ``compiled.cost_analysis()`` (per-device: cost
+analysis runs on the SPMD-partitioned module).  Collective bytes are NOT in
+cost_analysis — we parse the optimized HLO text and sum operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+with replica_groups giving each op's group size.
+
+Hardware constants: TPU v5e — 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link
+ICI (we model ring collectives at 2 simultaneous link directions per chip:
+eff_bw = 2 x 45 GB/s usable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 45e9               # usable bytes/s per ICI link direction
+RING_LINKS = 2               # ring uses both directions of one axis
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of all array shapes appearing in a result type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    count: int = 1
+
+    def ring_seconds(self) -> float:
+        g = max(self.group_size, 2)
+        eff = (g - 1) / g
+        bw = LINK_BW * RING_LINKS
+        if self.kind == "all-reduce":
+            return 2 * self.result_bytes * eff / bw
+        if self.kind == "collective-permute":
+            return self.result_bytes / bw
+        # all-gather result bytes are the FULL gathered buffer; each chip
+        # receives (g-1)/g of it.  reduce-scatter/all-to-all move ~result.
+        return self.result_bytes * eff / bw
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    ops: dict[tuple, CollectiveOp] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\d]+)\s+"
+                     r"([\w\-]+)\(", s)
+        if not m:
+            continue
+        result_type, opname = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-start") or \
+                    opname.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            continue
+        rbytes = _shape_bytes(result_type)
+        gm = _GROUPS_RE.search(s)
+        if gm:
+            gsize = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(s)
+            gsize = int(gi.group(2)) if gi else 2
+        key = (kind, rbytes, gsize)
+        if key in ops:
+            ops[key].count += 1
+        else:
+            ops[key] = CollectiveOp(kind, rbytes, gsize)
+    return list(ops.values())
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float          # from cost_analysis (partitioned module)
+    hbm_bytes_per_chip: float
+    collective_bytes: float        # summed result bytes of collectives
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float             # 6 * N_active * D tokens (global)
+    useful_ratio: float            # model_flops / (flops_per_chip * chips)
+    bytes_per_device: Optional[float] = None   # memory_analysis if available
+    notes: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+
+def analyze(*, arch: str, shape: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, model_flops: float,
+            bytes_per_device: Optional[float] = None,
+            notes: str = "") -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collectives(hlo_text)
+    coll_bytes = sum(c.result_bytes * c.count for c in colls)
+    coll_s = sum(c.ring_seconds() * c.count for c in colls)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / max(flops * chips, 1.0)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, hbm_bytes_per_chip=hbm,
+        collective_bytes=coll_bytes, compute_s=compute_s, memory_s=memory_s,
+        collective_s=coll_s, bottleneck=bottleneck, model_flops=model_flops,
+        useful_ratio=useful, bytes_per_device=bytes_per_device, notes=notes)
+
+
+def model_flops_for(cfg, shape, n_active: int) -> float:
+    """6*N*D for train (fwd+bwd), 2*N*D for inference shapes."""
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens

@@ -1,0 +1,5 @@
+from repro.runtime.fault_tolerance import Runner, RunnerConfig, StragglerMonitor
+from repro.runtime.elastic import plan, make_mesh_from_plan, ElasticPlan
+
+__all__ = ["Runner", "RunnerConfig", "StragglerMonitor", "plan",
+           "make_mesh_from_plan", "ElasticPlan"]

@@ -1,0 +1,69 @@
+"""Elastic mesh policy: rebuild a valid (data, model) mesh from survivors.
+
+Invariants on failure:
+  - the MODEL axis degree is preserved (TP/EP change the numerics layout;
+    re-sharding a 16-way-TP checkpoint to 12-way mid-run is a migration,
+    not a restart)
+  - the DATA (and POD) axes shrink to the largest size the surviving
+    device count supports; global batch is preserved by increasing the
+    per-device batch (grad accumulation hook) or, if configured, scaled
+    down with the LR (linear scaling rule)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple
+    axis_names: tuple
+    global_batch: int
+    grad_accum: int
+    lr_scale: float
+
+
+def plan(n_devices: int, *, model_parallel: int, global_batch: int,
+         want_pods: int = 1, keep_global_batch: bool = True) -> ElasticPlan:
+    """Largest legal mesh for ``n_devices`` with a fixed model axis."""
+    if n_devices % model_parallel:
+        raise ValueError(
+            f"{n_devices} devices cannot host model_parallel={model_parallel}")
+    rest = n_devices // model_parallel
+    pods = want_pods
+    while pods > 1 and rest % pods:
+        pods -= 1
+    data = rest // pods
+
+    # keep the global batch by accumulating when DP shrank
+    full_dp = data * pods
+    accum = 1
+    lr_scale = 1.0
+    if keep_global_batch:
+        while global_batch % (full_dp * accum) and accum < 64:
+            accum += 1
+        if global_batch % (full_dp * accum):
+            # fall back: shrink batch + linear LR scaling
+            new_batch = (global_batch // full_dp) * full_dp
+            lr_scale = new_batch / global_batch
+            global_batch = new_batch
+            accum = 1
+    if pods > 1:
+        return ElasticPlan((pods, data, model_parallel),
+                           ("pod", "data", "model"), global_batch, accum,
+                           lr_scale)
+    return ElasticPlan((data, model_parallel), ("data", "model"),
+                       global_batch, accum, lr_scale)
+
+
+def make_mesh_from_plan(p: ElasticPlan, devices: Optional[Sequence] = None):
+    if devices is None:
+        devices = jax.devices()
+    n = 1
+    for s in p.mesh_shape:
+        n *= s
+    return jax.make_mesh(p.mesh_shape, p.axis_names,
+                         devices=list(devices)[:n])

@@ -1,0 +1,6 @@
+from repro.sharding.partition import (param_shardings, cache_shardings,
+                                      batch_shardings, batch_axes_for,
+                                      replicated)
+
+__all__ = ["param_shardings", "cache_shardings", "batch_shardings",
+           "batch_axes_for", "replicated"]

@@ -1,0 +1,55 @@
+"""The multi-pod dry-run path, end-to-end, in a subprocess (512 fake
+
+devices; the flag must precede jax init, hence not in-process).  One small
+cell per mesh keeps it CI-fast while guarding the whole lowering stack:
+configs -> input_specs -> shardings -> jit -> lower -> compile -> roofline.
+"""
+import json
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(args):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)      # dryrun.py sets its own
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    return out.stdout
+
+
+def test_dryrun_cell_single_pod(tmp_path):
+    out_file = str(tmp_path / "cell.jsonl")
+    _run(["--arch", "xlstm-125m", "--shape", "decode_32k",
+          "--out", out_file])
+    rec = json.loads(open(out_file).read().strip())
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    rf = rec["roofline"]
+    assert rf["flops_per_chip"] > 0
+    assert rf["bottleneck"] in ("compute", "memory", "collective")
+    assert rec["memory_analysis"]["output_size_in_bytes"] > 0
+
+
+def test_dryrun_cell_multi_pod(tmp_path):
+    out_file = str(tmp_path / "cell.jsonl")
+    _run(["--arch", "xlstm-125m", "--shape", "decode_32k", "--multi-pod",
+          "--out", out_file])
+    rec = json.loads(open(out_file).read().strip())
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 512
+    assert rec["mesh"] == "2x16x16"
+
+
+def test_dryrun_skip_reason(tmp_path):
+    out_file = str(tmp_path / "cell.jsonl")
+    _run(["--arch", "tinyllama-1.1b", "--shape", "long_500k",
+          "--out", out_file])
+    rec = json.loads(open(out_file).read().strip())
+    assert rec["status"] == "skipped"
+    assert "full-attention" in rec["reason"]

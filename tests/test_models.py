@@ -1,0 +1,215 @@
+"""Per-arch smoke tests (REDUCED configs): one train step + decode on CPU,
+
+output shapes + finiteness, and prefill/decode cache consistency.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build, param_count
+from repro.models.transformer import D_VISION
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    ks = jax.random.split(KEY, 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (b, s), 2, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (b, s), 2, cfg.vocab_size),
+        "mask": jnp.ones((b, s), jnp.float32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(ks[2], (b, cfg.encoder_seq,
+                                                    cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(ks[2], (b, cfg.num_patches,
+                                                     D_VISION))
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_train_step(arch):
+    """Reduced config: loss + grads finite, params update."""
+    cfg = configs.get(arch).reduced()
+    model = build(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.jit(jax.value_and_grad(
+        model.loss, has_aux=True))(params, batch)
+    assert jnp.isfinite(loss), (arch, loss)
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = configs.get(arch).reduced()
+    model = build(cfg)
+    params = model.init(KEY)
+    b = 2
+    cache = model.init_cache(b, 16)
+    tok = jnp.array([3, 5], jnp.int32)
+    logits, cache2 = jax.jit(model.decode)(params, cache, tok, jnp.int32(0))
+    assert logits.shape == (b, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), arch
+    # cache actually changed
+    diff = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                     - b_.astype(jnp.float32))))
+               for a, b_ in zip(jax.tree.leaves(cache),
+                                jax.tree.leaves(cache2)))
+    assert diff > 0, arch
+
+
+@pytest.mark.parametrize("arch", ["tinyllama_1_1b", "mixtral_8x22b",
+                                  "zamba2_7b", "xlstm_125m",
+                                  "whisper_small", "pixtral_12b"])
+def test_prefill_decode_consistency(arch):
+    """Teacher-forced step-by-step decode == full forward at last position.
+
+    This is the strongest cache-path test: every family's cache semantics
+    (full KV, ring KV, SSM state, mLSTM/sLSTM state, cross-attn) must
+    reproduce the parallel forward exactly.
+
+    MoE archs run with ample expert capacity: GShard capacity DROPS are
+    grouping-dependent by design (prefill groups a whole sequence, decode
+    groups one token), so equality only holds when nothing is dropped.
+    """
+    import dataclasses
+    cfg = configs.get(arch).reduced()
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = build(cfg)
+    params = model.init(KEY)
+    b, s = 2, 12
+    batch = _batch(cfg, b=b, s=s)
+    want = model.prefill(params, batch)            # (b, V) logits at s-1
+
+    cache = model.init_cache(b, s)
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        cross = encdec.precompute_cross(params, cfg, batch["frames"])
+        cache = {"self": cache["self"], "cross": cross}
+    decode = jax.jit(model.decode)
+    if cfg.family == "vlm":
+        # patch positions occupy the cache first: feed patches via prefill
+        # path is exercised separately; skip token-level replay for vlm.
+        logits, _ = decode(params, cache, batch["tokens"][:, 0], jnp.int32(0))
+        assert bool(jnp.isfinite(logits).all())
+        return
+    got = None
+    for i in range(s):
+        got, cache = decode(params, cache, batch["tokens"][:, i],
+                            jnp.int32(i))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_sliding_window_ring_cache():
+    """Ring cache (slots = window) must equal full attention w/ window."""
+    import dataclasses
+    cfg = dataclasses.replace(configs.get("mixtral_8x22b").reduced(),
+                              capacity_factor=8.0)
+    assert cfg.window == 32
+    model = build(cfg)
+    params = model.init(KEY)
+    b, s = 1, 48                       # s > window -> ring wraps
+    batch = _batch(cfg, b=b, s=s)
+    want = model.prefill(params, batch)
+    cache = model.init_cache(b, s)     # slots = min(s, window) = 32
+    k_slots = jax.tree.leaves(cache)[0].shape
+    got = None
+    decode = jax.jit(model.decode)
+    for i in range(s):
+        got, cache = decode(params, cache, batch["tokens"][:, i],
+                            jnp.int32(i))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_kv_quant_decode_close_to_fp():
+    """int8 KV cache replay stays within ~2% of the fp prefill logits."""
+    import dataclasses
+    cfg0 = configs.get("tinyllama_1_1b").reduced()
+    cfgq = dataclasses.replace(cfg0, kv_quant=True)
+    m0, mq = build(cfg0), build(cfgq)
+    params = m0.init(KEY)
+    b, s = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 2,
+                              cfg0.vocab_size)
+    want = m0.prefill(params, {"tokens": toks})
+    cache = mq.init_cache(b, s)
+    assert jax.tree.leaves(cache)[0].dtype == jnp.int8
+    dec = jax.jit(mq.decode)
+    got = None
+    for i in range(s):
+        got, cache = dec(params, cache, toks[:, i], jnp.int32(i))
+    rel = float(jnp.max(jnp.abs(got - want))) / \
+        float(jnp.max(jnp.abs(want)))
+    assert rel < 0.05, rel
+
+
+def test_param_counts_match_published():
+    expected = {
+        "tinyllama_1_1b": 1.10e9,
+        "granite_3_8b": 8.4e9,
+        "qwen2_7b": 7.6e9,
+        "mixtral_8x22b": 141e9,
+        "llama4_maverick_400b_a17b": 398e9,
+        "pixtral_12b": 12.2e9,
+        "whisper_small": 0.24e9,
+        "xlstm_125m": 0.11e9,
+    }
+    for arch, want in expected.items():
+        got = param_count(configs.get(arch))
+        assert abs(got - want) / want < 0.08, (arch, got, want)
+
+
+def test_moe_capacity_and_router():
+    """MoE invariants: combine weights sum to <=1, capacity drops work."""
+    from repro.models import moe as moe_mod
+    cfg = configs.get("mixtral_8x22b").reduced()
+    p = moe_mod.init(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y = moe_mod.apply(p, x, cfg, compute_dtype=jnp.float32)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    # capacity 0.01 -> nearly everything dropped -> much smaller output
+    import dataclasses
+    tight = dataclasses.replace(cfg, capacity_factor=1e-6)
+    y2 = moe_mod.apply(p, x, tight, compute_dtype=jnp.float32)
+    assert float(jnp.abs(y2).sum()) < float(jnp.abs(y).sum())
+
+
+def test_moe_matches_dense_expert_computation():
+    """With ample capacity, the gather/scatter path == explicit per-token
+    expert evaluation."""
+    import dataclasses
+    from repro.models import moe as moe_mod
+    cfg = dataclasses.replace(configs.get("mixtral_8x22b").reduced(),
+                              capacity_factor=8.0)
+    p = moe_mod.init(KEY, cfg)
+    b, s, d = 1, 8, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, s, d))
+    got = moe_mod.apply(p, x, cfg, compute_dtype=jnp.float32)
+
+    # oracle: loop tokens, run top-k experts densely
+    logits = x.astype(jnp.float32) @ p["router"]
+    w, sel = jax.lax.top_k(logits, cfg.top_k)
+    w = jax.nn.softmax(w, axis=-1)
+    want = np.zeros((b, s, d), np.float32)
+    for bi in range(b):
+        for si in range(s):
+            for ki in range(cfg.top_k):
+                e = int(sel[bi, si, ki])
+                xe = x[bi, si].astype(jnp.float32)
+                g = xe @ p["w_gate"][e]
+                u = xe @ p["w_up"][e]
+                y = (jax.nn.silu(g) * u) @ p["w_down"][e]
+                want[bi, si] += float(w[bi, si, ki]) * np.asarray(y)
+    if cfg.num_shared_experts:
+        from repro.models import layers as L
+        want += np.asarray(L.mlp_apply(p["shared"], x, jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)

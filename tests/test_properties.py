@@ -1,0 +1,96 @@
+"""Hypothesis property tests on the solver's numerical invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import arnoldi, givens
+from repro.core.gmres import gmres
+from repro.core.operators import random_diagdom
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 64),
+       m=st.integers(2, 8))
+def test_arnoldi_basis_orthonormal(seed, n, m):
+    """After j steps of CGS2 the basis rows are orthonormal."""
+    key = jax.random.PRNGKey(seed)
+    a = random_diagdom(key, n)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (n,))
+    m = min(m, n - 1)
+    v = jnp.zeros((m + 1, n)).at[0].set(b / jnp.linalg.norm(b))
+    for j in range(m):
+        stp = arnoldi.cgs2_step(v, a @ v[j], j)
+        v = v.at[j + 1].set(stp.v_next)
+    gram = np.asarray(v @ v.T)
+    np.testing.assert_allclose(gram, np.eye(m + 1), atol=5e-4)
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(8, 48))
+def test_arnoldi_relation(seed, n):
+    """A V_m^T = V_{m+1}^T H~_m (the defining Arnoldi identity)."""
+    m = 5
+    key = jax.random.PRNGKey(seed)
+    a = random_diagdom(key, n)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (n,))
+    v = jnp.zeros((m + 1, n)).at[0].set(b / jnp.linalg.norm(b))
+    h = np.zeros((m + 1, m), np.float32)
+    for j in range(m):
+        stp = arnoldi.cgs2_step(v, a @ v[j], j)
+        v = v.at[j + 1].set(stp.v_next)
+        h[:, j] = np.asarray(stp.h)
+    lhs = np.asarray(a @ v[:m].T)             # (n, m)
+    rhs = np.asarray(v.T) @ h                 # (n, m)
+    scale = max(1.0, float(np.abs(lhs).max()))
+    np.testing.assert_allclose(lhs / scale, rhs / scale, atol=5e-4)
+
+
+@given(seed=st.integers(0, 10_000), m=st.integers(1, 12))
+def test_givens_matches_lstsq(seed, m):
+    """Incremental Givens LS == numpy lstsq on a random Hessenberg system."""
+    rng = np.random.default_rng(seed)
+    h = np.triu(rng.normal(size=(m + 1, m)), -1).astype(np.float32)
+    for j in range(m):   # diagonal boost keeps the system well-conditioned
+        h[j, j] += 3.0 * np.sign(h[j, j]) if h[j, j] != 0 else 3.0
+    beta = float(rng.normal()) + 5.0
+
+    st_g = givens.init(m, jnp.asarray(beta))
+    for j in range(m):
+        col = jnp.zeros((m + 1,)).at[:j + 2].set(h[:j + 2, j])
+        st_g = givens.update(st_g, col, j, active=jnp.asarray(True))
+    y = np.asarray(givens.solve(st_g))
+
+    e1 = np.zeros(m + 1, np.float32)
+    e1[0] = beta
+    y_ref, *_ = np.linalg.lstsq(h, e1, rcond=None)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-3, atol=2e-3)
+    # residual estimate matches true LS residual
+    resid_est = float(np.abs(np.asarray(st_g.g)[m]))
+    resid_true = float(np.linalg.norm(h @ y_ref - e1))
+    np.testing.assert_allclose(resid_est, resid_true, rtol=5e-2, atol=5e-3)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_gmres_residual_reported_is_true(seed):
+    """Reported residual == ||b - Ax|| recomputed (no estimate drift)."""
+    key = jax.random.PRNGKey(seed)
+    a = random_diagdom(key, 48)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (48,))
+    res = gmres(a, b, m=10, tol=1e-4, max_restarts=50)
+    true = float(jnp.linalg.norm(b - a @ res.x))
+    np.testing.assert_allclose(float(res.residual), true,
+                               rtol=1e-4, atol=1e-6)
+
+
+@given(seed=st.integers(0, 10_000), scale=st.floats(1e-3, 1e3))
+def test_gmres_scale_invariance(seed, scale):
+    """x(c*A, c*b) == x(A, b): relative-tolerance solves are scale-free."""
+    key = jax.random.PRNGKey(seed)
+    a = random_diagdom(key, 32)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (32,))
+    r1 = gmres(a, b, m=16, tol=1e-5)
+    r2 = gmres(a * scale, b * scale, m=16, tol=1e-5)
+    np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r2.x),
+                               rtol=5e-3, atol=5e-4)
