@@ -22,11 +22,11 @@ _CODE = textwrap.dedent("""
     import json, time
     import jax, jax.numpy as jnp
     from repro.core import gmres, gmres_sharded, operators
+    from repro.compat import make_mesh
     from repro.roofline import parse_collectives
 
     out = []
-    mesh = jax.make_mesh((8,), ('model',),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ('model',))
     for n in (2048, 8192):
         a = operators.random_diagdom(jax.random.PRNGKey(0), n)
         b = jax.random.normal(jax.random.PRNGKey(1), (n,))

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
 from repro.core import gmres, gmres_sharded, operators, strategies
 
 
@@ -40,8 +41,7 @@ def main():
 
     # -- 3. distributed solve over the host mesh --------------------------
     ndev = len(jax.devices())
-    mesh = jax.make_mesh((ndev,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((ndev,), ("model",))
     res_d = gmres_sharded(mesh, "model", a[:1024, :1024], b[:1024],
                           m=30, tol=1e-6)
     print(f"[3] sharded over {ndev} device(s): converged="

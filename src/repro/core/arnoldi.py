@@ -1,6 +1,6 @@
 """Arnoldi iteration step: builds the Krylov basis one vector at a time.
 
-Three orthogonalization schemes:
+Four orthogonalization schemes:
 
 - ``cgs``  — classical Gram-Schmidt, the scheme in the paper's listing
              (lines 3-4): h_i = (A v_j, v_i) for all i, then one update.
@@ -11,6 +11,14 @@ Three orthogonalization schemes:
              level-2 / MXU work and exactly TWO collective rounds when the
              basis is row-sharded, vs. j rounds for MGS.  Stability is
              equivalent to MGS-with-reorth (Giraud, Langou, Rozloznik 2005).
+- ``cgs2_fused`` — the same CGS2 arithmetic executed by the fused Pallas
+             kernel (``kernels/cgs2.py``): projection and update share one
+             grid, h never round-trips to HBM.  Compiled on TPU,
+             interpreted on CPU, and automatically the plain ``cgs2``
+             reference when Pallas is unavailable or the basis is
+             row-sharded (the kernel is per-shard; the h psum must sit
+             between projection and update, which only the unfused
+             reference exposes).
 
 The basis ``V`` is stored **row-major (m+1, n)** — basis vector j is row j —
 so dynamic-index writes are contiguous and ``V @ w`` is a single GEMV.
@@ -87,7 +95,37 @@ def mgs_step(v_basis, w, j, axis_name=None) -> ArnoldiStep:
     return _finalize(w, h, j, axis_name)
 
 
-def _finalize(w, h, j, axis_name) -> ArnoldiStep:
+def cgs2_fused_step(v_basis, w, j, axis_name=None) -> ArnoldiStep:
+    """CGS2 via the fused Pallas kernel (kernels/cgs2.py).
+
+    The kernel fuses projection and update per pass, so a row-sharded solve
+    (``axis_name`` set) cannot insert the h psum between them — that case,
+    and backends without Pallas support, fall back to the psum-correct jnp
+    reference.  On CPU the kernel runs in interpret mode (what CI tests).
+    """
+    from repro.kernels import tuning
+
+    mode = tuning.kernel_mode()
+    if axis_name is not None or mode == "ref":
+        return cgs2_step(v_basis, w, j, axis_name)
+
+    from repro.kernels import cgs2 as cgs2_k
+
+    m1, n = v_basis.shape
+    mask = _row_mask(m1, j, jnp.float32)
+    bn = tuning.choose_gs_block(m1, n, jnp.dtype(v_basis.dtype).name)
+    h, w2 = cgs2_k.cgs2(v_basis, w, mask, block_n=bn,
+                        interpret=mode == "interpret")
+    return finalize(w2.astype(w.dtype), h.astype(w.dtype), j, axis_name)
+
+
+def finalize(w, h, j, axis_name=None) -> ArnoldiStep:
+    """Normalize the orthogonalized w and record the h[j+1] breakdown probe.
+
+    Shared epilogue of every scheme — and the re-entry point for the fused
+    Arnoldi-step kernel (core/gmres.py), which produces (w, h) in one
+    ``pallas_call`` and hands the norm/psum back to this layer.
+    """
     h_last = norm(w, axis_name)
     eps = jnp.asarray(jnp.finfo(w.dtype).tiny ** 0.5, w.dtype)
     v_next = w / jnp.maximum(h_last, eps)  # breakdown-guarded
@@ -95,7 +133,10 @@ def _finalize(w, h, j, axis_name) -> ArnoldiStep:
     return ArnoldiStep(v_next=v_next, h=h, h_last=h_last)
 
 
-_SCHEMES: dict = {"cgs": cgs_step, "cgs2": cgs2_step, "mgs": mgs_step}
+_finalize = finalize  # internal alias (pre-existing call sites)
+
+_SCHEMES: dict = {"cgs": cgs_step, "cgs2": cgs2_step, "mgs": mgs_step,
+                  "cgs2_fused": cgs2_fused_step}
 
 
 def step(scheme: str) -> Callable:

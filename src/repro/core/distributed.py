@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.core.gmres import gmres, GmresResult
 
 
@@ -102,7 +103,7 @@ def gmres_sharded(
     out_specs = GmresResult(
         x=P(), residual=P(), restarts=P(), converged=P(), inner_steps=P()
     )
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         solve_local,
         mesh=mesh,
         in_specs=(spec_a, spec_b),

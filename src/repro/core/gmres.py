@@ -14,6 +14,14 @@ the ``gpuR``/vcl "everything device-resident" strategy from the paper, taken
 to its logical conclusion: not a single scalar leaves the device between
 restarts.
 
+The hot loop is kernel-backed: with ``gs="fused"`` and a dense operator the
+whole Arnoldi step (mat-vec + CGS2) is ONE ``pallas_call``
+(kernels/arnoldi_fused.py) with w and h resident in VMEM; ``gs="cgs2_fused"``
+runs the streaming fused Gram-Schmidt kernel (kernels/cgs2.py); and
+``DenseOperator(backend="pallas")`` routes every mat-vec through the tiled
+kernel (kernels/matvec.py).  Each path degrades gracefully — interpret mode
+on CPU, jnp reference where Pallas is unavailable or shapes don't fit VMEM.
+
 The same inner cycle, handed an ``axis_name``, becomes the shard_map
 distributed solver (core/distributed.py).
 """
@@ -27,7 +35,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import arnoldi, givens
-from repro.core.operators import as_operator
+from repro.core.operators import DenseOperator, as_operator
 
 
 class GmresResult(NamedTuple):
@@ -45,8 +53,66 @@ class _CycleState(NamedTuple):
     steps: jax.Array         # active step count (== next j)
 
 
-def _gmres_cycle(matvec, x0, r0, beta, m, tol_abs, gs_step, axis_name,
-                 precond):
+# Scheme names that request kernel-backed execution; the jnp scheme each one
+# degrades to when the kernel path is unavailable (block solver, non-Pallas
+# backend, sharded basis, ...).
+_FUSED_STEP_SCHEMES = ("fused", "arnoldi_fused")
+_SCHEME_FALLBACK = {"fused": "cgs2", "arnoldi_fused": "cgs2",
+                    "cgs2_fused": "cgs2"}
+
+
+def _make_step_fn(matvec, precond, gs: str, axis_name, *, identity_precond,
+                  m: int, n: int, basis_dtype) -> Callable:
+    """Build ``step_fn(v_basis, j) -> ArnoldiStep`` for the inner loop.
+
+    ``gs="fused"`` asks for the single-pallas_call Arnoldi step: mat-vec +
+    both CGS2 passes in one kernel, basis VMEM-resident.  That needs a dense
+    unpreconditioned single-shard operator and enough VMEM; anything else
+    degrades to the streaming cgs2 kernel ("cgs2_fused"), which itself
+    degrades to the jnp reference (see arnoldi.cgs2_fused_step).
+    """
+    if gs in _FUSED_STEP_SCHEMES:
+        from repro.kernels import tuning
+
+        mode = tuning.kernel_mode()
+        if (axis_name is None and identity_precond and mode != "ref"
+                and isinstance(matvec, DenseOperator)
+                and tuning.fused_step_fits(m + 1, n, basis_dtype,
+                                           a_dtype=matvec.a.dtype)):
+            from repro.kernels import arnoldi_fused
+
+            interp = mode == "interpret"
+            # Pre-pad ONCE to the kernel's tile grid: the basis is
+            # loop-carried, so padding it inside the step would copy the
+            # whole (m+1, n) array every inner iteration.  The cycle
+            # allocates the carry at ``basis_shape`` directly (padded rows
+            # and columns stay zero and are masked in the kernel); A is
+            # padded here, outside the loop.
+            block = tuning.choose_fused_block(n, matvec.a.dtype)
+            n_pad = tuning._round_up(n, block)
+            m1_pad = tuning._round_up(m + 1, tuning.sublane(basis_dtype))
+            a_pad = jnp.pad(matvec.a, ((0, n_pad - n), (0, n_pad - n)))
+
+            def fused_step(v_basis, j):
+                h, w = arnoldi_fused.arnoldi_step(a_pad, v_basis, j,
+                                                  block=block,
+                                                  interpret=interp)
+                return arnoldi.finalize(w, h[:m + 1], j, None)
+
+            fused_step.basis_shape = (m1_pad, n_pad)
+            return fused_step
+        gs = "cgs2_fused"
+
+    gs_step = arnoldi.step(gs)
+
+    def step(v_basis, j):
+        w = matvec(precond(v_basis[j]))
+        return gs_step(v_basis, w, j, axis_name)
+
+    return step
+
+
+def _gmres_cycle(step_fn, x0, r0, beta, m, tol_abs, precond, basis_dtype):
     """One restart cycle: up to m Arnoldi steps + triangular solve.
 
     The inner loop is a ``while_loop`` with TRUE early exit, not a masked
@@ -55,13 +121,21 @@ def _gmres_cycle(matvec, x0, r0, beta, m, tol_abs, gs_step, axis_name,
     no-ops (SSPerf: measured 6x overhead at k~5).  Early exit keeps the
     whole solve one XLA program (vmap of while_loop is supported) while
     doing only the work the mathematics needs.
+
+    ``basis_dtype`` is the Krylov-basis storage dtype (the ``compute_dtype``
+    knob): bf16 storage halves the V stream while every reduction still
+    accumulates in f32, and the true residual recomputed per restart bounds
+    the error.
     """
     n = x0.shape[0]
     dtype = x0.dtype
     eps = jnp.asarray(jnp.finfo(dtype).tiny ** 0.5, dtype)
 
-    v0 = r0 / jnp.maximum(beta, eps)
-    v = jnp.zeros((m + 1, n), dtype).at[0].set(v0)
+    # Kernel-backed steps may ask for a tile-aligned carry (see
+    # _make_step_fn); padded rows/columns are zero and never touched.
+    basis_rows, basis_cols = getattr(step_fn, "basis_shape", (m + 1, n))
+    v0 = (r0 / jnp.maximum(beta, eps)).astype(basis_dtype)
+    v = jnp.zeros((basis_rows, basis_cols), basis_dtype).at[0, :n].set(v0)
     state = _CycleState(
         v=v,
         giv=givens.init(m, beta, dtype),
@@ -75,11 +149,11 @@ def _gmres_cycle(matvec, x0, r0, beta, m, tol_abs, gs_step, axis_name,
     def body(s: _CycleState):
         j = s.steps
         # --- Arnoldi: w = A M^{-1} v_j, orthogonalize against V[:j+1] ---
-        w = matvec(precond(s.v[j]))
-        st = gs_step(s.v, w, j, axis_name)
-        v = s.v.at[j + 1].set(st.v_next)
+        st = step_fn(s.v, j)
+        v = s.v.at[j + 1, :st.v_next.shape[0]].set(st.v_next.astype(basis_dtype))
         # --- Givens: fold column j, track LS residual ---
-        giv = givens.update(s.giv, st.h, j, active=jnp.asarray(True))
+        giv = givens.update(s.giv, st.h.astype(dtype), j,
+                            active=jnp.asarray(True))
         resid = givens.residual_norm(giv, j)
         happy = st.h_last <= eps * 100.0
         done = (resid <= tol_abs) | happy
@@ -87,7 +161,7 @@ def _gmres_cycle(matvec, x0, r0, beta, m, tol_abs, gs_step, axis_name,
 
     state = lax.while_loop(cond, body, state)
     y = givens.solve(state.giv, state.steps)          # zeros past early stop
-    dx = y @ state.v[:m]                              # V^T y with row basis
+    dx = y @ state.v[:m, :n].astype(dtype)            # V^T y with row basis
     x = x0 + precond(dx)
     return x, state.steps
 
@@ -103,6 +177,7 @@ def gmres(
     gs: str = "cgs2",
     precond: Optional[Callable] = None,
     axis_name: Optional[str] = None,
+    compute_dtype=None,
 ) -> GmresResult:
     """Right-preconditioned restarted GMRES(m).
 
@@ -115,18 +190,29 @@ def gmres(
       m: restart length (Krylov subspace dimension per cycle).
       tol: relative residual target, ||b - Ax|| <= tol * ||b||.
       max_restarts: restart-cycle budget.
-      gs: "cgs" (paper listing) | "mgs" (serial standard) | "cgs2" (TPU path).
+      gs: "cgs" (paper listing) | "mgs" (serial standard) | "cgs2" (TPU
+        path) | "cgs2_fused" (Pallas streaming GS kernel) | "fused" (whole
+        Arnoldi step in one Pallas kernel; needs a dense operator, no
+        preconditioner, single shard — degrades to "cgs2_fused" otherwise).
       precond: right preconditioner M^{-1} as a callable (identity default).
       axis_name: mesh axis for the row-sharded distributed solve.
+      compute_dtype: Krylov-basis storage dtype (e.g. ``jnp.bfloat16``)
+        — halves basis HBM traffic; reductions still accumulate in f32 and
+        the per-restart true-residual recompute bounds the rounding error.
 
     Returns GmresResult; residual is the TRUE residual recomputed from x.
     """
     matvec = as_operator(a)
-    gs_step = arnoldi.step(gs)
     if x0 is None:
         x0 = jnp.zeros_like(b)
+    identity_precond = precond is None
     if precond is None:
         precond = lambda v: v
+    basis_dtype = b.dtype if compute_dtype is None else compute_dtype
+
+    step_fn = _make_step_fn(matvec, precond, gs, axis_name,
+                            identity_precond=identity_precond, m=m,
+                            n=b.shape[0], basis_dtype=basis_dtype)
 
     bnorm = arnoldi.norm(b, axis_name)
     tol_abs = jnp.maximum(tol * bnorm, jnp.asarray(0.0, b.dtype))
@@ -144,7 +230,7 @@ def gmres(
     def body(carry):
         x, r, beta, k, steps = carry
         x, inner = _gmres_cycle(
-            matvec, x, r, beta, m, tol_abs, gs_step, axis_name, precond
+            step_fn, x, r, beta, m, tol_abs, precond, basis_dtype
         )
         r, beta = resid_of(x)
         return x, r, beta, k + 1, steps + inner
@@ -157,12 +243,127 @@ def gmres(
     )
 
 
-def gmres_batched(a, b: jax.Array, **kw) -> GmresResult:
-    """vmap over a batch of right-hand sides, shape (batch, n), shared A."""
-    return jax.vmap(lambda rhs: gmres(a, rhs, **kw))(b)
+# --------------------------------------------------------------------------
+# Block multi-RHS solver
+# --------------------------------------------------------------------------
+def _block_cycle(blockmv, vprecond, gs_step, x0, r0, beta, m, tol_abs,
+                 active0, basis_dtype):
+    """One restart cycle over k lanes stepping in lockstep.
+
+    Lanes carry their own Krylov basis / Givens state / convergence latch;
+    the ONE shared operand is A, which every step streams exactly once as a
+    (n, k) block mat-vec.  Masking matches ``vmap(gmres)`` semantics: a
+    done lane's Givens updates write identity columns and zeroed g entries,
+    so the final per-lane triangular solve is unaffected.
+    """
+    k, n = x0.shape
+    dtype = x0.dtype
+    eps = jnp.asarray(jnp.finfo(dtype).tiny ** 0.5, dtype)
+
+    v0 = (r0 / jnp.maximum(beta, eps)[:, None]).astype(basis_dtype)
+    v = jnp.zeros((k, m + 1, n), basis_dtype).at[:, 0].set(v0)
+    giv = jax.vmap(lambda be: givens.init(m, be, dtype))(beta)
+    done = jnp.logical_not(active0) | (beta <= tol_abs)
+    steps = jnp.zeros((k,), jnp.int32)
+
+    def cond(carry):
+        _, _, done, steps = carry
+        return jnp.any(jnp.logical_not(done) & (steps < m))
+
+    def body(carry):
+        v, giv, done, steps = carry
+        j = steps                                     # per-lane step index
+        active = jnp.logical_not(done) & (steps < m)
+        # --- the k current Krylov vectors hit A as ONE GEMM ---
+        vj = jax.vmap(lambda vb, jj: vb[jj])(v, j).astype(dtype)
+        w = blockmv(vprecond(vj))                     # (k, n)
+        st = jax.vmap(gs_step)(v, w, j)
+        v_new = jax.vmap(lambda vb, vn, jj: vb.at[jj + 1].set(vn))(
+            v, st.v_next.astype(basis_dtype), j)
+        v = jnp.where(active[:, None, None], v_new, v)
+        giv = jax.vmap(
+            lambda g, h, jj, act: givens.update(g, h, jj, active=act)
+        )(giv, st.h.astype(dtype), j, active)
+        resid = jax.vmap(givens.residual_norm)(giv, j)
+        happy = st.h_last <= eps * 100.0
+        done = done | (active & ((resid <= tol_abs) | happy))
+        steps = steps + active.astype(jnp.int32)
+        return v, giv, done, steps
+
+    v, giv, done, steps = lax.while_loop(cond, body, (v, giv, done, steps))
+    y = jax.vmap(givens.solve)(giv, steps)            # (k, m)
+    dx = jnp.einsum("km,kmn->kn", y, v[:, :m].astype(dtype))
+    x = x0 + vprecond(dx)
+    return x, steps
 
 
-@functools.partial(jax.jit, static_argnames=("m", "tol", "max_restarts", "gs"))
-def gmres_jit(a, b, *, m=30, tol=1e-5, max_restarts=50, gs="cgs2"):
+def gmres_batched(a, b: jax.Array, *, m: int = 30, tol: float = 1e-5,
+                  max_restarts: int = 50, gs: str = "cgs2",
+                  precond: Optional[Callable] = None,
+                  compute_dtype=None) -> GmresResult:
+    """Batch of right-hand sides, shape (batch, n), shared A — solved BLOCKED.
+
+    Previously this was ``vmap(gmres)``: correct, but each lane's mat-vec
+    stayed a GEMV, and on the kernel path a vmapped ``pallas_call`` re-streams
+    A from HBM once PER LANE.  Now the k current Krylov vectors are stacked
+    into an (n, k) block and hit A as a single GEMM per Arnoldi step — one
+    shared HBM stream of A, a k-fold arithmetic-intensity win (this is the
+    multi-RHS workload of the paper's Table 1 systems, batched).
+
+    Per-lane orthogonalization/Givens state stays lane-parallel via vmap
+    (O(m^2) scalar work, not worth a kernel).  Fused/kernel GS scheme names
+    degrade to their jnp equivalents here — each lane has its OWN basis, so
+    there is no shared operand for a GS kernel to exploit.  Matrix-free
+    operators fall back to a vmapped mat-vec (nothing to share).
+    """
+    op = as_operator(a)
+    gs_step = arnoldi.step(_SCHEME_FALLBACK.get(gs, gs))
+    if precond is None:
+        precond = lambda v: v
+    vprecond = jax.vmap(precond)
+    basis_dtype = b.dtype if compute_dtype is None else compute_dtype
+
+    if isinstance(op, DenseOperator):
+        blockmv = lambda xs: op(xs.T).T    # (k, n) -> one (n, k) GEMM
+    else:
+        blockmv = jax.vmap(op)
+
+    bnorm = jnp.linalg.norm(b, axis=1)
+    tol_abs = jnp.maximum(tol * bnorm, jnp.asarray(0.0, b.dtype))
+
+    def resid_of(x):
+        r = b - blockmv(x)
+        return r, jnp.linalg.norm(r, axis=1)
+
+    x0 = jnp.zeros_like(b)
+    r0, beta0 = resid_of(x0)
+    k0 = jnp.zeros(b.shape[:1], jnp.int32)
+
+    def cond(carry):
+        _, _, beta, kk, _ = carry
+        return jnp.any((beta > tol_abs) & (kk < max_restarts))
+
+    def body(carry):
+        x, r, beta, kk, steps = carry
+        active = (beta > tol_abs) & (kk < max_restarts)
+        x2, inner = _block_cycle(blockmv, vprecond, gs_step, x, r, beta, m,
+                                 tol_abs, active, basis_dtype)
+        x = jnp.where(active[:, None], x2, x)
+        r, beta = resid_of(x)
+        return x, r, beta, kk + active.astype(jnp.int32), steps + inner
+
+    x, r, beta, kk, steps = lax.while_loop(
+        cond, body, (x0, r0, beta0, k0, jnp.zeros(b.shape[:1], jnp.int32))
+    )
+    return GmresResult(x=x, residual=beta, restarts=kk,
+                       converged=beta <= tol_abs, inner_steps=steps)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "tol", "max_restarts", "gs",
+                                    "compute_dtype"))
+def gmres_jit(a, b, *, m=30, tol=1e-5, max_restarts=50, gs="cgs2",
+              compute_dtype=None):
     """Convenience fully-jit'd dense solve (the device-resident strategy)."""
-    return gmres(a, b, m=m, tol=tol, max_restarts=max_restarts, gs=gs)
+    return gmres(a, b, m=m, tol=tol, max_restarts=max_restarts, gs=gs,
+                 compute_dtype=compute_dtype)

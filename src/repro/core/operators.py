@@ -18,12 +18,41 @@ import jax.numpy as jnp
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class DenseOperator:
-    """Explicit dense matrix operator (the paper's setting)."""
+    """Explicit dense matrix operator (the paper's setting).
+
+    ``backend`` selects the mat-vec execution path:
+
+      "jnp"    — ``a @ v`` (XLA-lowered reference; always available)
+      "pallas" — the tiled VMEM-streaming kernels (kernels/matvec.py):
+                 ``matvec`` for (n,) operands, ``block_matvec`` for (n, k)
+                 multi-RHS blocks (ONE shared HBM stream of A for all k
+                 columns).  Tile sizes come from the VMEM autotuner
+                 (kernels/tuning.py); on CPU the kernel runs in interpret
+                 mode, and on backends without Pallas support the call
+                 silently degrades to the jnp path.
+    """
 
     a: jax.Array  # (n, n)
+    backend: str = "jnp"  # "jnp" | "pallas"
 
     def __call__(self, v: jax.Array) -> jax.Array:
         # v: (n,) or (n, k)
+        if self.backend == "pallas":
+            from repro.kernels import tuning
+
+            mode = tuning.kernel_mode()
+            if mode != "ref":
+                from repro.kernels import matvec as matvec_k
+
+                m, n = self.a.shape
+                k = 1 if v.ndim == 1 else v.shape[1]
+                bm, bn = tuning.choose_matvec_blocks(
+                    m, n, jnp.dtype(self.a.dtype).name, k=k)
+                kw = dict(block_m=bm, block_n=bn,
+                          interpret=mode == "interpret")
+                if v.ndim == 1:
+                    return matvec_k.matvec(self.a, v, **kw)
+                return matvec_k.block_matvec(self.a, v, **kw)
         return self.a @ v
 
     @property
@@ -35,12 +64,11 @@ class DenseOperator:
         return self.a.dtype
 
     def tree_flatten(self):
-        return (self.a,), None
+        return (self.a,), self.backend
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        del aux
-        return cls(*children)
+        return cls(children[0], aux if aux is not None else "jnp")
 
 
 @jax.tree_util.register_pytree_node_class

@@ -24,6 +24,25 @@ The paper benchmarks four implementations of the SAME restarted GMRES(m):
                        at all, not merely no per-op transfer.
   =================  ==========================================================
 
+  Kernel-backed paths (beyond the paper's strategy space): the
+  ``device_resident`` solver's hot loop can execute through the Pallas
+  kernel layer instead of XLA-lowered jnp —
+
+    gs="cgs2_fused"                  streaming fused Gram-Schmidt kernel
+                                     (kernels/cgs2.py): projection+update
+                                     share one grid, h never leaves VMEM.
+    gs="fused"                       the ENTIRE Arnoldi step (mat-vec +
+                                     both CGS2 passes) as one pallas_call
+                                     (kernels/arnoldi_fused.py) with the
+                                     basis VMEM-resident.
+    DenseOperator(backend="pallas")  every mat-vec through the tiled GEMV /
+                                     block multi-RHS GEMM kernel
+                                     (kernels/matvec.py); gmres_batched
+                                     streams A ONCE for all k RHS.
+
+  All three are compiled on TPU, interpreted on CPU (what CI exercises),
+  and degrade to the jnp reference elsewhere (kernels/tuning.kernel_mode).
+
 The host solver below is deliberately plain NumPy with Python loops — it is
 the measurement baseline, not a strawman: it mirrors pracma::gmres
 (MGS + dense Givens LS) operation for operation.
@@ -39,6 +58,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gmres import gmres, GmresResult
+from repro.core.operators import DenseOperator
 
 
 # --------------------------------------------------------------------------
@@ -151,15 +171,17 @@ def _resident_solver(m, tol, max_restarts, gs):
 
 
 def device_resident(a, b, x0=None, *, m=30, tol=1e-5, max_restarts=50,
-                    gs="cgs2") -> GmresResult:
+                    gs="cgs2", backend="jnp") -> GmresResult:
     """gpuR/vcl analogue: one fused XLA program, nothing leaves the device.
 
     The solver is jit-cached across calls (steady-state timing, matching
-    the paper's warm-GPU measurements).
+    the paper's warm-GPU measurements).  ``gs="fused"``/``"cgs2_fused"``
+    and ``backend="pallas"`` run the hot loop through the Pallas kernel
+    layer (see the kernel-backed paths note in the module docstring).
     """
-    a = jnp.asarray(a)
     b = jnp.asarray(b)
-    return _resident_solver(m, tol, max_restarts, gs)(a, b, x0)
+    op = DenseOperator(jnp.asarray(a), backend=backend)
+    return _resident_solver(m, tol, max_restarts, gs)(op, b, x0)
 
 
 STRATEGIES = {

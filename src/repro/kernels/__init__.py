@@ -1,22 +1,31 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-  matvec.py     tiled dense GEMV — the paper's offloaded hot spot
-  cgs2.py       fused Gram-Schmidt projection (Arnoldi orthogonalization)
-  attention.py  blockwise flash attention w/ GQA + sliding window
-  ssd.py        Mamba2 SSD chunk scan, state carried in VMEM (zamba2 lever)
-  gated_norm.py fused SiLU-gate + RMSNorm (the SSD elementwise floor)
-  ref.py        pure-jnp oracles (ground truth for the allclose sweeps)
-  ops.py        mode dispatch (ref | pallas | interpret)
+  matvec.py        tiled dense GEMV + block multi-RHS GEMM (one A stream)
+  cgs2.py          fused Gram-Schmidt projection (Arnoldi orthogonalization)
+  arnoldi_fused.py ONE-pallas_call Arnoldi step: mat-vec + CGS2, basis
+                   VMEM-resident, w/h never round-trip to HBM
+  tuning.py        VMEM block-size autotuner + backend dispatch policy
+  attention.py     blockwise flash attention w/ GQA + sliding window
+  ssd.py           Mamba2 SSD chunk scan, state carried in VMEM (zamba2 lever)
+  gated_norm.py    fused SiLU-gate + RMSNorm (the SSD elementwise floor)
+  ref.py           pure-jnp oracles (ground truth for the allclose sweeps)
+  ops.py           mode dispatch (ref | pallas | interpret)
+
+These are wired into the solver: ``gmres(gs="fused"|"cgs2_fused")`` and
+``DenseOperator(backend="pallas")`` execute through this layer (compiled on
+TPU, interpret mode on CPU, jnp reference elsewhere — see tuning.kernel_mode).
 """
-from repro.kernels import ops, ref
+from repro.kernels import ops, ref, tuning
+from repro.kernels.arnoldi_fused import arnoldi_step as arnoldi_step_fused
 from repro.kernels.attention import attention as flash_attention
 from repro.kernels.cgs2 import cgs2 as cgs2_fused, gs_project as gs_project_fused
 from repro.kernels.gated_norm import gated_rmsnorm, gated_rmsnorm_ref
-from repro.kernels.matvec import matvec as matvec_tiled
+from repro.kernels.matvec import block_matvec, matvec as matvec_tiled
 from repro.kernels.ssd import ssd_scan, ssd_scan_ref
 
 __all__ = [
-    "ops", "ref", "flash_attention", "cgs2_fused", "gs_project_fused",
-    "matvec_tiled", "ssd_scan", "ssd_scan_ref", "gated_rmsnorm",
+    "ops", "ref", "tuning", "flash_attention", "cgs2_fused",
+    "gs_project_fused", "matvec_tiled", "block_matvec",
+    "arnoldi_step_fused", "ssd_scan", "ssd_scan_ref", "gated_rmsnorm",
     "gated_rmsnorm_ref",
 ]

@@ -41,9 +41,10 @@ def _gs_kernel(v_ref, w_ref, mask_ref, h_ref, wout_ref):
 
     @pl.when(phase == 0)
     def _project():
-        # (m1, bn) @ (bn, 1) -> (m1, 1), f32 accumulate.
+        # (m1, bn) @ (bn, 1) -> (m1, 1), f32 accumulate; V is upcast
+        # in-register so a bf16-stored basis never quantizes w.
         h_ref[...] += jax.lax.dot_general(
-            v_ref[...], w_ref[...],
+            v_ref[...].astype(h_ref.dtype), w_ref[...],
             dimension_numbers=(((1,), (0,)), ((), ())),
             preferred_element_type=h_ref.dtype,
         ) * mask_ref[...]
@@ -52,7 +53,7 @@ def _gs_kernel(v_ref, w_ref, mask_ref, h_ref, wout_ref):
     def _update():
         # w' = w - h^T V : (1, m1) @ (m1, bn) -> (1, bn) -> (bn, 1)
         hv = jax.lax.dot_general(
-            h_ref[...] * mask_ref[...], v_ref[...],
+            h_ref[...] * mask_ref[...], v_ref[...].astype(h_ref.dtype),
             dimension_numbers=(((0,), (0,)), ((), ())),
             preferred_element_type=h_ref.dtype,
         )  # (1, bn)
@@ -72,6 +73,10 @@ def gs_project(v: jax.Array, w: jax.Array, mask: jax.Array, *,
             mask, block_n=bn, interpret=interpret)
         return h, wout[:n]
 
+    # w streams in f32 (it is the fresh mat-vec output); only the basis V is
+    # read in its storage dtype — bf16 V halves its HBM stream while every
+    # product still accumulates in f32.
+    acc_dtype = jnp.promote_types(w.dtype, jnp.float32)
     h, wout = pl.pallas_call(
         _gs_kernel,
         grid=(2, n // bn),
@@ -85,13 +90,13 @@ def gs_project(v: jax.Array, w: jax.Array, mask: jax.Array, *,
             pl.BlockSpec((bn, 1), lambda p, j: (j, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((m1, 1), jnp.float32),
-            jax.ShapeDtypeStruct((n, 1), w.dtype),
+            jax.ShapeDtypeStruct((m1, 1), acc_dtype),
+            jax.ShapeDtypeStruct((n, 1), acc_dtype),
         ],
         interpret=interpret,
         name="gmres_gs_fused",
-    )(v, w[:, None].astype(v.dtype), mask[:, None].astype(jnp.float32))
-    return h[:, 0], wout[:, 0]
+    )(v, w[:, None].astype(acc_dtype), mask[:, None].astype(acc_dtype))
+    return h[:, 0], wout[:, 0].astype(w.dtype)
 
 
 def cgs2(v: jax.Array, w: jax.Array, mask: jax.Array, *,

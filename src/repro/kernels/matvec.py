@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: tiled dense mat-vec (the paper's offloaded hot spot).
+"""Pallas TPU kernel: tiled dense mat-vec / block multi-RHS mat-mat.
 
 The paper ships ``A %*% v`` to the GPU through gmatrix/gputools/gpuR; the
 TPU-native version streams A once HBM->VMEM in MXU-aligned (bm, bn) tiles
@@ -10,7 +10,15 @@ memory-bound (roofline: 819 GB/s -> ~0.4 TFLOP/s f32 ceiling per chip), so
 the ONLY thing that matters is streaming A at full HBM bandwidth: big
 contiguous tiles, no re-reads.  Block defaults (256, 512) give
 256*512*4 B = 512 KiB per A tile — comfortably inside the ~16 MiB/core VMEM
-with double-buffering headroom.
+with double-buffering headroom; ``kernels.tuning.choose_matvec_blocks``
+picks sizes per (shape, dtype) instead of these static defaults.
+
+``block_matvec`` is the multi-RHS form: ``Y = A @ X`` with X of shape
+(n, k).  The SAME single stream of A now feeds k GEMV lanes as one GEMM —
+a k-fold arithmetic-intensity win over k separate kernel launches (which
+is exactly what ``jax.vmap`` of a ``pallas_call`` GEMV degenerates to:
+the batch axis becomes an outer grid dimension and A is re-streamed per
+lane).  ``core/gmres.py``'s batched solver rides this.
 
 Grid layout: (rows/bm, cols/bn), column index innermost so each output tile
 o[i] accumulates over j with A streamed row-block by row-block.
@@ -31,20 +39,28 @@ def _matvec_kernel(a_ref, x_ref, o_ref):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    # (bm, bn) @ (bn, 1) -> (bm, 1): an MXU matmul with a degenerate N dim;
-    # f32 accumulation regardless of input dtype.
+    # (bm, bn) @ (bn, k) -> (bm, k): an MXU matmul (k = 1 for plain GEMV is
+    # a degenerate N dim); f32 accumulation regardless of input dtype.  A
+    # tiles stream in storage dtype and upcast IN-REGISTER when x is wider
+    # (bf16-stored A keeps its halved HBM stream without quantizing x).
     o_ref[...] += jax.lax.dot_general(
-        a_ref[...], x_ref[...],
+        a_ref[...].astype(x_ref.dtype), x_ref[...],
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=o_ref.dtype,
     )
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
-def matvec(a: jax.Array, x: jax.Array, *, block_m: int = 256,
-           block_n: int = 512, interpret: bool = False) -> jax.Array:
-    """y = A @ x with explicit VMEM tiling.  a: (m, n), x: (n,)."""
+def block_matvec(a: jax.Array, x: jax.Array, *, block_m: int = 256,
+                 block_n: int = 512, interpret: bool = False) -> jax.Array:
+    """Y = A @ X with one shared stream of A.  a: (m, n), x: (n, k)."""
     m, n = a.shape
+    if x.shape[0] != n:
+        # Pallas pads blocks, so a length mismatch would otherwise read
+        # garbage instead of raising the way ``a @ x`` does.
+        raise TypeError(f"block_matvec: a {a.shape} @ x {x.shape} — "
+                        f"x must have {n} rows")
+    k = x.shape[1]
     bm = min(block_m, m)
     bn = min(block_n, n)
     if m % bm or n % bn:
@@ -52,20 +68,33 @@ def matvec(a: jax.Array, x: jax.Array, *, block_m: int = 256,
         mp = (m + bm - 1) // bm * bm
         np_ = (n + bn - 1) // bn * bn
         a = jnp.pad(a, ((0, mp - m), (0, np_ - n)))
-        x = jnp.pad(x, (0, np_ - n))
-        return matvec(a, x, block_m=bm, block_n=bn, interpret=interpret)[:m]
+        x = jnp.pad(x, ((0, np_ - n), (0, 0)))
+        return block_matvec(a, x, block_m=bm, block_n=bn,
+                            interpret=interpret)[:m]
 
-    acc_dtype = jnp.float32 if a.dtype != jnp.float64 else jnp.float64
+    # Compute at the promoted dtype (what ``a @ x`` would use): a narrow x
+    # is upcast here (a vector — cheap); a narrow A stays narrow in HBM and
+    # upcasts per-tile inside the kernel.
+    compute_dtype = jnp.promote_types(a.dtype, x.dtype)
+    acc_dtype = jnp.promote_types(compute_dtype, jnp.float32)
     out = pl.pallas_call(
         _matvec_kernel,
         grid=(m // bm, n // bn),
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((m, 1), acc_dtype),
+        out_specs=pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), acc_dtype),
         interpret=interpret,
         name="gmres_matvec",
-    )(a, x[:, None].astype(a.dtype))
-    return out[:, 0].astype(x.dtype)
+    )(a, x.astype(compute_dtype))
+    return out.astype(compute_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def matvec(a: jax.Array, x: jax.Array, *, block_m: int = 256,
+           block_n: int = 512, interpret: bool = False) -> jax.Array:
+    """y = A @ x with explicit VMEM tiling.  a: (m, n), x: (n,)."""
+    return block_matvec(a, x[:, None], block_m=block_m, block_n=block_n,
+                        interpret=interpret)[:, 0]

@@ -1,10 +1,15 @@
-"""Dispatch layer: Pallas kernels on TPU, jnp references elsewhere.
+"""Dispatch layer for the MODEL stack: Pallas kernels on TPU, jnp elsewhere.
 
-``use_kernels(True/False/"interpret")`` flips every call site in the solver
-and the model stack at once.  On this CPU container the kernels are
-exercised through interpret mode (tests/benchmarks); the model/dry-run path
-lowers the jnp references, which XLA fuses for the roofline analysis — the
-Pallas kernels are the TPU-target artifacts.
+``use_kernels(True/False/"interpret")`` flips every model-stack call site
+(attention, SSD, gated-norm) at once.  On this CPU container the kernels
+are exercised through interpret mode (tests/benchmarks); the model/dry-run
+path lowers the jnp references, which XLA fuses for the roofline analysis —
+the Pallas kernels are the TPU-target artifacts.
+
+The SOLVER's kernel paths (``gmres(gs="fused"|"cgs2_fused")``,
+``DenseOperator(backend="pallas")``) do not consult this switch: their
+dispatch is ``kernels.tuning.kernel_mode()`` (backend sniffing + the
+``REPRO_KERNELS`` env override), chosen per call site at trace time.
 """
 from __future__ import annotations
 

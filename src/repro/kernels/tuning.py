@@ -1,0 +1,153 @@
+"""Block-size autotuner + backend dispatch policy for the solver kernels.
+
+Every Pallas kernel in this package is parameterized by VMEM tile sizes.
+The right sizes depend on (shape, dtype) and the per-core VMEM budget:
+bigger tiles amortize DMA setup and keep the MXU fed, but the working set
+(with double-buffering) must stay inside ~16 MiB/core.  This module is the
+single place that arithmetic lives, so the solver layer never hard-codes a
+block shape.
+
+Also here: the kernel execution mode policy.  The solver asks
+``kernel_mode()`` once per trace and gets
+
+    "compiled"   on TPU — real Pallas lowering,
+    "interpret"  on CPU — the Pallas interpreter (slow, bit-accurate; what
+                 CI exercises),
+    "ref"        anywhere else (or via REPRO_KERNELS=ref) — pure-jnp
+                 reference, no Pallas at all.
+
+so ``gmres(gs="cgs2_fused")`` is safe to call on any backend.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+# Per-core VMEM budget the tuner plans against.  Real cores have ~16 MiB;
+# we plan to ~3/4 of it so the compiler keeps double-buffering headroom.
+VMEM_BUDGET = 12 * 1024 * 1024
+
+# MXU/VPU native tile: the lane (last) dim is always 128; the sublane dim
+# is 8 for f32 and 16 for bf16.
+LANE = 128
+
+
+def sublane(dtype) -> int:
+    return 16 if jnp.dtype(dtype) == jnp.dtype(jnp.bfloat16) else 8
+
+
+def itemsize(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def kernel_mode() -> str:
+    """Execution mode for kernel-backed solver paths (trace-time static)."""
+    forced = os.environ.get("REPRO_KERNELS")
+    if forced in ("ref", "interpret", "compiled"):
+        return forced
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return "compiled"
+    if backend == "cpu":
+        return "interpret"
+    return "ref"  # GPU etc.: these kernels are TPU-shaped; use the reference
+
+
+@functools.lru_cache(maxsize=256)
+def choose_matvec_blocks(m: int, n: int, dtype_name: str = "float32",
+                         k: int = 1, budget: int = VMEM_BUDGET):
+    """Pick (block_m, block_n) for the tiled GEMV/GEMM kernel.
+
+    Working set per grid step (double-buffered A tile + operand/output
+    columns):  2*bm*bn*s + bn*k*s + bm*k*4  bytes.  We maximize the A tile
+    under the budget, preferring a wide ``block_n`` (contiguous HBM stream
+    along the reduction dim) over a tall ``block_m``.
+    """
+    s = itemsize(dtype_name)
+    sub = sublane(dtype_name)
+    best = (sub, LANE)
+    for bm in (128, 256, 512):
+        for bn in (128, 256, 512, 1024, 2048):
+            bytes_ = 2 * bm * bn * s + bn * k * s + bm * k * 4
+            if bytes_ > budget:
+                continue
+            cur_bm, cur_bn = best
+            if (bn, bm * bn) > (cur_bn, cur_bm * cur_bn):
+                best = (bm, bn)
+    bm, bn = best
+    # Clamp to the (sublane/lane-aligned) problem size — a block larger
+    # than the array just pads the whole array into one tile.
+    bm = min(bm, _round_up(m, sub))
+    bn = min(bn, _round_up(n, LANE))
+    return bm, bn
+
+
+@functools.lru_cache(maxsize=256)
+def choose_gs_block(m1: int, n: int, dtype_name: str = "float32",
+                    budget: int = VMEM_BUDGET):
+    """Pick ``block_n`` for the streaming fused Gram-Schmidt kernel.
+
+    Per grid step the kernel holds a (m1, bn) V tile (double-buffered), the
+    (bn, 1) w tile, and the (m1, 1) h accumulator.
+    """
+    s = 4  # the GS kernel accumulates f32
+    best = LANE
+    for bn in (128, 256, 512, 1024, 2048, 4096):
+        if 2 * m1 * bn * s + bn * s + m1 * s <= budget:
+            best = bn
+    return min(best, _round_up(n, LANE))
+
+
+@functools.lru_cache(maxsize=256)
+def _choose_fused_block(n: int, dtype_name: str, budget: int):
+    best = LANE
+    for b in (256, 512):
+        if b > _round_up(n, LANE):
+            break
+        if (_round_up(n, b) - n) * 8 > n:
+            continue  # >12.5% padded rows/cols — padding traffic beats DMA win
+        if 2 * b * b * itemsize(dtype_name) <= budget // 4:
+            best = b
+    return best
+
+
+def choose_fused_block(n: int, dtype, budget: int = VMEM_BUDGET) -> int:
+    """Square A-tile size for the fused Arnoldi-step kernel.
+
+    One block size for rows and columns (so row/col padding agree on the
+    square A), biggest MXU-aligned candidate whose padding overhead and
+    double-buffered tile stay sane — the resident basis is the real VMEM
+    consumer and is budgeted by ``fused_step_fits``.
+    """
+    return _choose_fused_block(n, jnp.dtype(dtype).name, budget)
+
+
+def fused_step_fits(m1: int, n: int, dtype, budget: int = VMEM_BUDGET,
+                    a_dtype=None) -> bool:
+    """Can the fused Arnoldi-step kernel keep the whole basis V in VMEM?
+
+    The fused kernel's peak working set is the Gram-Schmidt grid step: the
+    full (m1, n) basis in storage ``dtype`` PLUS its accumulator-dtype
+    upcast, the w accumulator, and one double-buffered A tile — priced in
+    ``a_dtype`` (the matrix may be stored wider than the basis, e.g. f32 A
+    with a bf16 ``compute_dtype`` basis).
+    """
+    if a_dtype is None:
+        a_dtype = dtype
+    s = itemsize(dtype)
+    sa = itemsize(a_dtype)
+    acc = max(4, sa)                 # f32 accumulation; f64 under x64
+    b = choose_fused_block(n, a_dtype, budget)
+    m1p = _round_up(m1, sublane(dtype))
+    np_ = _round_up(n, b)
+    need = (m1p * np_ * (s + acc)    # resident V + in-kernel upcast
+            + np_ * acc * 2          # w accumulator + orthogonalized copy
+            + 2 * b * b * sa)        # double-buffered A tile
+    return need <= budget

@@ -33,6 +33,8 @@ import traceback
 
 import jax
 
+from repro import compat
+
 from repro import configs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import (abstract_state, make_optimizer,
@@ -93,7 +95,7 @@ def _lower_one(cfg, shape, mesh):
 
 def _stats_of(compiled):
     from repro.roofline import parse_collectives
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     colls = parse_collectives(hlo)
     return {
@@ -144,7 +146,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         else:
             corrected, depth_info = raw, {}
 
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     try:
         mem = compiled.memory_analysis()
         bytes_per_device = getattr(mem, "output_size_in_bytes", None)

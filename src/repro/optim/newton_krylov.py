@@ -58,15 +58,33 @@ def newton_krylov(loss_fn: Callable, *, m: int = 8, tol: float = 1e-3,
         op = FunctionOperator(hvp, n, captures=(flat,))
         res = gmres(op, -g, m=m, tol=tol, max_restarts=max_restarts,
                     gs="cgs2")
-        new_flat = flat + lr * res.x
+        newton = flat + lr * res.x
+        # The damping->inf limit of the LM step, (H + lambda I)^{-1} g ->
+        # g / lambda: a short steepest-descent step.  On an indefinite
+        # Hessian an inexact small-m Krylov solve can return an ASCENT
+        # direction; rather than burn the whole iteration waiting for the
+        # damping schedule to catch up, fall back to this step whenever the
+        # Newton step is rejected (standard LM behavior: reject-and-retry
+        # within the iteration, here jit-staged as a 3-way select).
+        grad_step = flat - (lr / state.damping) * g
 
         # Levenberg-Marquardt damping schedule on actual-vs-predicted
         loss0 = flat_loss(flat)
-        loss1 = flat_loss(new_flat)
-        improved = loss1 < loss0
+        loss_newton = flat_loss(newton)
+        improved = loss_newton < loss0       # Newton quality drives damping
         new_damping = jnp.where(improved, state.damping * 0.7,
                                 state.damping * 2.0)
-        new_flat = jnp.where(improved, new_flat, flat)
+
+        def _reject(_):
+            # Evaluated only on rejection: the fallback costs its extra
+            # forward pass off the hot (accepted-step) path.
+            loss_grad = flat_loss(grad_step)
+            ok = loss_grad < loss0
+            return (jnp.where(ok, grad_step, flat),
+                    jnp.where(ok, loss_grad, loss0))
+
+        new_flat, loss1 = jax.lax.cond(
+            improved, lambda _: (newton, loss_newton), _reject, None)
         return unravel(new_flat), NKState(step=state.step + 1,
                                           damping=new_damping), {
             "loss": loss0, "loss_after": loss1,

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import make_mesh
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -30,9 +32,9 @@ def _run_subprocess(code: str) -> dict:
 def test_sharded_gmres_matches_dense_8dev():
     code = textwrap.dedent("""
         import json, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.core import gmres, gmres_sharded, operators
-        mesh = jax.make_mesh((8,), ('model',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ('model',))
         a = operators.random_diagdom(jax.random.PRNGKey(0), 256)
         b = jax.random.normal(jax.random.PRNGKey(1), (256,))
         res_d = gmres_sharded(mesh, 'model', a, b, m=20, tol=1e-5)
@@ -54,13 +56,13 @@ def test_train_step_runs_on_2x4_mesh():
     """REAL sharded train step executes (not just lowers) on 8 fake devices."""
     code = textwrap.dedent("""
         import json, jax, jax.numpy as jnp, numpy as np
+        from repro.compat import make_mesh
         from repro import configs
         from repro.launch.steps import make_train_step, TrainState, \\
             make_optimizer
         from repro.models import build
         from repro.models.config import ShapeConfig
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ('data', 'model'))
         cfg = configs.get('tinyllama-1.1b').reduced()
         shape = ShapeConfig('t', 32, 4, 'train')
         opt = make_optimizer(cfg)
@@ -91,12 +93,12 @@ def test_train_step_runs_on_2x4_mesh():
 def test_serve_step_runs_on_2x4_mesh():
     code = textwrap.dedent("""
         import json, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro import configs
         from repro.launch.steps import make_serve_step
         from repro.models import build
         from repro.models.config import ShapeConfig
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ('data', 'model'))
         cfg = configs.get('mixtral-8x22b').reduced()
         shape = ShapeConfig('d', 64, 4, 'decode')
         model = build(cfg)
@@ -121,9 +123,9 @@ def test_sharded_block_jacobi_cuts_steps_8dev():
     with zero preconditioner communication (SSPerf hillclimb 3)."""
     code = textwrap.dedent("""
         import json, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
         from repro.core import gmres_sharded, operators
-        mesh = jax.make_mesh((8,), ('model',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ('model',))
         n = 1024
         a = operators.convection_diffusion(n, beta=0.7)
         b = jnp.sin(jnp.arange(n) * 0.1)
@@ -148,9 +150,9 @@ def test_compressed_psum_8dev():
     """int8 compressed all-reduce ~= f32 psum within quantization error."""
     code = textwrap.dedent("""
         import json, jax, jax.numpy as jnp, numpy as np
+        from repro.compat import make_mesh
         from repro.optim.compression import compressed_psum
-        mesh = jax.make_mesh((8,), ('d',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ('d',))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 1024))
 
         def f(xs):
@@ -158,10 +160,11 @@ def test_compressed_psum_8dev():
             approx = compressed_psum(xs, 'd')
             err = jnp.linalg.norm(exact - approx) / jnp.linalg.norm(exact)
             return err[None]
-        err = jax.shard_map(f, mesh=mesh,
-                            in_specs=jax.sharding.PartitionSpec('d'),
-                            out_specs=jax.sharding.PartitionSpec('d'),
-                            )(x)
+        from repro import compat
+        err = compat.shard_map(f, mesh=mesh,
+                               in_specs=jax.sharding.PartitionSpec('d'),
+                               out_specs=jax.sharding.PartitionSpec('d'),
+                               )(x)
         print(json.dumps({"err": float(jnp.max(err))}))
     """)
     r = _run_subprocess(code)
@@ -171,8 +174,7 @@ def test_compressed_psum_8dev():
 def test_singleton_mesh_inprocess():
     """shard_map solver on the real (1-device) mesh — no subprocess."""
     from repro.core import gmres_sharded, operators
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     a = operators.random_diagdom(jax.random.PRNGKey(0), 64)
     b = jax.random.normal(jax.random.PRNGKey(1), (64,))
     res = gmres_sharded(mesh, "model", a, b, m=16, tol=1e-5)

@@ -37,6 +37,19 @@ def test_matvec_sweep(m, n, bm, bn, dtype):
     np.testing.assert_allclose(np.asarray(got, np.float32), want, **_tol(dtype))
 
 
+@pytest.mark.parametrize("m,n,k,bm,bn", [
+    (256, 256, 4, 128, 128),
+    (100, 300, 7, 64, 128),      # non-divisible -> padding path
+    (512, 384, 16, 256, 128),
+])
+def test_block_matvec_sweep(m, n, k, bm, bn):
+    a = jax.random.normal(KEY, (m, n))
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, k))
+    got = matvec_k.block_matvec(a, x, block_m=bm, block_n=bn, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ x),
+                               rtol=3e-5, atol=3e-5)
+
+
 # --------------------------------------------------------------------------
 # fused Gram-Schmidt
 # --------------------------------------------------------------------------

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.compat import abstract_mesh, make_mesh
 from repro.checkpoint import checkpoint as ckpt
 from repro.data import SyntheticLM, Prefetcher
 from repro.runtime import Runner, RunnerConfig, StragglerMonitor, plan
@@ -164,8 +165,7 @@ def test_elastic_plan():
 # sharding rules
 # --------------------------------------------------------------------------
 def test_partition_rules():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     P = jax.sharding.PartitionSpec
     abstract = {
         "embed": jax.ShapeDtypeStruct((1024, 512), jnp.float32),
@@ -182,9 +182,7 @@ def test_partition_rules():
 def test_moe_expert_sharding_adaptive():
     """EP when E divides the model axis; TP-within-expert otherwise."""
     P = jax.sharding.PartitionSpec
-    mesh16 = jax.sharding.AbstractMesh(
-        (1, 16), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh16 = abstract_mesh((1, 16), ("data", "model"))
     # 128 experts / 16-way: EP on the expert dim
     spec = partition._resolve(mesh16, partition.PARAM_RULES,
                               "layers/moe/w_gate", (24, 128, 512, 1024))
@@ -201,9 +199,7 @@ def test_moe_expert_sharding_adaptive():
 def test_kv_cache_sharding_adaptive():
     """heads over model when divisible; else slots (flash-decoding)."""
     P = jax.sharding.PartitionSpec
-    mesh16 = jax.sharding.AbstractMesh(
-        (1, 16), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh16 = abstract_mesh((1, 16), ("data", "model"))
     spec = partition._resolve(mesh16, partition.CACHE_RULES, "cache/k",
                               (40, 128, 16, 32768, 128), batch_axes="data")
     assert spec == P(None, "data", "model", None, None)
@@ -214,8 +210,7 @@ def test_kv_cache_sharding_adaptive():
 
 
 def test_partition_divisibility_guard():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     # 12 heads * 64 = 768 divides 1; but a dim of 7 can't shard on 16...
     # simulate with a 16-way mesh via spec resolution only
     spec = partition._resolve(mesh, partition.PARAM_RULES, "attn/wq",
@@ -225,9 +220,7 @@ def test_partition_divisibility_guard():
 
 
 def test_batch_axes_for():
-    mesh = jax.sharding.AbstractMesh(
-        (2, 2, 1), ("pod", "data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = abstract_mesh((2, 2, 1), ("pod", "data", "model"))
     assert partition.batch_axes_for(mesh, 8) == ("pod", "data")
     assert partition.batch_axes_for(mesh, 2) == ("data",)
     assert partition.batch_axes_for(mesh, 1) is None
