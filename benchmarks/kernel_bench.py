@@ -159,6 +159,67 @@ def block_matvec_rows(cases=((2048, 8), (4096, 16))):
     return rows
 
 
+def spmv_traffic(n: int, width: int, nbands: int, s: int = 4):
+    """Modeled per-matvec HBM bytes: ELL / banded SpMV vs the dense GEMV.
+
+    ELL streams the (n, width) values in storage dtype plus the int32 cols,
+    and reads/writes x/y once; the banded kernel streams only the band
+    stack (offsets are static).  Dense GEMV streams the full (n, n) matrix
+    — for stencil systems that is O(n/width) more traffic, which is why
+    sparse GMRES iterations are matvec-cheap and orthogonalization-bound.
+    """
+    ell = n * width * (s + 4) + 2 * s * n            # values + cols, x + y
+    banded = nbands * n * s + 2 * s * n              # bands, x + y
+    dense = s * (n * n + 2 * n)
+    return ell, banded, dense
+
+
+def spmv_rows(grids=((64, 64), (128, 128), (256, 256))):
+    """Sparse SpMV rows: measured jnp-reference wall time + modeled traffic.
+
+    Each grid is a 2-D Poisson five-point system (core/stencils.py) run
+    through both sparse formats.  CPU wall-times are the jnp reference path
+    (the XLA lowering the dry-run uses); the TPU-relevant quantities are
+    the modeled HBM bytes and their ratio to the dense GEMV stream.
+    """
+    from repro.core import stencils
+
+    rows = []
+    for nx, ny in grids:
+        n = nx * ny
+        banded = stencils.poisson_2d(nx, ny)
+        ell = banded.to_ell()
+        x = jax.random.normal(jax.random.PRNGKey(1), (n,))
+        t_ell = _time(jax.jit(lambda v: ell(v)), x)
+        t_banded = _time(jax.jit(lambda v: banded(v)), x)
+        width = ell.values.shape[1]
+        nbands = banded.bands.shape[0]
+        b_ell, b_banded, b_dense = spmv_traffic(n, width, nbands)
+        rows.append({
+            "name": f"spmv_ell_poisson2d_{nx}x{ny}",
+            "us": t_ell * 1e6,
+            "hbm_bytes_ell": b_ell,
+            "hbm_bytes_dense_gemv": b_dense,
+            "traffic_ratio": b_ell / b_dense,
+            "derived": (f"ell/dense_hbm={b_ell / b_dense:.4f} "
+                        f"width={width} "
+                        f"tpu_mem_bound={b_ell / HBM_BW * 1e6:.2f}us "
+                        f"x_vmem_resident_kib={4 * n // 1024}"),
+        })
+        rows.append({
+            "name": f"spmv_banded_poisson2d_{nx}x{ny}",
+            "us": t_banded * 1e6,
+            "hbm_bytes_banded": b_banded,
+            "hbm_bytes_dense_gemv": b_dense,
+            "traffic_ratio": b_banded / b_dense,
+            "derived": (f"banded/dense_hbm={b_banded / b_dense:.4f} "
+                        f"nbands={nbands} "
+                        f"tpu_mem_bound={b_banded / HBM_BW * 1e6:.2f}us "
+                        f"gather_free=1"),
+        })
+    return rows
+
+
 def attention_rows(cases=((1, 8, 8, 1024, 128), (1, 8, 2, 2048, 128))):
     rows = []
     attn = jax.jit(lambda q, k, v: ref.attention(q, k, v, causal=True))
@@ -182,7 +243,7 @@ def attention_rows(cases=((1, 8, 8, 1024, 128), (1, 8, 2, 2048, 128))):
 
 def main(json_path: str = "BENCH_kernels.json"):
     rows = (matvec_rows() + gs_rows() + fused_step_rows()
-            + block_matvec_rows() + attention_rows())
+            + block_matvec_rows() + spmv_rows() + attention_rows())
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us']:.0f},{r['derived']}")

@@ -4,16 +4,20 @@ Public API:
   gmres, gmres_batched       single-device (or shard-local) solver
   gmres_sharded              shard_map row-sharded distributed solver
   strategies.*               the paper's four offload strategies
-  operators.*                dense / matrix-free / jvp operators
+  operators.*                dense / sparse / banded / matrix-free operators
+  stencils.*                 classic sparse test problems (Poisson 2D/3D,
+                             convection-diffusion) as structured operators
   preconditioners.*          Jacobi / block-Jacobi / polynomial
 """
 from repro.core.gmres import gmres, gmres_batched, gmres_jit, GmresResult
 from repro.core.sstep import gmres_sstep
 from repro.core.distributed import gmres_sharded, make_sharded_solver
-from repro.core import arnoldi, givens, operators, preconditioners, strategies
+from repro.core import (arnoldi, givens, operators, preconditioners,
+                        stencils, strategies)
 
 __all__ = [
     "gmres", "gmres_batched", "gmres_jit", "GmresResult", "gmres_sstep",
     "gmres_sharded", "make_sharded_solver",
-    "arnoldi", "givens", "operators", "preconditioners", "strategies",
+    "arnoldi", "givens", "operators", "preconditioners", "stencils",
+    "strategies",
 ]

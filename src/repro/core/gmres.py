@@ -17,10 +17,11 @@ restarts.
 The hot loop is kernel-backed: with ``gs="fused"`` and a dense operator the
 whole Arnoldi step (mat-vec + CGS2) is ONE ``pallas_call``
 (kernels/arnoldi_fused.py) with w and h resident in VMEM; ``gs="cgs2_fused"``
-runs the streaming fused Gram-Schmidt kernel (kernels/cgs2.py); and
-``DenseOperator(backend="pallas")`` routes every mat-vec through the tiled
-kernel (kernels/matvec.py).  Each path degrades gracefully — interpret mode
-on CPU, jnp reference where Pallas is unavailable or shapes don't fit VMEM.
+runs the streaming fused Gram-Schmidt kernel (kernels/cgs2.py); and the
+``backend="pallas"`` operators route every mat-vec through the tiled
+kernels (kernels/matvec.py dense, kernels/spmv.py ELL/banded).  Each path
+degrades gracefully — interpret mode on CPU, jnp reference where Pallas is
+unavailable or shapes don't fit VMEM.
 
 The same inner cycle, handed an ``axis_name``, becomes the shard_map
 distributed solver (core/distributed.py).
@@ -35,7 +36,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import arnoldi, givens
-from repro.core.operators import DenseOperator, as_operator
+from repro.core.operators import (EXPLICIT_OPERATORS, DenseOperator,
+                                  as_operator)
 
 
 class GmresResult(NamedTuple):
@@ -182,7 +184,12 @@ def gmres(
     """Right-preconditioned restarted GMRES(m).
 
     Args:
-      a: dense (n, n) array, Operator, or matvec callable.  With
+      a: the system operator — a dense (n, n) array, any operator from
+        ``core.operators`` (``DenseOperator``, ``SparseOperator``,
+        ``BandedOperator``, ``FunctionOperator``), or a bare matvec
+        callable.  Operators carry their own ``backend=`` ("jnp" |
+        "pallas") mat-vec dispatch; the solver never inspects the storage
+        format, so sparse systems need no solver-side changes.  With
         ``axis_name`` set, ``a`` maps a LOCAL shard to a LOCAL shard and all
         reductions psum over that mesh axis.
       b: right-hand side, shape (n,) (local shard under ``axis_name``).
@@ -192,8 +199,10 @@ def gmres(
       max_restarts: restart-cycle budget.
       gs: "cgs" (paper listing) | "mgs" (serial standard) | "cgs2" (TPU
         path) | "cgs2_fused" (Pallas streaming GS kernel) | "fused" (whole
-        Arnoldi step in one Pallas kernel; needs a dense operator, no
-        preconditioner, single shard — degrades to "cgs2_fused" otherwise).
+        Arnoldi step in one Pallas kernel; needs an unpreconditioned
+        single-shard ``DenseOperator`` and a basis that fits VMEM —
+        degrades to "cgs2_fused" otherwise, which itself degrades to
+        "cgs2" when sharded or Pallas is unavailable).
       precond: right preconditioner M^{-1} as a callable (identity default).
       axis_name: mesh axis for the row-sharded distributed solve.
       compute_dtype: Krylov-basis storage dtype (e.g. ``jnp.bfloat16``)
@@ -315,6 +324,11 @@ def gmres_batched(a, b: jax.Array, *, m: int = 30, tol: float = 1e-5,
     degrade to their jnp equivalents here — each lane has its OWN basis, so
     there is no shared operand for a GS kernel to exploit.  Matrix-free
     operators fall back to a vmapped mat-vec (nothing to share).
+
+    Any explicit-storage operator (``DenseOperator``, ``SparseOperator``,
+    ``BandedOperator``) rides the block path: their ``__call__`` accepts an
+    (n, k) operand natively, so one stream of the matrix (dense tiles, ELL
+    values/cols, or stencil bands) feeds all k lanes.
     """
     op = as_operator(a)
     gs_step = arnoldi.step(_SCHEME_FALLBACK.get(gs, gs))
@@ -323,8 +337,8 @@ def gmres_batched(a, b: jax.Array, *, m: int = 30, tol: float = 1e-5,
     vprecond = jax.vmap(precond)
     basis_dtype = b.dtype if compute_dtype is None else compute_dtype
 
-    if isinstance(op, DenseOperator):
-        blockmv = lambda xs: op(xs.T).T    # (k, n) -> one (n, k) GEMM
+    if isinstance(op, EXPLICIT_OPERATORS):
+        blockmv = lambda xs: op(xs.T).T    # (k, n) -> ONE (n, k) block SpMV/GEMM
     else:
         blockmv = jax.vmap(op)
 
@@ -364,6 +378,13 @@ def gmres_batched(a, b: jax.Array, *, m: int = 30, tol: float = 1e-5,
                                     "compute_dtype"))
 def gmres_jit(a, b, *, m=30, tol=1e-5, max_restarts=50, gs="cgs2",
               compute_dtype=None):
-    """Convenience fully-jit'd dense solve (the device-resident strategy)."""
+    """Convenience fully-jit'd solve (the paper's device-resident strategy).
+
+    Same arguments and semantics as ``gmres`` (which see), with the
+    jit-static knobs (``m``, ``tol``, ``gs``, ``compute_dtype``, ...)
+    declared so repeated solves at one configuration reuse the compiled
+    program.  ``a`` may be any operator ``gmres`` accepts — operators are
+    pytrees, so new array payloads do NOT retrace.
+    """
     return gmres(a, b, m=m, tol=tol, max_restarts=max_restarts, gs=gs,
                  compute_dtype=compute_dtype)

@@ -1,9 +1,28 @@
 """Linear operator abstractions for the GMRES solver suite.
 
 The paper solves dense ``Ax = b``; production Krylov use is matrix-free
-(Newton--Krylov, preconditioned operators).  Operators are registered as
-pytrees so they can be passed through ``jax.jit`` / ``vmap`` / ``shard_map``
-boundaries with their array payloads traced and their callables static.
+(Newton--Krylov, preconditioned operators) and — above all — sparse:
+discretized PDEs where A has O(n) nonzeros and SpMV throughput, not dense
+GEMV, dominates the solve.  Four operator classes cover the spectrum:
+
+  DenseOperator     explicit (n, n) matrix (the paper's setting)
+  SparseOperator    ELL-format general sparsity (values/cols, fixed width)
+  BandedOperator    DIA-style band stack + static diagonal offsets
+                    (five/seven-point stencils, convection-diffusion)
+  FunctionOperator  matrix-free ``v -> A @ v`` callable
+
+Every explicit-storage operator takes ``backend="jnp" | "pallas"``: the
+pallas backend routes mat-vecs through the tiled VMEM kernels
+(kernels/matvec.py for dense, kernels/spmv.py for sparse/banded) under the
+shared ``kernels.tuning.kernel_mode()`` policy — compiled on TPU,
+interpret mode on CPU, and a silent degrade to the jnp reference on other
+backends or when the working set exceeds VMEM.  The solvers
+(``gmres``, ``gmres_batched``, ``newton_krylov``) only ever call the
+operator, so sparse systems ride the same code path as dense ones.
+
+Operators are registered as pytrees so they can be passed through
+``jax.jit`` / ``vmap`` / ``shard_map`` boundaries with their array
+payloads traced and their format/backend metadata static.
 """
 from __future__ import annotations
 
@@ -13,6 +32,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @jax.tree_util.register_pytree_node_class
@@ -73,6 +93,199 @@ class DenseOperator:
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
+class SparseOperator:
+    """ELL-format sparse operator: fixed-width per-row nonzeros.
+
+    Row i stores its nonzero values in ``values[i, :]`` with their column
+    indices in ``cols[i, :]``, zero-padded to the shared ``width`` (padding
+    slots hold value 0 at column 0, keeping every gather in-bounds).  The
+    rectangular layout is what the TPU row-blocked kernel wants — each
+    (block_m, width) tile is dense in VMEM — at the classic ELL cost of
+    padding all rows to the widest one.
+
+    ``backend`` selects the mat-vec execution path:
+
+      "jnp"    — gather-and-reduce reference (XLA-lowered; always available)
+      "pallas" — the row-blocked gather kernel (kernels/spmv.py) with the
+                 operand x held VMEM-resident; block size from
+                 ``tuning.choose_spmv_block``.  On CPU the kernel runs in
+                 interpret mode; on backends without Pallas support, or
+                 when x does not fit VMEM (``tuning.spmv_fits``), the call
+                 silently degrades to the jnp path.
+
+    ``__call__`` accepts (n,) vectors or (n, k) multi-RHS blocks (one
+    stream of the matrix feeds all k lanes — ``gmres_batched`` rides
+    this).  dtype semantics match dense ``a @ v``: the result is the
+    promoted (values, v) dtype with f32 accumulation, so bf16 ``values``
+    halve matrix traffic without quantizing an f32 operand.
+    """
+
+    values: jax.Array   # (n, width)
+    cols: jax.Array     # (n, width) int32
+    backend: str = "jnp"
+
+    def __call__(self, v: jax.Array) -> jax.Array:
+        from repro.kernels import spmv
+
+        if self.backend == "pallas":
+            from repro.kernels import tuning
+
+            mode = tuning.kernel_mode()
+            n, width = self.values.shape
+            k = 1 if v.ndim == 1 else v.shape[1]
+            if mode != "ref" and tuning.spmv_fits(n, width,
+                                                  self.values.dtype, k=k):
+                bm = tuning.choose_spmv_block(
+                    n, width, jnp.dtype(self.values.dtype).name, k=k)
+                return spmv.ell_matvec(self.values, self.cols, v,
+                                       block_m=bm,
+                                       interpret=mode == "interpret")
+        return spmv.ell_matvec_ref(self.values, self.cols, v)
+
+    @classmethod
+    def from_dense(cls, a, *, width: int | None = None,
+                   backend: str = "jnp") -> "SparseOperator":
+        """Compress a dense (n, n) matrix to ELL form.
+
+        ``width`` defaults to the widest row's nonzero count; passing a
+        smaller width raises rather than silently dropping entries.
+        """
+        a_np = np.asarray(a)
+        n = a_np.shape[0]
+        mask = a_np != 0
+        max_nnz = int(mask.sum(axis=1).max()) if n else 0
+        if width is None:
+            width = max(max_nnz, 1)
+        elif width < max_nnz:
+            raise ValueError(f"from_dense: width={width} < widest row "
+                             f"({max_nnz} nonzeros) — entries would be "
+                             f"dropped")
+        # Stable argsort puts each row's nonzero columns first, in order.
+        order = np.argsort(~mask, axis=1, kind="stable")[:, :width]
+        vals = np.take_along_axis(a_np, order, axis=1)
+        keep = np.take_along_axis(mask, order, axis=1)
+        return cls(jnp.asarray(np.where(keep, vals, 0).astype(a_np.dtype)),
+                   jnp.asarray(np.where(keep, order, 0).astype(np.int32)),
+                   backend)
+
+    def todense(self) -> jax.Array:
+        """Materialize the dense (n, n) matrix (tests / small systems)."""
+        n, width = self.values.shape
+        rows = jnp.repeat(jnp.arange(n), width)
+        return (jnp.zeros((n, n), self.values.dtype)
+                .at[rows, self.cols.reshape(-1)]
+                .add(self.values.reshape(-1)))
+
+    @property
+    def shape(self):
+        n = self.values.shape[0]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def tree_flatten(self):
+        return (self.values, self.cols), self.backend
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1],
+                   aux if aux is not None else "jnp")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BandedOperator:
+    """DIA-style banded operator: ``y[i] = sum_d bands[d, i] * x[i + off_d]``.
+
+    ``bands`` is (nbands, n) — band d holds the matrix entries
+    ``A[i, i + offsets[d]]`` at index i — and ``offsets`` is a STATIC tuple
+    of diagonal shifts (pytree aux data, so jit retraces on a new stencil
+    shape but not on new band values).  Out-of-range reads contribute zero,
+    which makes Dirichlet boundaries free: band entries at the grid edge
+    simply face a zero halo.
+
+    ``backend`` selects the mat-vec execution path:
+
+      "jnp"    — shifted-window reference (XLA-lowered; always available)
+      "pallas" — the stencil kernel (kernels/spmv.py): pure VPU work over
+                 dynamic slices of a halo-padded VMEM-resident x, no
+                 gather.  Interpret mode on CPU; silent degrade to jnp
+                 where Pallas is unavailable or the halo-padded operand
+                 exceeds VMEM (``tuning.banded_fits``).
+
+    Accepts (n,) or (n, k) operands; dtype semantics match dense ``a @ v``
+    (promoted dtype out, f32 accumulation inside).
+    """
+
+    bands: jax.Array    # (nbands, n)
+    offsets: tuple      # static, len == nbands
+    backend: str = "jnp"
+
+    def __call__(self, v: jax.Array) -> jax.Array:
+        from repro.kernels import spmv
+
+        if self.backend == "pallas":
+            from repro.kernels import tuning
+
+            mode = tuning.kernel_mode()
+            nbands, n = self.bands.shape
+            halo = max(abs(int(o)) for o in self.offsets)
+            k = 1 if v.ndim == 1 else v.shape[1]
+            if mode != "ref" and tuning.banded_fits(n, nbands,
+                                                    self.bands.dtype,
+                                                    halo=halo, k=k):
+                bm = tuning.choose_banded_block(
+                    n, nbands, jnp.dtype(self.bands.dtype).name,
+                    halo=halo, k=k)
+                return spmv.banded_matvec(self.bands, v, self.offsets,
+                                          block_m=bm,
+                                          interpret=mode == "interpret")
+        return spmv.banded_matvec_ref(self.bands, v, self.offsets)
+
+    def to_ell(self, backend: str | None = None) -> SparseOperator:
+        """Convert to ELL form (width = nbands; OOB slots become padding)."""
+        nbands, n = self.bands.shape
+        i = jnp.arange(n)
+        cols = jnp.stack([i + off for off in self.offsets], axis=1)
+        valid = (cols >= 0) & (cols < n)
+        vals = jnp.where(valid, self.bands.T, 0)
+        return SparseOperator(vals, jnp.where(valid, cols, 0).astype(jnp.int32),
+                              self.backend if backend is None else backend)
+
+    def todense(self) -> jax.Array:
+        """Materialize the dense (n, n) matrix (tests / small systems)."""
+        nbands, n = self.bands.shape
+        a = jnp.zeros((n, n), self.bands.dtype)
+        for d, off in enumerate(self.offsets):
+            band = self.bands[d]
+            if off >= 0:
+                a = a + jnp.diag(band[:n - off], k=off)
+            else:
+                a = a + jnp.diag(band[-off:], k=off)
+        return a
+
+    @property
+    def shape(self):
+        n = self.bands.shape[1]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return self.bands.dtype
+
+    def tree_flatten(self):
+        return (self.bands,), (self.offsets, self.backend)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        offsets, backend = aux
+        return cls(children[0], offsets, backend)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
 class FunctionOperator:
     """Matrix-free operator ``v -> A @ v``.
 
@@ -101,9 +314,18 @@ class FunctionOperator:
         return cls(fn, n, captures)
 
 
+# Operators with explicit matrix storage: their (n, k) multi-RHS __call__
+# lets the block solver stream the matrix ONCE for all k lanes.
+EXPLICIT_OPERATORS = (DenseOperator, SparseOperator, BandedOperator)
+
+
 def as_operator(a) -> Callable[[jax.Array], jax.Array]:
-    """Normalize dense arrays / callables to a matvec callable."""
-    if isinstance(a, (DenseOperator, FunctionOperator)):
+    """Normalize ``a`` to a matvec callable.
+
+    Operator instances and callables pass through unchanged; raw arrays
+    wrap into a ``DenseOperator`` on the jnp backend.
+    """
+    if isinstance(a, EXPLICIT_OPERATORS + (FunctionOperator,)):
         return a
     if callable(a):
         return a

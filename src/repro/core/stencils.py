@@ -1,0 +1,100 @@
+"""Classic sparse GMRES test problems as structured operators.
+
+The paper benchmarks dense random systems only; the workloads Krylov
+methods were built for are discretized PDEs — Poisson and
+convection-diffusion on regular grids — whose matrices are five/seven-point
+stencils: a handful of diagonals, O(n) nonzeros.  These constructors build
+them directly in the band layout ``core.operators.BandedOperator`` uses
+(no dense intermediate, so a 1024x1024 grid — a 10^6-row system — costs
+5 band vectors, not a 10^12-entry matrix).
+
+Conventions (unit grid spacing, Dirichlet boundaries):
+
+  poisson_2d / poisson_3d     -Laplace, SPD: 4 (resp. 6) on the main
+                              diagonal, -1 on each neighbor coupling.
+  convection_diffusion_2d     Poisson plus a central-difference convection
+                              term with velocity ``beta = (bx, by)`` —
+                              NONSYMMETRIC, the canonical GMRES target.
+                              |b| < 2 keeps the mesh Peclet number below
+                              the oscillation threshold.
+
+Every constructor takes ``fmt`` to pick the operator class the same system
+comes back as — "banded" (native), "ell" (exercises the gather SpMV
+kernel), or "dense" (``DenseOperator``; small grids only) — and
+``backend`` ("jnp" | "pallas") which is forwarded to the operator.
+Grid points are ordered x-fastest: site (ix, iy, iz) is row
+``ix + nx * (iy + ny * iz)``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.operators import BandedOperator, DenseOperator
+
+
+def _assemble(bands, offsets, fmt: str, backend: str):
+    op = BandedOperator(bands, tuple(int(o) for o in offsets), backend)
+    if fmt == "banded":
+        return op
+    if fmt == "ell":
+        return op.to_ell()
+    if fmt == "dense":
+        return DenseOperator(op.todense(), backend)
+    raise ValueError(f"unknown fmt {fmt!r}; options: banded, ell, dense")
+
+
+def poisson_2d(nx: int, ny: int | None = None, *, dtype=jnp.float32,
+               fmt: str = "banded", backend: str = "jnp"):
+    """2-D Poisson five-point stencil on an nx-by-ny grid (SPD, n = nx*ny)."""
+    ny = nx if ny is None else ny
+    n = nx * ny
+    i = jnp.arange(n)
+    one = jnp.ones((n,), dtype)
+    west = jnp.where(i % nx != 0, -one, 0)           # couples x[i - 1]
+    east = jnp.where(i % nx != nx - 1, -one, 0)      # couples x[i + 1]
+    south = jnp.where(i >= nx, -one, 0)              # couples x[i - nx]
+    north = jnp.where(i < n - nx, -one, 0)           # couples x[i + nx]
+    bands = jnp.stack([south, west, 4 * one, east, north])
+    return _assemble(bands, (-nx, -1, 0, 1, nx), fmt, backend)
+
+
+def poisson_3d(nx: int, ny: int | None = None, nz: int | None = None, *,
+               dtype=jnp.float32, fmt: str = "banded", backend: str = "jnp"):
+    """3-D Poisson seven-point stencil on nx-by-ny-by-nz (SPD, n = nx*ny*nz)."""
+    ny = nx if ny is None else ny
+    nz = nx if nz is None else nz
+    n = nx * ny * nz
+    nxy = nx * ny
+    i = jnp.arange(n)
+    one = jnp.ones((n,), dtype)
+    west = jnp.where(i % nx != 0, -one, 0)
+    east = jnp.where(i % nx != nx - 1, -one, 0)
+    south = jnp.where((i // nx) % ny != 0, -one, 0)
+    north = jnp.where((i // nx) % ny != ny - 1, -one, 0)
+    down = jnp.where(i >= nxy, -one, 0)
+    up = jnp.where(i < n - nxy, -one, 0)
+    bands = jnp.stack([down, south, west, 6 * one, east, north, up])
+    return _assemble(bands, (-nxy, -nx, -1, 0, 1, nx, nxy), fmt, backend)
+
+
+def convection_diffusion_2d(nx: int, ny: int | None = None, *,
+                            beta=(0.5, 0.25), dtype=jnp.float32,
+                            fmt: str = "banded", backend: str = "jnp"):
+    """2-D convection-diffusion five-point stencil (nonsymmetric).
+
+    Central-difference discretization of ``-Laplace(u) + beta . grad(u)``:
+    the x-coupling becomes ``-1 +- bx/2`` and the y-coupling ``-1 +- by/2``
+    on top of the Poisson diagonal of 4.  ``beta = (0, 0)`` recovers
+    ``poisson_2d`` exactly.
+    """
+    ny = nx if ny is None else ny
+    bx, by = (jnp.asarray(b, dtype) / 2 for b in beta)
+    n = nx * ny
+    i = jnp.arange(n)
+    one = jnp.ones((n,), dtype)
+    west = jnp.where(i % nx != 0, (-1 - bx) * one, 0)
+    east = jnp.where(i % nx != nx - 1, (-1 + bx) * one, 0)
+    south = jnp.where(i >= nx, (-1 - by) * one, 0)
+    north = jnp.where(i < n - nx, (-1 + by) * one, 0)
+    bands = jnp.stack([south, west, 4 * one, east, north])
+    return _assemble(bands, (-nx, -1, 0, 1, nx), fmt, backend)

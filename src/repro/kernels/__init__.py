@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
   matvec.py        tiled dense GEMV + block multi-RHS GEMM (one A stream)
+  spmv.py          sparse mat-vec: ELL gather kernel + banded/stencil
+                   kernel (operand VMEM-resident, bands/values streamed)
   cgs2.py          fused Gram-Schmidt projection (Arnoldi orthogonalization)
   arnoldi_fused.py ONE-pallas_call Arnoldi step: mat-vec + CGS2, basis
                    VMEM-resident, w/h never round-trip to HBM
@@ -11,9 +13,10 @@
   ref.py           pure-jnp oracles (ground truth for the allclose sweeps)
   ops.py           mode dispatch (ref | pallas | interpret)
 
-These are wired into the solver: ``gmres(gs="fused"|"cgs2_fused")`` and
-``DenseOperator(backend="pallas")`` execute through this layer (compiled on
-TPU, interpret mode on CPU, jnp reference elsewhere — see tuning.kernel_mode).
+These are wired into the solver: ``gmres(gs="fused"|"cgs2_fused")`` and the
+``backend="pallas"`` operators (``DenseOperator``, ``SparseOperator``,
+``BandedOperator``) execute through this layer — compiled on TPU, interpret
+mode on CPU, jnp reference elsewhere; see ``tuning.kernel_mode``.
 """
 from repro.kernels import ops, ref, tuning
 from repro.kernels.arnoldi_fused import arnoldi_step as arnoldi_step_fused
@@ -21,11 +24,14 @@ from repro.kernels.attention import attention as flash_attention
 from repro.kernels.cgs2 import cgs2 as cgs2_fused, gs_project as gs_project_fused
 from repro.kernels.gated_norm import gated_rmsnorm, gated_rmsnorm_ref
 from repro.kernels.matvec import block_matvec, matvec as matvec_tiled
+from repro.kernels.spmv import (banded_matvec, banded_matvec_ref, ell_matvec,
+                                ell_matvec_ref)
 from repro.kernels.ssd import ssd_scan, ssd_scan_ref
 
 __all__ = [
     "ops", "ref", "tuning", "flash_attention", "cgs2_fused",
-    "gs_project_fused", "matvec_tiled", "block_matvec",
+    "gs_project_fused", "matvec_tiled", "block_matvec", "ell_matvec",
+    "ell_matvec_ref", "banded_matvec", "banded_matvec_ref",
     "arnoldi_step_fused", "ssd_scan", "ssd_scan_ref", "gated_rmsnorm",
     "gated_rmsnorm_ref",
 ]

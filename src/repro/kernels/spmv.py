@@ -1,0 +1,209 @@
+"""Pallas TPU kernels: sparse / structured mat-vec (the SpMV layer).
+
+The paper benchmarks dense ``A %*% v`` only, but the production home of
+GMRES is sparse systems (Ioannidis et al. 1906.04051): discretized PDEs
+where A has O(n) nonzeros and dense GEMV would waste n/nnz of the HBM
+stream on zeros.  Two storage formats, chosen for TPU-style tiling:
+
+ELL (``ell_matvec``) — general sparsity.  A is (values, cols), both
+  (n, width): row i holds its nonzeros in ``values[i, :]`` with their
+  column indices in ``cols[i, :]``, zero-padded to the fixed per-row
+  ``width`` (padding slots point at column 0 with value 0 so the gather
+  stays in-bounds).  The rectangular layout is exactly what a row-blocked
+  grid wants — every (bm, width) tile is dense in VMEM — at the price of
+  padding rows to the widest row (the classic ELL trade; keep ``width``
+  tight or slice the matrix).  The operand x stays WHOLE in VMEM: sparse
+  column patterns touch arbitrary rows of x, so tiling x would re-stream
+  it once per row block, and for the O(n)-nonzero regime x is the small
+  array anyway (``tuning.spmv_fits`` gates the residency).
+
+Banded / stencil (``banded_matvec``) — structured grids.  A is a DIA-style
+  band stack (nbands, n) plus a static tuple of diagonal ``offsets``:
+  ``y[i] = sum_d bands[d, i] * x[i + offsets[d]]`` with out-of-range reads
+  contributing zero.  No gather at all: each band is an elementwise product
+  with a SHIFTED window of x, so the kernel is pure VPU work over dynamic
+  slices of a halo-padded VMEM-resident x — the five/seven-point Poisson
+  and convection-diffusion stencils hit this path.
+
+Both kernels accept (n,) vectors or (n, k) multi-RHS blocks — one stream
+of the matrix feeds all k lanes, same as ``matvec.block_matvec`` — and
+both accumulate in f32 (f64 under x64) regardless of storage dtype, so a
+bf16 band/values stream halves matrix traffic without quantizing x.
+
+HBM traffic per matvec (f32, vs dense GEMV's 4*(n*n + 2n) bytes):
+
+    ELL:    n*width*(s + 4) + 8n      (values + int32 cols + x + y)
+    banded: nbands*n*s + 8n           (bands + x + y; offsets are static)
+
+For a five-point stencil on a 256x256 grid that is ~650x less traffic than
+the dense stream — the reason sparse GMRES iterations are matvec-cheap and
+orthogonalization-dominated (see benchmarks/kernel_bench.py spmv rows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _acc_dtypes(mat_dtype, x_dtype):
+    """(compute, accumulate) dtypes matching dense ``a @ x`` promotion."""
+    compute = jnp.promote_types(mat_dtype, x_dtype)
+    return compute, jnp.promote_types(compute, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# ELL gather kernel
+# --------------------------------------------------------------------------
+def _ell_kernel(vals_ref, cols_ref, x_ref, o_ref):
+    vals = vals_ref[...]                     # (bm, width), storage dtype
+    cols = cols_ref[...]                     # (bm, width) int32
+    x = x_ref[...]                           # (n, k) — whole, VMEM-resident
+    # Gather the operand rows each slot references: (bm, width, k).  The
+    # matrix tile upcasts in-register so bf16 values keep their halved HBM
+    # stream without quantizing x; products accumulate in o_ref's dtype.
+    g = jnp.take(x, cols, axis=0).astype(o_ref.dtype)
+    o_ref[...] = jnp.sum(vals[:, :, None].astype(o_ref.dtype) * g, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def ell_matvec(values: jax.Array, cols: jax.Array, x: jax.Array, *,
+               block_m: int = 512, interpret: bool = False) -> jax.Array:
+    """y = A @ x for ELL-format A.  values/cols: (n, width); x: (n,) or (n, k)."""
+    n, width = values.shape
+    if cols.shape != (n, width):
+        raise TypeError(f"ell_matvec: cols {cols.shape} must match values "
+                        f"{values.shape}")
+    if x.shape[0] != n:
+        # Pallas pads blocks, so a length mismatch would otherwise read
+        # garbage instead of raising the way ``a @ x`` does.
+        raise TypeError(f"ell_matvec: values {values.shape} @ x {x.shape} — "
+                        f"x must have {n} rows")
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    k = x.shape[1]
+    bm = min(block_m, n)
+    if n % bm:
+        # Pad rows to the tile grid; padding slots carry value 0 at column 0
+        # (same convention as real padding slots), so they contribute nothing.
+        np_ = (n + bm - 1) // bm * bm
+        out = ell_matvec(
+            jnp.pad(values, ((0, np_ - n), (0, 0))),
+            jnp.pad(cols, ((0, np_ - n), (0, 0))),
+            jnp.pad(x, ((0, np_ - n), (0, 0))),
+            block_m=bm, interpret=interpret)[:n]
+        return out[:, 0] if squeeze else out
+
+    compute_dtype, acc_dtype = _acc_dtypes(values.dtype, x.dtype)
+    out = pl.pallas_call(
+        _ell_kernel,
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, width), lambda i: (i, 0)),
+            pl.BlockSpec((bm, width), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), acc_dtype),
+        interpret=interpret,
+        name="gmres_spmv_ell",
+    )(values, cols, x.astype(compute_dtype))
+    out = out.astype(compute_dtype)
+    return out[:, 0] if squeeze else out
+
+
+def ell_matvec_ref(values: jax.Array, cols: jax.Array,
+                   x: jax.Array) -> jax.Array:
+    """Pure-jnp ELL SpMV oracle (and the ``kernel_mode() == "ref"`` path)."""
+    compute_dtype, acc_dtype = _acc_dtypes(values.dtype, x.dtype)
+    g = x[cols].astype(acc_dtype)            # (n, width) or (n, width, k)
+    vals = values.astype(acc_dtype)
+    if x.ndim == 2:
+        vals = vals[:, :, None]
+    return jnp.sum(vals * g, axis=1).astype(compute_dtype)
+
+
+# --------------------------------------------------------------------------
+# Banded / stencil kernel
+# --------------------------------------------------------------------------
+def _banded_kernel(bt_ref, x_ref, o_ref, *, offsets, halo, bm):
+    i = pl.program_id(0)
+    base = i * bm + halo                     # row 0 of this tile, in x_pad
+    acc = jnp.zeros(o_ref.shape, o_ref.dtype)
+    for d, off in enumerate(offsets):        # static unroll over the bands
+        seg = x_ref[pl.ds(base + off, bm), :]            # (bm, k) window
+        band = bt_ref[:, d:d + 1]                        # (bm, 1)
+        acc += band.astype(o_ref.dtype) * seg.astype(o_ref.dtype)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("offsets", "block_m", "interpret"))
+def banded_matvec(bands: jax.Array, x: jax.Array, offsets: tuple, *,
+                  block_m: int = 1024, interpret: bool = False) -> jax.Array:
+    """y[i] = sum_d bands[d, i] * x[i + offsets[d]], out-of-range -> 0.
+
+    bands: (nbands, n); offsets: static tuple of diagonal shifts (one per
+    band, e.g. (-nx, -1, 0, 1, nx) for the five-point stencil); x: (n,) or
+    (n, k).  x is halo-padded with zeros so every shifted window is a plain
+    dynamic slice — no gather, no per-band bounds check.
+    """
+    nbands, n = bands.shape
+    if len(offsets) != nbands:
+        raise TypeError(f"banded_matvec: {nbands} bands but {len(offsets)} "
+                        f"offsets")
+    if x.shape[0] != n:
+        raise TypeError(f"banded_matvec: bands {bands.shape} @ x {x.shape} — "
+                        f"x must have {n} rows")
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    k = x.shape[1]
+    bm = min(block_m, n)
+    if n % bm:
+        np_ = (n + bm - 1) // bm * bm
+        out = banded_matvec(
+            jnp.pad(bands, ((0, 0), (0, np_ - n))),
+            jnp.pad(x, ((0, np_ - n), (0, 0))),
+            offsets, block_m=bm, interpret=interpret)[:n]
+        return out[:, 0] if squeeze else out
+
+    halo = max(abs(int(o)) for o in offsets)
+    compute_dtype, acc_dtype = _acc_dtypes(bands.dtype, x.dtype)
+    x_pad = jnp.pad(x.astype(compute_dtype), ((halo, halo), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_banded_kernel, offsets=offsets, halo=halo, bm=bm),
+        grid=(n // bm,),
+        in_specs=[
+            # bands transposed to (n, nbands): the per-tile read is then a
+            # contiguous (bm, nbands) block and each band is a column slice.
+            pl.BlockSpec((bm, nbands), lambda i: (i, 0)),
+            pl.BlockSpec((n + 2 * halo, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), acc_dtype),
+        interpret=interpret,
+        name="gmres_spmv_banded",
+    )(bands.T, x_pad)
+    out = out.astype(compute_dtype)
+    return out[:, 0] if squeeze else out
+
+
+def banded_matvec_ref(bands: jax.Array, x: jax.Array,
+                      offsets: tuple) -> jax.Array:
+    """Pure-jnp banded SpMV oracle (and the ``kernel_mode() == "ref"`` path)."""
+    nbands, n = bands.shape
+    compute_dtype, acc_dtype = _acc_dtypes(bands.dtype, x.dtype)
+    squeeze = x.ndim == 1
+    xp = x[:, None] if squeeze else x
+    halo = max(abs(int(o)) for o in offsets)
+    xp = jnp.pad(xp.astype(acc_dtype), ((halo, halo), (0, 0)))
+    acc = jnp.zeros((n, xp.shape[1]), acc_dtype)
+    for d, off in enumerate(offsets):
+        seg = jax.lax.slice_in_dim(xp, halo + off, halo + off + n, axis=0)
+        acc = acc + bands[d][:, None].astype(acc_dtype) * seg
+    out = acc.astype(compute_dtype)
+    return out[:, 0] if squeeze else out

@@ -90,6 +90,77 @@ def choose_matvec_blocks(m: int, n: int, dtype_name: str = "float32",
 
 
 @functools.lru_cache(maxsize=256)
+def choose_spmv_block(n: int, width: int, dtype_name: str = "float32",
+                      k: int = 1, budget: int = VMEM_BUDGET) -> int:
+    """Pick ``block_m`` (rows per grid step) for the ELL SpMV kernel.
+
+    The gather kernel keeps the WHOLE operand x (n, k) resident in VMEM
+    (sparse column patterns touch arbitrary rows of x, so tiling x would
+    re-stream it once per row block); per grid step it adds a
+    double-buffered (bm, width) values tile + int32 cols tile and the
+    (bm, k) f32 output tile.  We maximize the row block under the budget —
+    bigger blocks amortize the gather setup and the grid overhead.
+    """
+    s = itemsize(dtype_name)
+    sub = sublane(dtype_name)
+    resident = _round_up(n, LANE) * k * 4          # x, promoted to f32
+    best = sub
+    for bm in (128, 256, 512, 1024, 2048):
+        need = 2 * bm * width * (s + 4) + resident + bm * k * 4
+        if need <= budget:
+            best = bm
+    return min(best, _round_up(n, sub))
+
+
+def spmv_fits(n: int, width: int, dtype, k: int = 1,
+              budget: int = VMEM_BUDGET) -> bool:
+    """Can the gather SpMV kernel keep the full operand x in VMEM?
+
+    This is the kernel's hard requirement (see ``choose_spmv_block``); when
+    it fails — n in the several-millions for f32 — the operator degrades to
+    the jnp gather reference, which XLA streams from HBM.
+    """
+    s = itemsize(dtype)
+    sub = sublane(dtype)
+    need = (2 * sub * width * (s + 4)        # minimal values+cols tiles
+            + _round_up(n, LANE) * k * 4     # resident x
+            + sub * k * 4)                   # output tile
+    return need <= budget
+
+
+@functools.lru_cache(maxsize=256)
+def choose_banded_block(n: int, nbands: int, dtype_name: str = "float32",
+                        halo: int = 0, k: int = 1,
+                        budget: int = VMEM_BUDGET) -> int:
+    """Pick ``block_m`` for the banded/stencil SpMV kernel.
+
+    The kernel holds the halo-padded operand (n + 2*halo, k) resident in
+    VMEM (each band reads a shifted window of it) plus a double-buffered
+    (bm, nbands) bands tile and the (bm, k) output tile.
+    """
+    s = itemsize(dtype_name)
+    sub = sublane(dtype_name)
+    resident = _round_up(n + 2 * halo, LANE) * k * 4
+    best = sub
+    for bm in (128, 256, 512, 1024, 2048, 4096):
+        need = 2 * bm * nbands * s + resident + bm * k * 4
+        if need <= budget:
+            best = bm
+    return min(best, _round_up(n, sub))
+
+
+def banded_fits(n: int, nbands: int, dtype, halo: int = 0, k: int = 1,
+                budget: int = VMEM_BUDGET) -> bool:
+    """Can the banded kernel keep the halo-padded operand in VMEM?"""
+    s = itemsize(dtype)
+    sub = sublane(dtype)
+    need = (2 * sub * nbands * s
+            + _round_up(n + 2 * halo, LANE) * k * 4
+            + sub * k * 4)
+    return need <= budget
+
+
+@functools.lru_cache(maxsize=256)
 def choose_gs_block(m1: int, n: int, dtype_name: str = "float32",
                     budget: int = VMEM_BUDGET):
     """Pick ``block_n`` for the streaming fused Gram-Schmidt kernel.

@@ -7,9 +7,9 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import arnoldi, givens
+from repro.core import arnoldi, givens, stencils
 from repro.core.gmres import gmres
-from repro.core.operators import random_diagdom
+from repro.core.operators import SparseOperator, random_diagdom
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
@@ -85,6 +85,43 @@ def test_gmres_residual_reported_is_true(seed):
     true = float(jnp.linalg.norm(b - a @ res.x))
     np.testing.assert_allclose(float(res.residual), true,
                                rtol=1e-4, atol=1e-6)
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 40),
+       width=st.integers(1, 5),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_sparse_matvec_matches_dense_materialization(seed, n, width, dtype):
+    """SparseOperator matvec == its dense materialization @ v, any width/dtype."""
+    key = jax.random.PRNGKey(seed)
+    a = np.array(jax.random.normal(key, (n, n)))
+    keep = np.asarray(jax.random.uniform(jax.random.PRNGKey(seed + 1),
+                                         (n, n)))
+    a[keep > width / n] = 0.0              # ~width nonzeros per row (ragged)
+    a = a.astype(dtype)
+    op = SparseOperator.from_dense(a)
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (n,)
+                          ).astype(dtype)
+    got = np.asarray(op(v), np.float32)
+    want = np.asarray(op.todense() @ v, np.float32)
+    tol = 3e-2 if dtype == "bfloat16" else 3e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@given(seed=st.integers(0, 10_000), nx=st.integers(2, 8),
+       ny=st.integers(2, 8),
+       fmt=st.sampled_from(["banded", "ell"]),
+       dtype=st.sampled_from(["float32", "bfloat16"]))
+def test_stencil_operator_matches_dense_materialization(seed, nx, ny, fmt,
+                                                        dtype):
+    """Both sparse formats agree with the dense matrix they represent."""
+    op = stencils.convection_diffusion_2d(nx, ny, beta=(0.4, 0.2),
+                                          dtype=jnp.dtype(dtype), fmt=fmt)
+    v = jax.random.normal(jax.random.PRNGKey(seed), (nx * ny,)
+                          ).astype(dtype)
+    got = np.asarray(op(v), np.float32)
+    want = np.asarray(op.todense() @ v, np.float32)
+    tol = 3e-2 if dtype == "bfloat16" else 3e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
 
 
 @given(seed=st.integers(0, 10_000), scale=st.floats(1e-3, 1e3))

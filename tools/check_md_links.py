@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Offline markdown link checker for the docs CI job.
+
+Validates, for every markdown file passed on the command line:
+
+  * relative links (``[text](path)`` / ``[text](path#anchor)``) point at
+    files that exist in the repo;
+  * intra-file anchors (``[text](#section)``) match a heading in the file,
+    using GitHub's slugification (lowercase, spaces to dashes, punctuation
+    stripped);
+  * reference-style definitions (``[label]: target``) get the same checks.
+
+External links (http/https/mailto) are deliberately NOT fetched — the job
+must be deterministic and offline — only their syntax is accepted.  Fails
+with a per-file report and exit code 1 on any broken link, which is what
+keeps README/docs from silently rotting as files move.
+
+    python tools/check_md_links.py README.md ROADMAP.md docs/*.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — skipping images' leading ! is unnecessary (same rules),
+# but ignore escaped brackets and in-code spans by a line-level heuristic.
+INLINE_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+REF_DEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading -> anchor slug: lowercase, drop punctuation, dash."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)   # linked headings
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def strip_code(text: str) -> str:
+    """Drop fenced code blocks and inline code spans (links there are prose)."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`]*`", "", text)
+
+
+def check_file(path: Path) -> list[str]:
+    text = path.read_text(encoding="utf-8")
+    anchors = {github_slug(h) for h in HEADING.findall(text)}
+    prose = strip_code(text)
+    errors = []
+    targets = INLINE_LINK.findall(prose) + REF_DEF.findall(prose)
+    for target in targets:
+        if target.startswith(EXTERNAL):
+            continue
+        if target.startswith("#"):
+            if target[1:] not in anchors:
+                errors.append(f"{path}: broken anchor {target!r}")
+            continue
+        rel, _, anchor = target.partition("#")
+        dest = (path.parent / rel).resolve()
+        if not dest.exists():
+            errors.append(f"{path}: broken link {target!r} "
+                          f"(no such file {rel!r})")
+        elif anchor and dest.suffix == ".md":
+            dest_anchors = {github_slug(h)
+                            for h in HEADING.findall(dest.read_text())}
+            if anchor not in dest_anchors:
+                errors.append(f"{path}: broken anchor {target!r} "
+                              f"(not a heading in {rel!r})")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_md_links.py FILE.md [FILE.md ...]")
+        return 2
+    errors = []
+    checked = 0
+    for name in argv:
+        p = Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        errors.extend(check_file(p))
+        checked += 1
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"checked {checked} file(s): "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
