@@ -77,10 +77,20 @@ def _make_step_fn(matvec, precond, gs: str, axis_name, *, identity_precond,
         from repro.kernels import tuning
 
         mode = tuning.kernel_mode()
+        # ``compute_dtype`` narrower than A's storage (bf16 basis over an
+        # f32 matrix) downcasts the A STREAM too: tiles enter the kernel at
+        # half width and accumulate f32 in-register, halving the dominant
+        # HBM term of the step.  The per-restart true residual still runs
+        # through the operator's own full-precision matvec, so reported
+        # convergence stays trustworthy.
+        a_dtype = matvec.a.dtype if isinstance(matvec, DenseOperator) else None
+        if (a_dtype is not None
+                and tuning.itemsize(basis_dtype) < tuning.itemsize(a_dtype)):
+            a_dtype = basis_dtype
         if (axis_name is None and identity_precond and mode != "ref"
                 and isinstance(matvec, DenseOperator)
                 and tuning.fused_step_fits(m + 1, n, basis_dtype,
-                                           a_dtype=matvec.a.dtype)):
+                                           a_dtype=a_dtype)):
             from repro.kernels import arnoldi_fused
 
             interp = mode == "interpret"
@@ -90,10 +100,11 @@ def _make_step_fn(matvec, precond, gs: str, axis_name, *, identity_precond,
             # allocates the carry at ``basis_shape`` directly (padded rows
             # and columns stay zero and are masked in the kernel); A is
             # padded here, outside the loop.
-            block = tuning.choose_fused_block(n, matvec.a.dtype)
+            block = tuning.choose_fused_block(n, a_dtype)
             n_pad = tuning._round_up(n, block)
             m1_pad = tuning._round_up(m + 1, tuning.sublane(basis_dtype))
-            a_pad = jnp.pad(matvec.a, ((0, n_pad - n), (0, n_pad - n)))
+            a_pad = jnp.pad(matvec.a.astype(a_dtype),
+                            ((0, n_pad - n), (0, n_pad - n)))
 
             def fused_step(v_basis, j):
                 h, w = arnoldi_fused.arnoldi_step(a_pad, v_basis, j,
@@ -208,6 +219,9 @@ def gmres(
       compute_dtype: Krylov-basis storage dtype (e.g. ``jnp.bfloat16``)
         — halves basis HBM traffic; reductions still accumulate in f32 and
         the per-restart true-residual recompute bounds the rounding error.
+        On the ``gs="fused"`` path a compute dtype narrower than A's
+        storage also downcasts the A STREAM (tiles enter the kernel at the
+        narrow width, accumulate f32 in-register).
 
     Returns GmresResult; residual is the TRUE residual recomputed from x.
     """
@@ -255,7 +269,55 @@ def gmres(
 # --------------------------------------------------------------------------
 # Block multi-RHS solver
 # --------------------------------------------------------------------------
-def _block_cycle(blockmv, vprecond, gs_step, x0, r0, beta, m, tol_abs,
+# Schemes whose arithmetic is CGS2 — the batched block-GS kernel implements
+# exactly that, so any of these may ride it in gmres_batched.
+_CGS2_FAMILY = ("cgs2", "cgs2_fused", "fused", "arnoldi_fused")
+
+
+def _make_batched_gs(gs: str, m: int, n: int, basis_dtype) -> Callable:
+    """Build ``batched_gs(v, w, j) -> ArnoldiStep`` (all args lane-batched).
+
+    With a CGS2-family scheme, a kernel-capable backend and per-lane bases
+    that fit VMEM, both Gram-Schmidt passes for every lane run through the
+    batched block-GS kernel (kernels/block_gs.py): each grid step holds ONE
+    lane's (m+1, n) basis resident, streaming it once per Arnoldi step
+    instead of the vmapped reference's four.  Everything else — non-CGS2
+    schemes, ``kernel_mode() == "ref"``, VMEM overflow — vmaps the jnp
+    scheme (kernel scheme names degrade exactly as before).
+    """
+    if gs in _CGS2_FAMILY:
+        from repro.kernels import tuning
+
+        mode = tuning.kernel_mode()
+        if mode != "ref" and tuning.block_gs_fits(m + 1, n, basis_dtype):
+            from repro.kernels import block_gs
+
+            interp = mode == "interpret"
+            # The cycle allocates the lane bases pre-padded to the kernel's
+            # tile grid (``basis_shape``, same pattern as the fused Arnoldi
+            # path): padding the loop-carried (k, m+1, n) basis inside the
+            # step would copy it through HBM every inner iteration.
+            m1p, n_pad, _ = tuning.choose_block_gs(
+                m + 1, n, 1, jnp.dtype(basis_dtype).name)
+
+            def kernel_gs(v, w, j):
+                mask = (jnp.arange(m1p)[None, :] <= j[:, None]).astype(
+                    jnp.float32)
+                w_pad = jnp.pad(w, ((0, 0), (0, n_pad - n)))  # (k, n_pad):
+                h, w2 = block_gs.batched_cgs2(v, w_pad, mask,  # cheap next
+                                              interpret=interp)  # to V
+                return jax.vmap(arnoldi.finalize)(
+                    w2[:, :n].astype(w.dtype), h[:, :m + 1].astype(w.dtype),
+                    j)
+
+            kernel_gs.basis_shape = (m1p, n_pad)
+            return kernel_gs
+
+    gs_step = arnoldi.step(_SCHEME_FALLBACK.get(gs, gs))
+    return lambda v, w, j: jax.vmap(gs_step)(v, w, j)
+
+
+def _block_cycle(blockmv, vprecond, batched_gs, x0, r0, beta, m, tol_abs,
                  active0, basis_dtype):
     """One restart cycle over k lanes stepping in lockstep.
 
@@ -269,8 +331,12 @@ def _block_cycle(blockmv, vprecond, gs_step, x0, r0, beta, m, tol_abs,
     dtype = x0.dtype
     eps = jnp.asarray(jnp.finfo(dtype).tiny ** 0.5, dtype)
 
+    # Kernel-backed GS may ask for tile-aligned lane bases (see
+    # _make_batched_gs); padded rows/columns are zero and never touched.
+    basis_rows, basis_cols = getattr(batched_gs, "basis_shape", (m + 1, n))
     v0 = (r0 / jnp.maximum(beta, eps)[:, None]).astype(basis_dtype)
-    v = jnp.zeros((k, m + 1, n), basis_dtype).at[:, 0].set(v0)
+    v = jnp.zeros((k, basis_rows, basis_cols), basis_dtype).at[
+        :, 0, :n].set(v0)
     giv = jax.vmap(lambda be: givens.init(m, be, dtype))(beta)
     done = jnp.logical_not(active0) | (beta <= tol_abs)
     steps = jnp.zeros((k,), jnp.int32)
@@ -284,10 +350,10 @@ def _block_cycle(blockmv, vprecond, gs_step, x0, r0, beta, m, tol_abs,
         j = steps                                     # per-lane step index
         active = jnp.logical_not(done) & (steps < m)
         # --- the k current Krylov vectors hit A as ONE GEMM ---
-        vj = jax.vmap(lambda vb, jj: vb[jj])(v, j).astype(dtype)
+        vj = jax.vmap(lambda vb, jj: vb[jj, :n])(v, j).astype(dtype)
         w = blockmv(vprecond(vj))                     # (k, n)
-        st = jax.vmap(gs_step)(v, w, j)
-        v_new = jax.vmap(lambda vb, vn, jj: vb.at[jj + 1].set(vn))(
+        st = batched_gs(v, w, j)
+        v_new = jax.vmap(lambda vb, vn, jj: vb.at[jj + 1, :n].set(vn))(
             v, st.v_next.astype(basis_dtype), j)
         v = jnp.where(active[:, None, None], v_new, v)
         giv = jax.vmap(
@@ -301,7 +367,7 @@ def _block_cycle(blockmv, vprecond, gs_step, x0, r0, beta, m, tol_abs,
 
     v, giv, done, steps = lax.while_loop(cond, body, (v, giv, done, steps))
     y = jax.vmap(givens.solve)(giv, steps)            # (k, m)
-    dx = jnp.einsum("km,kmn->kn", y, v[:, :m].astype(dtype))
+    dx = jnp.einsum("km,kmn->kn", y, v[:, :m, :n].astype(dtype))
     x = x0 + vprecond(dx)
     return x, steps
 
@@ -319,11 +385,16 @@ def gmres_batched(a, b: jax.Array, *, m: int = 30, tol: float = 1e-5,
     shared HBM stream of A, a k-fold arithmetic-intensity win (this is the
     multi-RHS workload of the paper's Table 1 systems, batched).
 
-    Per-lane orthogonalization/Givens state stays lane-parallel via vmap
-    (O(m^2) scalar work, not worth a kernel).  Fused/kernel GS scheme names
-    degrade to their jnp equivalents here — each lane has its OWN basis, so
-    there is no shared operand for a GS kernel to exploit.  Matrix-free
-    operators fall back to a vmapped mat-vec (nothing to share).
+    Orthogonalization is kernel-backed too: with a CGS2-family ``gs`` the
+    per-lane Gram-Schmidt runs through the batched block-GS kernel
+    (kernels/block_gs.py) — one grid step per lane with that lane's basis
+    VMEM-resident, cutting its per-step HBM streams from four to one, the
+    same way ``block_matvec`` already cut the A streams.  Lanes whose
+    bases exceed VMEM (``tuning.block_gs_fits``), non-CGS2 schemes, and
+    kernel-free backends vmap the jnp scheme instead.  Per-lane Givens
+    state stays lane-parallel via vmap (O(m^2) scalar work, not worth a
+    kernel).  Matrix-free operators fall back to a vmapped mat-vec
+    (nothing to share).
 
     Any explicit-storage operator (``DenseOperator``, ``SparseOperator``,
     ``BandedOperator``) rides the block path: their ``__call__`` accepts an
@@ -331,11 +402,11 @@ def gmres_batched(a, b: jax.Array, *, m: int = 30, tol: float = 1e-5,
     values/cols, or stencil bands) feeds all k lanes.
     """
     op = as_operator(a)
-    gs_step = arnoldi.step(_SCHEME_FALLBACK.get(gs, gs))
     if precond is None:
         precond = lambda v: v
     vprecond = jax.vmap(precond)
     basis_dtype = b.dtype if compute_dtype is None else compute_dtype
+    batched_gs = _make_batched_gs(gs, m, b.shape[1], basis_dtype)
 
     if isinstance(op, EXPLICIT_OPERATORS):
         blockmv = lambda xs: op(xs.T).T    # (k, n) -> ONE (n, k) block SpMV/GEMM
@@ -360,8 +431,8 @@ def gmres_batched(a, b: jax.Array, *, m: int = 30, tol: float = 1e-5,
     def body(carry):
         x, r, beta, kk, steps = carry
         active = (beta > tol_abs) & (kk < max_restarts)
-        x2, inner = _block_cycle(blockmv, vprecond, gs_step, x, r, beta, m,
-                                 tol_abs, active, basis_dtype)
+        x2, inner = _block_cycle(blockmv, vprecond, batched_gs, x, r, beta,
+                                 m, tol_abs, active, basis_dtype)
         x = jnp.where(active[:, None], x2, x)
         r, beta = resid_of(x)
         return x, r, beta, kk + active.astype(jnp.int32), steps + inner

@@ -13,8 +13,27 @@ vs. classical Arnoldi's ~4 collective rounds PER STEP (CGS2) or j+2 (MGS).
 On a pod where a psum costs axis-latency x log P, collective ROUNDS — not
 bytes — bound small-m solves; s-step trades rounds for local (s x s) and
 (m x s) matmuls, the MXU's favorite trade.  Round ratio per s steps:
-4s -> s + 4 (the s mat-vec all-gathers remain; a matrix-powers kernel
-would remove those too for stencil operators, not for dense A).
+4s -> s + 4 (the s mat-vec all-gathers remain; the matrix-powers kernel
+removes their HBM passes too for stencil operators, not for dense A).
+
+Since PR 3 the whole block step is kernel-backed on single-shard solves
+(same dispatch contract as the standard cycle got in PR 1):
+
+  powers   kernels/matrix_powers.py — all s normalized powers in ONE
+           pallas_call.  Banded/stencil operators keep the band stack
+           VMEM-resident (one HBM pass over A for the whole block); dense
+           A streams once per power with the normalization reductions
+           fused in-register.  Gated by ``tuning.powers_fits``.
+  block GS kernels/block_gs.py — each CGS2 pass is one pallas_call with
+           the basis VMEM-resident: projection, update and the CholQR
+           Gram matrix in-register (V streamed twice per block step
+           instead of four times).  Gated by ``tuning.block_gs_fits``.
+           The (s, s) Cholesky between passes is replicated algebra and
+           stays out here, at the collective boundary.
+
+Row-sharded (``axis_name``) and ``kernel_mode() == "ref"`` solves run the
+psum-safe jnp references (``matrix_powers_ref`` / ``block_gs_pass_ref``)
+— identical arithmetic, collectives where the kernel outputs sit.
 
 Hessenberg reconstruction (exact, from the power recurrence):
   u_0 = v_k;  A u_{j-1} = sigma_j u_j  (sigma_j = normalization scale)
@@ -26,6 +45,11 @@ Hessenberg reconstruction (exact, from the power recurrence):
   k..k+s-1 form an invertible triangular block S1r:
       H_new = (S2 - H_known S1_masked) @ inv(S1r)
   — all replicated (m x s)-sized algebra, collective-free.
+
+The per-cycle least-squares solve folds the (m+1, m) Hessenberg through
+the same incremental Givens QR the standard solver uses (core/givens.py)
+— O(m^2) rotations instead of the dense ``lstsq`` SVD path, and the same
+replicated, collective-free footprint.
 
 Caveat (inherent to the method, documented since Chronopoulos 1986): the
 monomial basis conditions like kappa(A)^s, so practical s is 2..8 in f32;
@@ -39,60 +63,112 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import arnoldi
+from repro.core import arnoldi, givens
 from repro.core.gmres import GmresResult
-from repro.core.operators import as_operator
+from repro.core.operators import BandedOperator, DenseOperator, as_operator
 
 
-def _psum(x, axis_name):
-    return x if axis_name is None else lax.psum(x, axis_name)
+def _make_block_fns(op, n: int, s: int, m1: int, dtype, axis_name):
+    """Trace-time dispatch: (powers_fn, gs_pass_fn, basis_shape).
+
+    Kernel paths need a single-shard solve, a kernel-capable backend
+    (``tuning.kernel_mode() != "ref"``) and a working set that fits VMEM;
+    anything else gets the psum-safe jnp references.  Mirrors the
+    ``gs="fused"`` dispatch in core/gmres.py — including the pre-padded
+    loop carry: when the block-GS kernel is engaged, ``basis_shape`` is
+    the tile-aligned (m1_pad, n_pad) the cycle allocates directly, so the
+    basis is never re-padded (a full HBM copy) inside the block step.
+    """
+    from repro.kernels import block_gs, matrix_powers, tuning
+
+    mode = tuning.kernel_mode()
+    interp = mode == "interpret"
+    guard = float(jnp.finfo(dtype).tiny) ** 0.5   # breakdown guard
+
+    powers_fn = None
+    if mode != "ref" and axis_name is None:
+        if isinstance(op, BandedOperator):
+            halo = max(abs(int(o)) for o in op.offsets)
+            if tuning.powers_fits(n, op.bands.dtype, s,
+                                  nbands=op.bands.shape[0], halo=halo):
+                powers_fn = lambda u0: matrix_powers.banded_powers(
+                    op.bands, u0, op.offsets, s, interpret=interp)
+        elif isinstance(op, DenseOperator):
+            if tuning.powers_fits(n, op.a.dtype, s):
+                block = tuning.choose_powers_block(
+                    n, jnp.dtype(op.a.dtype).name, s=s)
+                powers_fn = lambda u0: matrix_powers.dense_powers(
+                    op.a, u0, s, block=block, interpret=interp)
+    if powers_fn is None:
+        powers_fn = lambda u0: matrix_powers.matrix_powers_ref(
+            op, u0, s, guard, axis_name)
+
+    if (mode != "ref" and axis_name is None
+            and tuning.block_gs_fits(m1, n, dtype, s=s)):
+        gs_pass = lambda v, w, tin, mask: block_gs.block_gs_pass(
+            v, w, tin, mask, interpret=interp)
+        m1p, n_pad, _ = tuning.choose_block_gs(m1, n, s,
+                                               jnp.dtype(dtype).name)
+        basis_shape = (m1p, n_pad)
+    else:
+        gs_pass = lambda v, w, tin, mask: block_gs.block_gs_pass_ref(
+            v, w, tin, mask, axis_name)
+        basis_shape = (m1, n)
+    return powers_fn, gs_pass, basis_shape
 
 
-def _block_step(matvec, v_basis, h, k_start: int, s: int, axis_name, eps):
+def _block_step(powers_fn, gs_pass, v_basis, h, k_start: int, s: int, eps,
+                n: int):
     """One s-step block at STATIC offset k_start.
 
-    v_basis: (m+1, n_local), rows 0..k_start valid orthonormal basis.
-    h: (m+1, m) Hessenberg built so far (columns >= k_start are zero).
-    Returns (v_basis with rows k_start+1..k_start+s written,
-             h with columns k_start..k_start+s-1 written).
+    v_basis: (m1_pad, n_pad) basis carry — live rows/cols are (m+1, n),
+    any padding rows/cols are zero (see ``_make_block_fns``).  h: (m+1, m)
+    Hessenberg built so far (columns >= k_start are zero).  Returns
+    (v_basis with rows k_start+1..k_start+s written,
+     h with columns k_start..k_start+s-1 written).
     """
-    m1 = v_basis.shape[0]
+    m1p, n_pad = v_basis.shape
+    m1 = h.shape[0]                      # live rows: m + 1
     dtype = v_basis.dtype
 
     # ---- s mat-vecs, no inner products (communication: matvec only) -----
-    def power(u, _):
-        w = matvec(u)
-        nrm = jnp.sqrt(_psum(jnp.vdot(w, w).real, axis_name))
-        u_next = w / jnp.maximum(nrm, eps)
-        return u_next, (u_next, nrm)
+    # One fused launch on the kernel path: A is streamed once for the whole
+    # block (banded) or once per power (dense), u_j never round-trips.
+    u_cols, sigma = powers_fn(v_basis[k_start, :n])
+    u_cols = u_cols.astype(dtype)        # (s, n) power basis; A u_{j-1} =
+    sigma = sigma.astype(dtype)          # sigma[j] u_j
+    if n_pad != n:                       # cheap (s, n_pad) copy; the BASIS
+        u_cols = jnp.pad(u_cols, ((0, 0), (0, n_pad - n)))  # is never re-padded
 
-    _, (u_cols, sigma) = lax.scan(power, v_basis[k_start], None, length=s)
-    # u_cols: (s, n_local) unit-ish power basis; A u_{j-1} = sigma[j] u_j
+    # ---- block orthogonalization: CGS2 + CholQR on the whole block ------
+    row_mask = (jnp.arange(m1p) <= k_start).astype(dtype)
 
-    # ---- block orthogonalization: CGS2 on the whole block ----------------
-    row_mask = (jnp.arange(m1) <= k_start)[:, None].astype(dtype)
-
-    def gs_pass(w):
-        c = _psum(v_basis @ w.T, axis_name) * row_mask    # (m1, s)
-        return c, w - c.T @ v_basis
-
-    def cholqr(w):
-        g = _psum(w @ w.T, axis_name)                     # (s, s)
+    def cholqr_factor(g):
         # ridge scaled to the Gram's magnitude: keeps Cholesky PSD even
         # when the block is (near-)degenerate — e.g. the solve converged
-        # mid-cycle and the power basis collapsed.
-        ridge = jnp.maximum(jnp.max(jnp.diagonal(g)), 1.0) * eps
+        # mid-cycle and the power basis collapsed.  The floor is the
+        # scale-free breakdown guard, NOT an absolute 1.0: a system scaled
+        # by c must produce the same solve (only a true zero Gram hits it).
+        g = g.astype(dtype)
+        guard = jnp.asarray(jnp.finfo(dtype).tiny ** 0.5, dtype)
+        ridge = jnp.maximum(jnp.max(jnp.diagonal(g)), guard) * eps
         g = g + ridge * jnp.eye(s, dtype=dtype)
-        r = jnp.linalg.cholesky(g).mT                     # upper
-        q = jax.scipy.linalg.solve_triangular(r.mT, w, lower=True)
-        return q, r
+        return jnp.linalg.cholesky(g).mT                  # upper
 
-    c1, w1 = gs_pass(u_cols)
-    q1, r1 = cholqr(w1)
-    c2, w2 = gs_pass(q1)          # reorthogonalization (CGS2 stability)
-    q, r2 = cholqr(w2)
-    c_tot = c1 + c2 @ r1          # (m1, s):  U = V^T c_tot + Q^T r_tot
-    r_tot = r2 @ r1               # (s, s) upper
+    eye_s = jnp.eye(s, dtype=dtype)
+    c1, w1, g1 = gs_pass(v_basis, u_cols, eye_s, row_mask)
+    r1 = cholqr_factor(g1)
+    # T = inv(R1^T): folds the CholQR back-substitution (Q1 = R1^{-T} W1)
+    # into the second pass's stream instead of a separate (s, n) solve.
+    t1 = jax.scipy.linalg.solve_triangular(r1.mT, eye_s, lower=True)
+    c2, w2, g2 = gs_pass(v_basis, w1.astype(dtype), t1, row_mask)
+    r2 = cholqr_factor(g2)
+    q = jax.scipy.linalg.solve_triangular(r2.mT, w2.astype(dtype),
+                                          lower=True)
+    # Padded basis rows are masked to zero in C, so the Hessenberg algebra
+    # below runs at the live (m+1) row count.
+    c_tot = (c1[:m1] + c2[:m1] @ r1).astype(dtype)  # (m1, s)
+    r_tot = r2 @ r1                                 # (s, s) upper
 
     # ---- exact Hessenberg columns from the power recurrence --------------
     # X_j in the (m+1)-row global frame; q_l lives at basis row k_start+1+l.
@@ -105,7 +181,7 @@ def _block_step(matvec, v_basis, h, k_start: int, s: int, axis_name, eps):
     s2 = jnp.stack([sigma[j - 1] * xs[j] for j in range(1, s + 1)], axis=1)
 
     s1r = lax.dynamic_slice(s1, (k_start, 0), (s, s))     # invertible tri
-    s1_masked = s1 * row_mask * (jnp.arange(m1) < k_start)[:, None]
+    s1_masked = s1 * (jnp.arange(m1) < k_start)[:, None]
     corr = h @ s1_masked[: h.shape[1]]                    # (m1, s)
     h_new = jnp.linalg.solve(s1r.T, (s2 - corr).T).T      # (m1, s)
 
@@ -119,29 +195,57 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
                 axis_name: Optional[str] = None) -> GmresResult:
     """Restarted s-step GMRES(m = s * blocks).
 
-    The per-cycle least-squares solve runs once on the replicated
-    (m+1, m) Hessenberg — tiny next to the mat-vecs and collective-free.
+    ``a`` may be any operator ``gmres`` accepts; ``BandedOperator`` /
+    ``DenseOperator`` systems run the block step through the Pallas
+    matrix-powers + block-GS kernels when single-shard and VMEM-sized
+    (see module docstring), degrading to the jnp reference otherwise.
+    The per-cycle least-squares solve folds the replicated (m+1, m)
+    Hessenberg through incremental Givens QR — tiny next to the mat-vecs
+    and collective-free.
     """
     matvec = as_operator(a)
     if x0 is None:
         x0 = jnp.zeros_like(b)
+    n = b.shape[0]
     dtype = b.dtype
-    eps = jnp.asarray(jnp.finfo(dtype).eps * 100, dtype)
+    eps = jnp.asarray(jnp.finfo(dtype).eps * 100, dtype)   # relative factor
+    guard = jnp.asarray(jnp.finfo(dtype).tiny ** 0.5, dtype)
     m = s * blocks
     bnorm = arnoldi.norm(b, axis_name)
     tol_abs = tol * bnorm
+    powers_fn, gs_pass, basis_shape = _make_block_fns(matvec, n, s, m + 1,
+                                                      dtype, axis_name)
 
     def cycle(x):
         r = b - matvec(x)
         beta = arnoldi.norm(r, axis_name)
-        v = jnp.zeros((m + 1, b.shape[0]), dtype).at[0].set(
-            r / jnp.maximum(beta, eps))
+        v = jnp.zeros(basis_shape, dtype).at[0, :n].set(
+            r / jnp.maximum(beta, guard))
         h = jnp.zeros((m + 1, m), dtype)
         for blk in range(blocks):                  # static offsets
-            v, h = _block_step(matvec, v, h, blk * s, s, axis_name, eps)
-        e1 = jnp.zeros((m + 1,), dtype).at[0].set(beta)
-        y = jnp.linalg.lstsq(h, e1)[0]
-        return x + y @ v[:m]
+            v, h = _block_step(powers_fn, gs_pass, v, h, blk * s, s, eps, n)
+
+        # Fold the m Hessenberg columns through incremental Givens QR.  The
+        # ``done`` latch mirrors the standard solver's cycle masking: once
+        # the LS residual meets tol or a subdiagonal collapses (the Krylov
+        # space is exhausted — e.g. b an eigenvector), remaining columns
+        # fold as identity with y_j = 0, keeping R nonsingular where the
+        # old dense ``lstsq`` relied on the SVD's min-norm behavior.
+        def fold(j, carry):
+            st, done = carry
+            col = lax.dynamic_slice(h, (0, j), (m + 1, 1))[:, 0]
+            st = givens.update(st, col, j, active=jnp.logical_not(done))
+            # Relative breakdown probe: a subdiagonal that has collapsed
+            # against its own column (an all-zero column included) marks
+            # the Krylov space exhausted, at ANY system scale.
+            happy = jnp.abs(col[j + 1]) <= eps * jnp.max(jnp.abs(col))
+            done = done | (givens.residual_norm(st, j) <= tol_abs) | happy
+            return st, done
+
+        giv, _ = lax.fori_loop(
+            0, m, fold, (givens.init(m, beta, dtype), beta <= tol_abs))
+        y = givens.solve(giv)
+        return x + y @ v[:m, :n]
 
     def cond(carry):
         _, beta, it = carry

@@ -6,6 +6,10 @@
   cgs2.py          fused Gram-Schmidt projection (Arnoldi orthogonalization)
   arnoldi_fused.py ONE-pallas_call Arnoldi step: mat-vec + CGS2, basis
                    VMEM-resident, w/h never round-trip to HBM
+  matrix_powers.py s-step matrix powers: all s Krylov directions in ONE
+                   launch (banded A resident; dense streamed once/power)
+  block_gs.py      block Gram-Schmidt: fused CGS2+CholQR pass for the
+                   s-step cycle + batched per-lane CGS2 for gmres_batched
   tuning.py        VMEM block-size autotuner + backend dispatch policy
   attention.py     blockwise flash attention w/ GQA + sliding window
   ssd.py           Mamba2 SSD chunk scan, state carried in VMEM (zamba2 lever)
@@ -21,8 +25,12 @@ mode on CPU, jnp reference elsewhere; see ``tuning.kernel_mode``.
 from repro.kernels import ops, ref, tuning
 from repro.kernels.arnoldi_fused import arnoldi_step as arnoldi_step_fused
 from repro.kernels.attention import attention as flash_attention
+from repro.kernels.block_gs import (batched_cgs2, block_gs_pass,
+                                    block_gs_pass_ref)
 from repro.kernels.cgs2 import cgs2 as cgs2_fused, gs_project as gs_project_fused
 from repro.kernels.gated_norm import gated_rmsnorm, gated_rmsnorm_ref
+from repro.kernels.matrix_powers import (banded_powers, dense_powers,
+                                         matrix_powers_ref)
 from repro.kernels.matvec import block_matvec, matvec as matvec_tiled
 from repro.kernels.spmv import (banded_matvec, banded_matvec_ref, ell_matvec,
                                 ell_matvec_ref)
@@ -32,6 +40,8 @@ __all__ = [
     "ops", "ref", "tuning", "flash_attention", "cgs2_fused",
     "gs_project_fused", "matvec_tiled", "block_matvec", "ell_matvec",
     "ell_matvec_ref", "banded_matvec", "banded_matvec_ref",
-    "arnoldi_step_fused", "ssd_scan", "ssd_scan_ref", "gated_rmsnorm",
+    "arnoldi_step_fused", "banded_powers", "dense_powers",
+    "matrix_powers_ref", "block_gs_pass", "block_gs_pass_ref",
+    "batched_cgs2", "ssd_scan", "ssd_scan_ref", "gated_rmsnorm",
     "gated_rmsnorm_ref",
 ]

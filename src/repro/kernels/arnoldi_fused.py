@@ -24,7 +24,11 @@ the projection and the update.  This kernel runs the ENTIRE step in one
 
 HBM traffic per step: A once, V once, v_j once in; h + w'' once out.  The
 unfused kernel pair streams V four times and round-trips w three times —
-``benchmarks/kernel_bench.py`` carries the model.
+``benchmarks/kernel_bench.py`` carries the model.  A streams in whatever
+dtype it arrives in and upcasts in-register: the solver exploits this for
+``compute_dtype=bf16`` by downcasting the padded A ONCE per solve
+(core/gmres.py), halving the dominant HBM term while the dot_generals
+still accumulate at f32/f64.
 
 Feasibility (V must fit in VMEM) is decided by ``tuning.fused_step_fits``;
 ``core/gmres.py`` falls back to the streaming cgs2 kernel, then to the jnp

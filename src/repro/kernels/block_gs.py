@@ -1,0 +1,212 @@
+"""Pallas TPU kernels: one-pass BLOCK Gram-Schmidt (CGS2 + CholQR support).
+
+Two block orthogonalization workloads share the same structural problem:
+the basis V is the big operand, and the jnp reference streams it from HBM
+once per level-2 product —
+
+s-step GMRES (core/sstep.py) orthogonalizes an (s, n) power block W
+against the (m1, n) basis with block-CGS2 + CholQR.  Per CGS2 pass the
+reference makes TWO V streams (projection ``C = V W^T``, update
+``W' = W - C^T V``) and the CholQR that follows re-streams W' for the
+Gram matrix and again for the triangular solve: 4 passes over V plus
+three W round-trips per block step.
+
+``gmres_batched`` orthogonalizes k lanes, each against its OWN (m1, n)
+basis; the vmapped jnp CGS2 streams every lane's basis four times per
+Arnoldi step (2 passes x projection + update).
+
+Both kernels here hold the basis block ENTIRELY in VMEM for the duration
+of one grid step — the same residency bet ``arnoldi_fused`` makes, gated
+by ``tuning.block_gs_fits`` — so V is read from HBM exactly once per pass
+and the intermediates never leave the chip:
+
+``block_gs_pass`` — one fused s-step pass.  Inputs V, W, a small (s, s)
+  transform T and the row mask; ONE grid step computes
+
+      Q   = T @ W                (CholQR back-substitution of the PREVIOUS
+                                  pass, fused into this one's stream)
+      C   = mask * (V Q^T)       block projection
+      W'  = Q - C^T V            block update
+      G   = W' W'^T              Gram matrix for the NEXT CholQR
+
+  in-register.  The (s, s) Cholesky between passes is replicated
+  collective-boundary algebra and stays OUTSIDE with the caller (exactly
+  like the norm in ``arnoldi.finalize``): pass 1 runs with T = I, the
+  caller Cholesky-factors G, and pass 2 receives T = inv(R1^T).  Per
+  block step V is streamed twice (once per pass) instead of four times,
+  and the 3 W round-trips disappear — the ``block_gs_*`` rows in
+  benchmarks/kernel_bench.py model the ratio at ~0.48.
+
+``batched_cgs2`` — the (k, m1, n) Gram-Schmidt for ``gmres_batched``.
+  Grid (k,): each step holds ONE lane's basis in VMEM and runs BOTH CGS2
+  passes against it (no CholQR — each lane orthogonalizes a single
+  vector; normalization stays outside, at the psum boundary).  Each
+  lane's V is streamed once per Arnoldi step instead of four times.
+
+Both accumulate in f32 (f64 under x64) and upcast a bf16-stored basis
+in-register, matching the other kernels in this package.
+
+``block_gs_pass_ref`` is the psum-safe jnp fallback: with ``axis_name``
+set, the C and G reductions complete across the row-sharded mesh — the
+collective boundaries sit exactly where the kernel's outputs do, which is
+why the sharded solve can fall back with identical semantics.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels import tuning
+
+
+def _dot(a, b, dims, acc):
+    return lax.dot_general(a, b, dimension_numbers=(dims, ((), ())),
+                           preferred_element_type=acc)
+
+
+# --------------------------------------------------------------------------
+# s-step block pass: Q = T W;  C = mask * (V Q^T);  W' = Q - C^T V;  G = W'W'^T
+# --------------------------------------------------------------------------
+def _block_gs_kernel(v_ref, w_ref, t_ref, mask_ref, c_ref, wout_ref, g_ref):
+    acc = g_ref.dtype
+    v = v_ref[...].astype(acc)                        # (m1p, np) upcast
+    q = _dot(t_ref[...], w_ref[...], ((1,), (0,)), acc)      # (sp, np)
+    c = mask_ref[...] * _dot(v, q, ((1,), (1,)), acc)        # (m1p, sp)
+    w2 = q - _dot(c, v, ((0,), (0,)), acc)                   # (sp, np)
+    g = _dot(w2, w2, ((1,), (1,)), acc)                      # (sp, sp)
+    c_ref[...] = c
+    wout_ref[...] = w2
+    g_ref[...] = g
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_gs_pass(v: jax.Array, w: jax.Array, tin: jax.Array,
+                  mask: jax.Array, *, interpret: bool = False):
+    """One fused block-GS pass.  v: (m1, n); w: (s, n); tin: (s, s);
+    mask: (m1,).  Returns ``(c, w', g)`` — see the module docstring."""
+    m1, n = v.shape
+    s = w.shape[0]
+    if w.shape[1] != n:
+        raise TypeError(f"block_gs_pass: v {v.shape} and w {w.shape} must "
+                        f"share the vector length")
+    if tin.shape != (s, s) or mask.shape != (m1,):
+        raise TypeError(f"block_gs_pass: tin {tin.shape} must be ({s}, {s}) "
+                        f"and mask {mask.shape} ({m1},)")
+    acc = jnp.promote_types(w.dtype, jnp.float32)
+    m1p, np_, sp = tuning.choose_block_gs(m1, n, s, jnp.dtype(v.dtype).name)
+    v = jnp.pad(v, ((0, m1p - m1), (0, np_ - n)))
+    # Padded W rows / T rows are zero, so Q's padded rows — and with them
+    # C's padded columns and G's padded block — stay exactly zero.
+    w = jnp.pad(w.astype(acc), ((0, sp - s), (0, np_ - n)))
+    tin = jnp.pad(tin.astype(acc), ((0, sp - s), (0, sp - s)))
+    mask = jnp.pad(mask.astype(acc), (0, m1p - m1))
+
+    c, w2, g = pl.pallas_call(
+        _block_gs_kernel,
+        grid=(1,),
+        in_specs=[
+            # Everything is ONE block: V fetched once, VMEM-resident for
+            # projection AND update within this pass.
+            pl.BlockSpec((m1p, np_), lambda _: (0, 0)),
+            pl.BlockSpec((sp, np_), lambda _: (0, 0)),
+            pl.BlockSpec((sp, sp), lambda _: (0, 0)),
+            pl.BlockSpec((m1p, 1), lambda _: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m1p, sp), lambda _: (0, 0)),
+            pl.BlockSpec((sp, np_), lambda _: (0, 0)),
+            pl.BlockSpec((sp, sp), lambda _: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m1p, sp), acc),
+            jax.ShapeDtypeStruct((sp, np_), acc),
+            jax.ShapeDtypeStruct((sp, sp), acc),
+        ],
+        interpret=interpret,
+        name="gmres_block_gs",
+    )(v, w, tin, mask[:, None])
+    return c[:m1, :s], w2[:s, :n], g[:s, :s]
+
+
+def block_gs_pass_ref(v: jax.Array, w: jax.Array, tin: jax.Array,
+                      mask: jax.Array, axis_name=None):
+    """jnp oracle / psum-safe fallback for ``block_gs_pass``.
+
+    The two reductions (C and G) complete over ``axis_name`` when set —
+    the collective rounds of the s-step method, one per reduction.
+    """
+    acc = jnp.promote_types(w.dtype, jnp.float32)
+    q = tin.astype(acc) @ w.astype(acc)
+    c = v.astype(acc) @ q.T
+    if axis_name is not None:
+        c = lax.psum(c, axis_name)
+    c = c * mask.astype(acc)[:, None]
+    w2 = q - c.T @ v.astype(acc)
+    g = w2 @ w2.T
+    if axis_name is not None:
+        g = lax.psum(g, axis_name)
+    return c, w2, g
+
+
+# --------------------------------------------------------------------------
+# batched per-lane CGS2 for gmres_batched
+# --------------------------------------------------------------------------
+def _batched_cgs2_kernel(v_ref, w_ref, mask_ref, h_ref, wout_ref):
+    acc = h_ref.dtype
+    v = v_ref[0].astype(acc)                          # (m1p, np) this lane
+    w = w_ref[...]                                    # (1, np)
+    mask = mask_ref[...]                              # (1, m1p)
+    # Both CGS2 passes against the VMEM-resident lane basis; h and the
+    # intermediate w' never exist in HBM.
+    h1 = mask * _dot(w, v, ((1,), (1,)), acc)         # (1, m1p) project
+    w1 = w - _dot(h1, v, ((1,), (0,)), acc)           # (1, np)   update
+    h2 = mask * _dot(w1, v, ((1,), (1,)), acc)        # reorthogonalize
+    w2 = w1 - _dot(h2, v, ((1,), (0,)), acc)
+    h_ref[...] = h1 + h2
+    wout_ref[...] = w2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batched_cgs2(v: jax.Array, w: jax.Array, mask: jax.Array, *,
+                 interpret: bool = False):
+    """Per-lane CGS2, one lane's basis VMEM-resident per grid step.
+
+    v: (k, m1, n) per-lane bases; w: (k, n) fresh mat-vec outputs; mask:
+    (k, m1) per-lane valid-row masks (lanes sit at different step counts).
+    Returns ``(h, w'')`` with h (k, m1) and w'' (k, n) — unnormalized, the
+    per-lane norm/breakdown probe stays outside (``arnoldi.finalize``).
+    """
+    k, m1, n = v.shape
+    if w.shape != (k, n) or mask.shape != (k, m1):
+        raise TypeError(f"batched_cgs2: v {v.shape} needs w ({k}, {n}) and "
+                        f"mask ({k}, {m1}); got {w.shape}, {mask.shape}")
+    acc = jnp.promote_types(w.dtype, jnp.float32)
+    m1p, np_, _ = tuning.choose_block_gs(m1, n, 1, jnp.dtype(v.dtype).name)
+    v = jnp.pad(v, ((0, 0), (0, m1p - m1), (0, np_ - n)))
+    w = jnp.pad(w.astype(acc), ((0, 0), (0, np_ - n)))
+    mask = jnp.pad(mask.astype(acc), ((0, 0), (0, m1p - m1)))
+
+    h, w2 = pl.pallas_call(
+        _batched_cgs2_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, m1p, np_), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, np_), lambda i: (i, 0)),
+            pl.BlockSpec((1, m1p), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m1p), lambda i: (i, 0)),
+            pl.BlockSpec((1, np_), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, m1p), acc),
+            jax.ShapeDtypeStruct((k, np_), acc),
+        ],
+        interpret=interpret,
+        name="gmres_block_gs_batched",
+    )(v, w, mask)
+    return h[:, :m1], w2[:, :n]

@@ -1,0 +1,277 @@
+"""Pallas TPU kernels: the s-step matrix-powers computation in ONE launch.
+
+The s-step (communication-avoiding) GMRES cycle (core/sstep.py) opens each
+block with s normalized mat-vec powers
+
+    u_0 = v_k;   w = A u_{j-1};  sigma_j = ||w||;  u_j = w / sigma_j
+
+and NO per-step inner products.  Run through the operator layer that is s
+separate SpMV/GEMV launches: each power streams A from HBM, writes w back,
+re-reads it for the norm, and writes the normalized u — the intermediate
+vectors round-trip s times even though every u_j is consumed exactly once,
+by the very next power.
+
+These kernels run the WHOLE power sequence in one ``pallas_call``:
+
+``banded_powers`` — banded/stencil operators.  The band stack (nbands, n)
+  is tiny next to a dense matrix (5 vectors for the five-point Poisson
+  stencil), so it sits ENTIRELY in VMEM together with the operand and the
+  (s, n) output block: A is read from HBM exactly ONCE for all s powers
+  (s HBM passes collapse to 1) and no u_j ever exists in HBM before the
+  final block write.  The grid is (s,) — one step per power — with the
+  current operand carried in a halo-padded VMEM scratch between steps, so
+  each power is pure VPU work over statically shifted windows (the same
+  gather-free structure as ``spmv.banded_matvec``).
+
+``dense_powers`` — explicit dense A.  The (n, n) matrix cannot be
+  VMEM-resident, so A streams once PER POWER in MXU-aligned (b, b) tiles
+  (grid (s, nbi, nbj), tile index maps ignore the power index) — that
+  stream is irreducible for dense A (see core/sstep.py's round-count
+  analysis).  What fusion removes is everything else: the w accumulator
+  and the current operand live in VMEM scratch across the whole grid, the
+  normalization reductions run in-register at each power boundary, and
+  only the final (s, n) block + sigmas are written out.
+
+Both kernels accumulate in f32 (f64 under x64) whatever the storage dtype
+— bf16 bands/tiles halve the matrix stream without quantizing the power
+recurrence — and both bake the breakdown guard ``u = w / max(|w|, guard)``
+with ``guard = tiny**0.5`` (the standard solver's normalization guard:
+small enough that any representable system scale keeps the recurrence
+``A u_{j-1} = sigma_j u_j`` exact, only a true zero block is clamped), so
+a collapsed basis (solve converged mid-block) degrades exactly like the
+jnp reference.
+
+``matrix_powers_ref`` is the jnp oracle and the ``kernel_mode() == "ref"``
+/ row-sharded fallback: the per-power norm psums over ``axis_name``, which
+is why the distributed solve cannot use the fused kernels (the reduction
+must cross shards between powers).
+
+HBM traffic per s-step block (f32, five-point stencil, modeled in
+``benchmarks/kernel_bench.py`` as the ``sstep_powers_*`` rows):
+
+    fused banded:  (nbands + s + 1) * 4n         bands + x in, U out
+    s SpMV launches: s * (nbands + 4) * 4n       bands re-streamed + w/u trips
+
+— ratio (nbands + s + 1) / (s * (nbands + 4)) ~= 0.28 at s = 4.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tuning
+
+
+def _acc_dtype(mat_dtype, x_dtype):
+    return jnp.promote_types(jnp.promote_types(mat_dtype, x_dtype),
+                             jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Banded / stencil matrix powers
+# --------------------------------------------------------------------------
+def _banded_powers_kernel(bands_ref, x_ref, u_ref, sig_ref, pad_ref, *,
+                          offsets, halo, eps):
+    p = pl.program_id(0)
+    n_pad = u_ref.shape[1]
+    acc = sig_ref.dtype
+
+    @pl.when(p == 0)
+    def _seed():
+        # Zero the halo once; the operand for power 0 is x itself.
+        pad_ref[...] = jnp.zeros_like(pad_ref)
+        pad_ref[:, pl.ds(halo, n_pad)] = x_ref[...].astype(acc)
+
+    # One banded mat-vec over the VMEM-carried operand: static unroll over
+    # the diagonals, each band an elementwise product with a shifted window
+    # of the halo-padded current vector.  Padded columns (>= n) carry zero
+    # bands, so they contribute nothing to w or the norm.
+    w = jnp.zeros((1, n_pad), acc)
+    for d, off in enumerate(offsets):
+        band = bands_ref[d:d + 1, :].astype(acc)              # (1, n_pad)
+        w += band * pad_ref[:, pl.ds(halo + off, n_pad)]
+
+    sigma = jnp.sqrt(jnp.sum(w * w))
+    u = w / jnp.maximum(sigma, eps)
+    sig_ref[0, p] = sigma
+    u_ref[pl.ds(p, 1), :] = u
+    pad_ref[:, pl.ds(halo, n_pad)] = u     # operand for the next power
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("offsets", "s", "interpret"))
+def banded_powers(bands: jax.Array, x: jax.Array, offsets: tuple, s: int, *,
+                  interpret: bool = False):
+    """All s normalized powers of a banded operator in one launch.
+
+    bands: (nbands, n); offsets: static diagonal shifts (see
+    ``spmv.banded_matvec``); x: (n,) starting vector (u_0).  Returns
+    ``(u, sigma)`` with u (s, n) — row j-1 is u_j — and sigma (s,), the
+    pre-normalization norms ``||A u_{j-1}||``.
+    """
+    nbands, n = bands.shape
+    if len(offsets) != nbands:
+        raise TypeError(f"banded_powers: {nbands} bands but {len(offsets)} "
+                        f"offsets")
+    if x.shape != (n,):
+        raise TypeError(f"banded_powers: bands {bands.shape} need x of "
+                        f"shape ({n},), got {x.shape}")
+    halo = max(abs(int(o)) for o in offsets)
+    n_pad = tuning._round_up(n, tuning.LANE)
+    acc = _acc_dtype(bands.dtype, x.dtype)
+    eps = float(jnp.finfo(acc).tiny) ** 0.5   # breakdown guard, scale-free
+    if n_pad != n:
+        bands = jnp.pad(bands, ((0, 0), (0, n_pad - n)))
+        x = jnp.pad(x, (0, n_pad - n))
+    s_pad = tuning._round_up(s, tuning.sublane(acc))
+
+    u, sig = pl.pallas_call(
+        functools.partial(_banded_powers_kernel, offsets=offsets,
+                          halo=halo, eps=eps),
+        grid=(s,),
+        in_specs=[
+            # Both operands are ONE block each: fetched once, VMEM-resident
+            # across all s powers.
+            pl.BlockSpec((nbands, n_pad), lambda p: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda p: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((s_pad, n_pad), lambda p: (0, 0)),
+            pl.BlockSpec((1, s_pad), lambda p: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_pad, n_pad), acc),
+            jax.ShapeDtypeStruct((1, s_pad), acc),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, n_pad + 2 * halo), acc)],
+        interpret=interpret,
+        name="gmres_sstep_powers_banded",
+    )(bands, x[None, :])
+    return u[:s, :n], sig[0, :s]
+
+
+# --------------------------------------------------------------------------
+# Dense matrix powers
+# --------------------------------------------------------------------------
+def _dense_powers_kernel(a_ref, x_ref, u_ref, sig_ref, cur_ref, w_ref, *,
+                         bm, s, nb, eps):
+    p = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    acc = sig_ref.dtype
+    first_tile = (i == 0) & (j == 0)
+
+    def _normalize(power):
+        w = w_ref[...]
+        sigma = jnp.sqrt(jnp.sum(w * w))
+        sig_ref[0, power] = sigma
+        u = w / jnp.maximum(sigma, eps)
+        u_ref[pl.ds(power, 1), :] = u
+        return u
+
+    @pl.when(first_tile & (p == 0))
+    def _seed():
+        cur_ref[...] = x_ref[...].astype(acc)
+
+    @pl.when(first_tile & (p > 0))
+    def _advance():
+        # Fused normalization: the finished power's norm and scale run
+        # in-register at the power boundary — w never visits HBM.
+        cur_ref[...] = _normalize(p - 1)
+
+    @pl.when(first_tile)
+    def _reset():
+        w_ref[...] = jnp.zeros_like(w_ref)
+
+    # w[i-block] += cur[j-block] @ A[i, j]^T — row-major throughout so the
+    # per-tile partial lands directly in the (1, n) accumulator.
+    w_ref[:, pl.ds(i * bm, bm)] += jax.lax.dot_general(
+        cur_ref[:, pl.ds(j * bm, bm)], a_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=acc,
+    )
+
+    @pl.when((p == s - 1) & (i == nb - 1) & (j == nb - 1))
+    def _finish():
+        _normalize(s - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("s", "block", "interpret"))
+def dense_powers(a: jax.Array, x: jax.Array, s: int, *,
+                 block: int | None = None, interpret: bool = False):
+    """All s normalized powers of a dense A in one launch.
+
+    a: (n, n); x: (n,).  A streams once per power (irreducible for dense
+    storage); the w accumulator, current operand, and all s normalization
+    reductions stay in VMEM.  Returns ``(u, sigma)`` as ``banded_powers``.
+    """
+    n = a.shape[0]
+    if a.shape != (n, n) or x.shape != (n,):
+        raise TypeError(f"dense_powers: a {a.shape} must be square and x "
+                        f"{x.shape} of length {n}")
+    if block is None:
+        block = tuning.choose_powers_block(n, jnp.dtype(a.dtype).name, s=s)
+    b = min(block, tuning._round_up(n, tuning.LANE))
+    n_pad = tuning._round_up(n, b)
+    acc = _acc_dtype(a.dtype, x.dtype)
+    eps = float(jnp.finfo(acc).tiny) ** 0.5   # breakdown guard, scale-free
+    if n_pad != n:
+        a = jnp.pad(a, ((0, n_pad - n), (0, n_pad - n)))
+        x = jnp.pad(x, (0, n_pad - n))
+    nb = n_pad // b
+    s_pad = tuning._round_up(s, tuning.sublane(acc))
+
+    u, sig = pl.pallas_call(
+        functools.partial(_dense_powers_kernel, bm=b, s=s, nb=nb, eps=eps),
+        grid=(s, nb, nb),
+        in_specs=[
+            # A tiles ignore the power index: the same (i, j) sweep streams
+            # the matrix once per power.
+            pl.BlockSpec((b, b), lambda p, i, j: (i, j)),
+            pl.BlockSpec((1, n_pad), lambda p, i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((s_pad, n_pad), lambda p, i, j: (0, 0)),
+            pl.BlockSpec((1, s_pad), lambda p, i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_pad, n_pad), acc),
+            jax.ShapeDtypeStruct((1, s_pad), acc),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, n_pad), acc),      # current operand u_{j-1}
+            pltpu.VMEM((1, n_pad), acc),      # w accumulator
+        ],
+        interpret=interpret,
+        name="gmres_sstep_powers_dense",
+    )(a, x[None, :])
+    return u[:s, :n], sig[0, :s]
+
+
+# --------------------------------------------------------------------------
+# jnp oracle / fallback
+# --------------------------------------------------------------------------
+def matrix_powers_ref(matvec, x: jax.Array, s: int, eps, axis_name=None):
+    """s normalized powers via s sequential mat-vecs (the jnp reference).
+
+    ``matvec`` is any operator/callable; under ``axis_name`` the per-power
+    norm psums over the mesh axis — the reason the row-sharded s-step solve
+    stays on this path (the reduction must cross shards between powers).
+    """
+    from jax import lax
+
+    def power(u, _):
+        w = matvec(u)
+        nrm2 = jnp.vdot(w, w).real
+        if axis_name is not None:
+            nrm2 = lax.psum(nrm2, axis_name)
+        sigma = jnp.sqrt(nrm2)
+        u_next = w / jnp.maximum(sigma, jnp.asarray(eps, w.dtype))
+        return u_next, (u_next, sigma)
+
+    _, (u, sigma) = lax.scan(power, x, None, length=s)
+    return u, sigma

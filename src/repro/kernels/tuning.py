@@ -161,6 +161,81 @@ def banded_fits(n: int, nbands: int, dtype, halo: int = 0, k: int = 1,
 
 
 @functools.lru_cache(maxsize=256)
+def choose_powers_block(n: int, dtype_name: str = "float32", s: int = 4,
+                        budget: int = VMEM_BUDGET) -> int:
+    """Square A-tile size for the dense s-step matrix-powers kernel.
+
+    The kernel's resident set is the (s, n) power block plus the current
+    operand and the w accumulator (all f32); what's left of the budget goes
+    to the double-buffered A tile, biggest MXU-aligned candidate first.
+    """
+    resident = _round_up(n, LANE) * 4 * (s + 2)
+    best = LANE
+    for b in (256, 512):
+        if b > _round_up(n, LANE):
+            break
+        if (_round_up(n, b) - n) * 8 > n:
+            continue  # same padding-overhead rule as choose_fused_block
+        if 2 * b * b * itemsize(dtype_name) + resident <= budget:
+            best = b
+    return best
+
+
+def powers_fits(n: int, dtype, s: int, *, nbands: int | None = None,
+                halo: int = 0, budget: int = VMEM_BUDGET) -> bool:
+    """Can the matrix-powers kernel keep its working set in VMEM?
+
+    Both variants carry the (s, n) power block, the current operand and the
+    w/halo scratch in f32; the banded variant (``nbands`` set) additionally
+    holds the whole band stack resident (the point of the kernel: ONE HBM
+    pass over A for all s powers), the dense variant one double-buffered
+    A tile.  Failing the check sends the block step to the jnp reference.
+    """
+    s_mat = itemsize(dtype)
+    np_ = _round_up(n, LANE)
+    vecs = np_ * 4 * (_round_up(s, sublane("float32")) + 2)
+    if nbands is None:
+        b = choose_powers_block(n, jnp.dtype(dtype).name, s=s, budget=budget)
+        need = vecs + 2 * b * b * s_mat
+    else:
+        need = vecs + nbands * np_ * s_mat + (np_ + 2 * halo) * 4
+    return need <= budget
+
+
+@functools.lru_cache(maxsize=256)
+def choose_block_gs(m1: int, n: int, s: int = 1,
+                    dtype_name: str = "float32"):
+    """Padded residency plan ``(m1_pad, n_pad, s_pad)`` for the block-GS kernel.
+
+    The kernel holds the whole basis as ONE VMEM block (that is its HBM
+    win: V streamed once per pass instead of twice), so the only tiling
+    decision is the hardware-aligned padding the operands are brought to.
+    """
+    return (_round_up(m1, sublane(dtype_name)), _round_up(n, LANE),
+            _round_up(s, sublane("float32")))
+
+
+def block_gs_fits(m1: int, n: int, dtype, s: int = 1,
+                  budget: int = VMEM_BUDGET) -> bool:
+    """Can the block-GS kernel keep the (m1, n) basis block in VMEM?
+
+    Peak working set: the basis in storage ``dtype`` plus its f32 (f64
+    under x64) in-register upcast, the (s, n) operand block and its
+    orthogonalized copy, and the small C/G outputs.  Per grid step only
+    ONE basis block is resident — the batched (k, m1, n) form visits one
+    lane per step, so k does not enter the bound.
+    """
+    sb = itemsize(dtype)
+    acc = max(4, sb)
+    m1p, np_, sp = choose_block_gs(m1, n, s, jnp.dtype(dtype).name)
+    need = (m1p * np_ * (sb + acc)      # resident V + in-kernel upcast
+            + 2 * sp * np_ * acc        # W block in + W' out
+            + m1p * sp * acc            # C output
+            + 2 * sp * sp * acc)        # T in, G out
+    return need <= budget
+
+
+@functools.lru_cache(maxsize=256)
 def choose_gs_block(m1: int, n: int, dtype_name: str = "float32",
                     budget: int = VMEM_BUDGET):
     """Pick ``block_n`` for the streaming fused Gram-Schmidt kernel.

@@ -1,0 +1,224 @@
+"""Block Gram-Schmidt + matrix-powers kernels vs their jnp oracles.
+
+All kernel calls run through the Pallas interpreter on CPU (the real
+kernel arithmetic, bit-accurate), matching the dispatch CI exercises via
+``kernels.tuning.kernel_mode()``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gmres, gmres_batched, operators, stencils
+from repro.kernels import block_gs, matrix_powers, ref, tuning
+
+KEY = jax.random.PRNGKey(0)
+EPS = float(jnp.finfo(jnp.float32).eps) * 100
+
+
+def _basis(m1, n, rows, seed=1):
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(seed),
+                                           (n, min(rows, n))))
+    v = jnp.zeros((m1, n)).at[:min(rows, n)].set(q.T)
+    return v
+
+
+# --------------------------------------------------------------------------
+# matrix-powers kernels vs the sequential-matvec reference
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("nx,ny,s", [(8, 8, 2), (12, 10, 4), (16, 16, 8)])
+def test_banded_powers_matches_sequential_matvecs(nx, ny, s):
+    op = stencils.poisson_2d(nx, ny)
+    x = jax.random.normal(KEY, (nx * ny,))
+    x = x / jnp.linalg.norm(x)
+    u_k, s_k = matrix_powers.banded_powers(op.bands, x, op.offsets, s,
+                                           interpret=True)
+    u_r, s_r = matrix_powers.matrix_powers_ref(op, x, s, EPS)
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("n,s", [(64, 2), (120, 4), (300, 3)])
+def test_dense_powers_matches_sequential_matvecs(n, s):
+    """Includes padding paths (n not a lane/tile multiple)."""
+    a = operators.random_diagdom(jax.random.PRNGKey(2), n)
+    x = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    x = x / jnp.linalg.norm(x)
+    u_k, s_k = matrix_powers.dense_powers(a, x, s, interpret=True)
+    u_r, s_r = matrix_powers.matrix_powers_ref(operators.DenseOperator(a),
+                                               x, s, EPS)
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_banded_powers_bf16_bands():
+    """bf16 band storage halves the A stream; accumulation stays f32."""
+    op = stencils.convection_diffusion_2d(10, 10, dtype=jnp.bfloat16)
+    x = jax.random.normal(KEY, (100,))
+    x = x / jnp.linalg.norm(x)
+    u_k, s_k = matrix_powers.banded_powers(op.bands, x, op.offsets, 4,
+                                           interpret=True)
+    u_r, s_r = matrix_powers.matrix_powers_ref(op, x, 4, EPS)
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_r),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_banded_powers_degenerate_operand_is_finite():
+    """A zero operand must produce zeros (breakdown guard), not NaN."""
+    op = stencils.poisson_2d(8, 8)
+    u, s = matrix_powers.banded_powers(op.bands, jnp.zeros((64,)),
+                                       op.offsets, 4, interpret=True)
+    assert bool(jnp.isfinite(u).all()) and bool(jnp.isfinite(s).all())
+    np.testing.assert_allclose(np.asarray(u), 0.0)
+
+
+def test_powers_shape_validation():
+    op = stencils.poisson_2d(8, 8)
+    with pytest.raises(TypeError):
+        matrix_powers.banded_powers(op.bands, jnp.zeros((63,)), op.offsets,
+                                    4, interpret=True)
+    with pytest.raises(TypeError):
+        matrix_powers.dense_powers(jnp.zeros((8, 8)), jnp.zeros((9,)), 2,
+                                   interpret=True)
+
+
+# --------------------------------------------------------------------------
+# block GS pass kernel vs the psum-safe reference
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("m1,n,s,rows", [
+    (21, 256, 4, 8),
+    (33, 300, 4, 12),      # padding path (n not a lane multiple)
+    (17, 128, 8, 4),
+    (9, 512, 2, 5),
+])
+def test_block_gs_pass_matches_reference(m1, n, s, rows):
+    v = _basis(m1, n, rows)
+    w = jax.random.normal(jax.random.PRNGKey(4), (s, n))
+    tin = jnp.triu(jax.random.normal(jax.random.PRNGKey(5), (s, s)))
+    mask = (jnp.arange(m1) < rows).astype(jnp.float32)
+    c_k, w_k, g_k = block_gs.block_gs_pass(v, w, tin, mask, interpret=True)
+    c_r, w_r, g_r = block_gs.block_gs_pass_ref(v, w, tin, mask)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_r),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r),
+                               rtol=3e-5, atol=3e-4)
+
+
+def test_block_gs_pass_bf16_basis():
+    """bf16 basis storage upcasts in-register (f32 accumulation)."""
+    m1, n, s = 17, 256, 4
+    v = _basis(m1, n, 8).astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(6), (s, n))
+    mask = (jnp.arange(m1) < 8).astype(jnp.float32)
+    c_k, w_k, g_k = block_gs.block_gs_pass(v, w, jnp.eye(s), mask,
+                                           interpret=True)
+    c_r, w_r, g_r = block_gs.block_gs_pass_ref(v, w, jnp.eye(s), mask)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_r),
+                               rtol=2e-2, atol=2e-2)
+
+
+# --------------------------------------------------------------------------
+# batched per-lane CGS2 kernel
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("k,m1,n", [(1, 31, 160), (4, 21, 200), (3, 9, 96)])
+def test_batched_cgs2_matches_vmapped_reference(k, m1, n):
+    v = jnp.stack([_basis(m1, n, 5 + i, seed=7 + i) for i in range(k)])
+    w = jax.random.normal(jax.random.PRNGKey(8), (k, n))
+    js = jnp.arange(k) % m1                # lanes at DIFFERENT step counts
+    mask = (jnp.arange(m1)[None, :] <= js[:, None]).astype(jnp.float32)
+    h_k, w_k = block_gs.batched_cgs2(v, w, mask, interpret=True)
+    h_r, w_r = jax.vmap(ref.cgs2)(v, w, mask)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(w_k), np.asarray(w_r),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_batched_cgs2_shape_validation():
+    with pytest.raises(TypeError):
+        block_gs.batched_cgs2(jnp.zeros((2, 5, 64)), jnp.zeros((2, 63)),
+                              jnp.zeros((2, 5)), interpret=True)
+
+
+# --------------------------------------------------------------------------
+# gmres_batched dispatch: kernel when it fits, jnp fallback otherwise
+# --------------------------------------------------------------------------
+def test_gmres_batched_runs_through_block_gs(monkeypatch):
+    """The kernel path must actually engage on a fitting problem."""
+    calls = []
+    orig = block_gs.batched_cgs2
+
+    def spy(*args, **kw):
+        calls.append(1)
+        return orig(*args, **kw)
+
+    import repro.kernels.block_gs as bg_mod
+    monkeypatch.setattr(bg_mod, "batched_cgs2", spy)
+    a = operators.random_diagdom(jax.random.PRNGKey(9), 96)
+    bs = jax.random.normal(jax.random.PRNGKey(10), (3, 96))
+    res = gmres_batched(a, bs, m=16, tol=1e-5)
+    assert bool(res.converged.all())
+    assert calls, "batched_cgs2 kernel was never invoked"
+
+
+def test_gmres_batched_forced_overflow_falls_back(monkeypatch):
+    """With block_gs_fits forced False the jnp fallback must produce the
+    same solve (the silent-degrade contract)."""
+    a = operators.random_diagdom(jax.random.PRNGKey(11), 128)
+    bs = jax.random.normal(jax.random.PRNGKey(12), (3, 128))
+    res_kernel = gmres_batched(a, bs, m=20, tol=1e-5)
+
+    import repro.kernels.block_gs as bg_mod
+
+    def boom(*args, **kw):
+        raise AssertionError("kernel path taken despite forced overflow")
+
+    monkeypatch.setattr(tuning, "block_gs_fits",
+                        lambda *a_, **k_: False)
+    monkeypatch.setattr(bg_mod, "batched_cgs2", boom)
+    res_ref = gmres_batched(a, bs, m=20, tol=1e-5)
+    assert bool(res_ref.converged.all())
+    np.testing.assert_allclose(np.asarray(res_ref.x),
+                               np.asarray(res_kernel.x),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(res_ref.restarts),
+                                  np.asarray(res_kernel.restarts))
+
+
+def test_block_gs_fits_rejects_vmem_overflow():
+    assert tuning.block_gs_fits(31, 4096, jnp.float32)
+    assert tuning.block_gs_fits(33, 8192, jnp.float32, s=8)
+    # a basis block too large for VMEM must push the solve to jnp
+    assert not tuning.block_gs_fits(513, 262144, jnp.float32)
+
+
+def test_choose_block_gs_alignment():
+    m1p, np_, sp = tuning.choose_block_gs(21, 300, 4, "float32")
+    assert m1p % tuning.sublane("float32") == 0 and m1p >= 21
+    assert np_ % tuning.LANE == 0 and np_ >= 300
+    assert sp % tuning.sublane("float32") == 0 and sp >= 4
+
+
+# --------------------------------------------------------------------------
+# gmres single-RHS sanity through the batched path stays untouched
+# --------------------------------------------------------------------------
+def test_gmres_batched_kernel_path_matches_per_lane_gmres():
+    a = operators.random_diagdom(jax.random.PRNGKey(13), 160)
+    bs = jax.random.normal(jax.random.PRNGKey(14), (2, 160))
+    res = gmres_batched(a, bs, m=20, tol=1e-5)
+    for i in range(2):
+        single = gmres(a, bs[i], m=20, tol=1e-5)
+        np.testing.assert_allclose(np.asarray(res.x[i]),
+                                   np.asarray(single.x),
+                                   rtol=1e-4, atol=1e-5)
+        assert int(res.restarts[i]) == int(single.restarts)

@@ -181,6 +181,21 @@ def test_compute_dtype_bf16_basis_converges():
     assert relres(a, res.x, b) < 5e-4
 
 
+def test_compute_dtype_bf16_streams_a_on_fused_path():
+    """compute_dtype=bf16 + gs="fused" downcasts the A STREAM too: the
+    solve must still converge to the f32 solution within bf16 tolerance,
+    with at most a few extra restarts."""
+    a, b = _system(n=128, seed=19)
+    ref = gmres(a, b, m=20, tol=1e-4, gs="fused", max_restarts=100)
+    res = gmres(a, b, m=20, tol=1e-4, gs="fused",
+                compute_dtype=jnp.bfloat16, max_restarts=100)
+    assert bool(res.converged)
+    assert relres(a, res.x, b) < 5e-4
+    assert int(res.restarts) <= int(ref.restarts) + 5
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(ref.x),
+                               rtol=3e-2, atol=3e-3)
+
+
 # --------------------------------------------------------------------------
 # tuning
 # --------------------------------------------------------------------------

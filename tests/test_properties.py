@@ -124,6 +124,30 @@ def test_stencil_operator_matches_dense_materialization(seed, nx, ny, fmt,
     np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
 
 
+@given(seed=st.integers(0, 10_000), nx=st.integers(3, 10),
+       ny=st.integers(3, 10), s=st.integers(1, 8))
+def test_matrix_powers_matches_sequential_matvecs(seed, nx, ny, s):
+    """The one-launch matrix-powers kernel == s sequential matvec+normalize
+    steps, for any stencil shape and power count."""
+    from repro.kernels import matrix_powers
+
+    op = stencils.convection_diffusion_2d(nx, ny, beta=(0.4, 0.2))
+    x = jax.random.normal(jax.random.PRNGKey(seed), (nx * ny,))
+    x = x / jnp.linalg.norm(x)
+    eps = float(jnp.finfo(jnp.float32).eps) * 100
+    u_k, s_k = matrix_powers.banded_powers(op.bands, x, op.offsets, s,
+                                           interpret=True)
+    u = x
+    for j in range(s):
+        w = op(u)
+        sigma = jnp.linalg.norm(w)
+        u = w / jnp.maximum(sigma, eps)
+        np.testing.assert_allclose(np.asarray(u_k[j]), np.asarray(u),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(s_k[j]), float(sigma),
+                                   rtol=1e-4, atol=1e-5)
+
+
 @given(seed=st.integers(0, 10_000), scale=st.floats(1e-3, 1e3))
 def test_gmres_scale_invariance(seed, scale):
     """x(c*A, c*b) == x(A, b): relative-tolerance solves are scale-free."""
