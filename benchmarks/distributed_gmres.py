@@ -6,7 +6,13 @@ so the main process keeps its 1-device view) and reports:
   - wall time vs the single-device solver,
   - collective op counts/bytes from the lowered HLO (the real scaling
     quantity: per Arnoldi step CGS2 needs exactly 1 all-gather + 2 psums
-    vs MGS's j+1 collective rounds).
+    vs MGS's j+1 collective rounds; the banded kernel-path rows swap the
+    all-gather for an O(halo) neighbor exchange, and the sharded s-step
+    solver drops to ~4 rounds per s steps).
+
+Everything drives the UNIFIED solver path — ``gmres_sharded`` /
+``gmres_sstep_sharded`` are thin shard_map wrappers over the same cycle
+the single-device rows run; there is no standalone local cycle here.
 """
 from __future__ import annotations
 
@@ -21,9 +27,22 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 _CODE = textwrap.dedent("""
     import json, time
     import jax, jax.numpy as jnp
-    from repro.core import gmres, gmres_sharded, operators
+    from repro.core import (gmres, gmres_sharded, gmres_sstep,
+                            gmres_sstep_sharded, operators, stencils)
     from repro.compat import make_mesh
     from repro.roofline import parse_collectives
+
+    def coll_stats(jsol, *args):
+        lowered = jsol.lower(*args)
+        colls = parse_collectives(lowered.compile().as_text())
+        nops = sum(c.count for c in colls)
+        cbytes = sum(c.result_bytes * c.count for c in colls)
+        return nops, cbytes
+
+    def timed(jsol, *args):
+        r = jsol(*args); r.x.block_until_ready()
+        t0 = time.perf_counter(); r = jsol(*args); r.x.block_until_ready()
+        return r, time.perf_counter() - t0
 
     out = []
     mesh = make_mesh((8,), ('model',))
@@ -32,21 +51,17 @@ _CODE = textwrap.dedent("""
         b = jax.random.normal(jax.random.PRNGKey(1), (n,))
 
         single = jax.jit(lambda a, b: gmres(a, b, m=20, tol=1e-5, gs='cgs2'))
-        single(a, b).x.block_until_ready()
-        t0 = time.perf_counter(); single(a, b).x.block_until_ready()
-        t_single = time.perf_counter() - t0
+        _, t_single = timed(single, a, b)
 
         # s-step (communication-avoiding), single-device wall time; its
         # value is the ROUND count: (s + 4)/s rounds per step vs 4 (CGS2).
         # steps = one full m=20 cycle (residual checks are per-cycle).
-        from repro.core import gmres_sstep
         ssol = jax.jit(lambda a, b: gmres_sstep(a, b, s=4, blocks=5,
                                                 tol=1e-5))
-        r = ssol(a, b); r.x.block_until_ready()
-        t0 = time.perf_counter(); r = ssol(a, b); r.x.block_until_ready()
+        r, t = timed(ssol, a, b)
         out.append({"n": n, "gs": "SINGLEDEV_sstep4",
                     "t_single_us": t_single * 1e6,
-                    "t_sharded_us": (time.perf_counter() - t0) * 1e6,
+                    "t_sharded_us": t * 1e6,
                     "steps": int(r.inner_steps), "collective_ops": 0,
                     "collective_bytes": 0})
 
@@ -55,14 +70,41 @@ _CODE = textwrap.dedent("""
             sol = lambda a, b, gs=gs, pc=pc: gmres_sharded(
                 mesh, 'model', a, b, m=20, tol=1e-5, gs=gs, precond=pc)
             jsol = jax.jit(sol)
-            lowered = jsol.lower(a, b)
-            colls = parse_collectives(lowered.compile().as_text())
-            nops = sum(c.count for c in colls)
-            cbytes = sum(c.result_bytes * c.count for c in colls)
-            r = jsol(a, b); r.x.block_until_ready()
-            t0 = time.perf_counter(); r = jsol(a, b); r.x.block_until_ready()
-            t = time.perf_counter() - t0
+            nops, cbytes = coll_stats(jsol, a, b)
+            r, t = timed(jsol, a, b)
             out.append({"n": n, "gs": gs + ("+bj" if pc else ""),
+                        "t_single_us": t_single * 1e6,
+                        "t_sharded_us": t * 1e6,
+                        "steps": int(r.inner_steps),
+                        "collective_ops": nops,
+                        "collective_bytes": cbytes})
+
+    # --- the shard-aware KERNEL path: banded stencil operators ----------
+    # halo exchange instead of all-gather per matvec (watch
+    # collective_bytes collapse vs the dense rows above), split-phase
+    # CGS2 structure, and the CA s-step solver at ~4 rounds per s steps.
+    # Restart budgets are capped: the interesting quantities (per-step
+    # collective schedule, wall time per step) don't need full Poisson
+    # convergence, which is slow unpreconditioned.
+    for nx in (32, 64):
+        n = nx * nx
+        op = stencils.poisson_2d(nx, nx)       # jnp backend: the halo REF
+        bb = jnp.sin(jnp.arange(n) * 0.37)     # path; kernels are bench-
+        single = jax.jit(lambda o, v: gmres(   # marked in kernel_bench
+            o, v, m=20, tol=1e-4, max_restarts=40, gs='cgs2'))
+        _, t_single = timed(single, op, bb)
+        for tag, sol in (
+            ('banded_cgs2', lambda o, v: gmres_sharded(
+                mesh, 'model', o, v, m=20, tol=1e-4, max_restarts=40,
+                gs='cgs2')),
+            ('banded_sstep4', lambda o, v: gmres_sstep_sharded(
+                mesh, 'model', o, v, s=4, blocks=5, tol=1e-4,
+                max_restarts=40)),
+        ):
+            jsol = jax.jit(sol)
+            nops, cbytes = coll_stats(jsol, op, bb)
+            r, t = timed(jsol, op, bb)
+            out.append({"n": n, "gs": tag,
                         "t_single_us": t_single * 1e6,
                         "t_sharded_us": t * 1e6,
                         "steps": int(r.inner_steps),
@@ -77,7 +119,7 @@ def main():
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = SRC
     res = subprocess.run([sys.executable, "-c", _CODE], env=env,
-                         capture_output=True, text=True, timeout=900)
+                         capture_output=True, text=True, timeout=1800)
     if res.returncode != 0:
         print(f"distributed_gmres_FAILED,0,{res.stderr[-200:]!r}")
         return []

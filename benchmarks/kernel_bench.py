@@ -341,6 +341,161 @@ def block_gs_rows(cases=((21, 4096, 4), (33, 16384, 4), (65, 8192, 8)),
     return rows
 
 
+def sharded_cgs2_traffic(m1: int, n: int, p: int):
+    """Modeled per-shard HBM bytes for the split-phase CGS2 pair vs the
+    single-device streaming kernel at the same GLOBAL n.
+
+    Per CGS2 (two passes) the split pair streams the local basis twice per
+    pass (project kernel + update kernel — the same count as the fused
+    kernel's two-phase grid), the w shard twice per pass, and writes the
+    orthogonalized shard once per pass; h crosses HBM around each phase.
+    The single-device fused kernel moves the same structure over the full
+    n.  The point of the row: per-shard traffic is 1/P of the global
+    stream while the collective payload is 2 h-vectors (8*m1 bytes) per
+    CGS2 — constant in n.
+    """
+    ln = n // p
+    per_shard = 2 * (2 * m1 * ln + 2 * ln + ln + 4 * m1) * 4
+    single = 2 * (2 * m1 * n + 2 * n + n + 4 * m1) * 4
+    psum_bytes = 2 * m1 * 4
+    return per_shard, single, psum_bytes
+
+
+def sharded_rows(cases=((33, 65536, 8), (33, 262144, 8), (65, 65536, 4)),
+                 grids=((128, 128, 8), (256, 256, 8))):
+    """Row-sharded kernel-path rows: split-phase CGS2 + halo SpMV.
+
+    ``us`` is the measured jnp reference arithmetic of ONE shard on this
+    host (the same convention as every other row: the reference the
+    kernel replaces); the modeled numbers carry the story — per-shard
+    HBM bytes scale 1/P while the exchanged bytes are O(m1) for the CGS2
+    psums and O(halo) for the SpMV halo exchange, vs the O(n) all-gather
+    the pre-PR-5 fallback implied.
+    """
+    from repro.core import stencils
+    from repro.kernels import spmv
+
+    rows = []
+    for m1, n, p in cases:
+        ln = n // p
+        v = jax.random.normal(jax.random.PRNGKey(0), (m1, ln)) / np.sqrt(ln)
+        w = jax.random.normal(jax.random.PRNGKey(1), (ln,))
+        mask = jnp.ones((m1,), jnp.float32)
+        t = _time(jax.jit(ref.cgs2), v, w, mask)
+        shard, single, psum_bytes = sharded_cgs2_traffic(m1, n, p)
+        rows.append({
+            "name": f"sharded_cgs2_m{m1 - 1}_n{n}_p{p}",
+            "us": t * 1e6,
+            "hbm_bytes_per_shard": shard,
+            "hbm_bytes_single_device": single,
+            "traffic_ratio": shard / single,
+            "derived": (f"shard/single_hbm={shard / single:.3f} "
+                        f"psum_payload_B={psum_bytes} "
+                        f"collective_rounds_per_step=2 "
+                        f"tpu_mem_bound_shard={shard / HBM_BW * 1e6:.1f}us"),
+        })
+    for nx, ny, p in grids:
+        n = nx * ny
+        ln = n // p
+        op = stencils.poisson_2d(nx, ny)
+        nbands = op.bands.shape[0]
+        halo = max(abs(int(o)) for o in op.offsets)
+        x = jax.random.normal(jax.random.PRNGKey(1), (ln,))
+        bands_local = op.bands[:, :ln]
+        t = _time(jax.jit(lambda bl, xl: spmv.banded_matvec_halo_ref(
+            bl, jnp.pad(xl, (halo, halo)), op.offsets)), bands_local, x)
+        shard = (nbands * ln + (ln + 2 * halo) + ln) * 4
+        single = (nbands * n + 2 * n) * 4
+        exch = 2 * halo * 4
+        gather = (n - ln) * 4
+        rows.append({
+            "name": f"sharded_spmv_banded_poisson2d_{nx}x{ny}_p{p}",
+            "us": t * 1e6,
+            "hbm_bytes_per_shard": shard,
+            "hbm_bytes_single_device": single,
+            "traffic_ratio": shard / single,
+            "derived": (f"shard/single_hbm={shard / single:.3f} "
+                        f"halo_exchange_B={exch} allgather_B={gather} "
+                        f"exchange/gather={exch / gather:.2e} "
+                        f"x_vmem_resident_kib={4 * (ln + 2 * halo) // 1024}"),
+        })
+        ell = op.to_ell()
+        width = ell.values.shape[1]
+        vals_local = ell.values[:ln]
+        cols_local = jnp.clip(ell.cols[:ln] + halo, 0, ln + 2 * halo - 1)
+        t_ell = _time(jax.jit(lambda vl, cl, xl: spmv.ell_matvec_ref(
+            vl, cl, jnp.pad(xl, (halo, halo)))), vals_local, cols_local, x)
+        shard_e = (ln * width * (4 + 4) + (ln + 2 * halo) * 4 + ln * 4)
+        single_e = (n * width * (4 + 4) + 2 * n * 4)
+        rows.append({
+            "name": f"sharded_spmv_ell_poisson2d_{nx}x{ny}_p{p}",
+            "us": t_ell * 1e6,
+            "hbm_bytes_per_shard": shard_e,
+            "hbm_bytes_single_device": single_e,
+            "traffic_ratio": shard_e / single_e,
+            "derived": (f"shard/single_hbm={shard_e / single_e:.3f} "
+                        f"halo_exchange_B={exch} allgather_B={gather} "
+                        f"halo={halo} width={width}"),
+        })
+    return rows
+
+
+def precision_restart_rows(grids=((24, 24), (32, 32)), dense_ns=(512,),
+                           m: int = 20, tol: float = 1e-4):
+    """compute_dtype=bf16 precision-vs-restarts sweep (ROADMAP item).
+
+    Each case solves the SAME system twice — f32 basis vs bf16 basis
+    storage — through the jnp cgs2 path and reports the convergence cost
+    (extra inner steps / restarts) against the modeled basis-stream
+    saving: the Krylov basis is streamed 4x per CGS2 step, so bf16
+    storage halves the dominant orthogonalization traffic and the row's
+    ``traffic_ratio`` is 0.5 * steps_bf16 / steps_f32 — below 1.0 means
+    the precision trade WINS end-to-end on basis bytes.
+    """
+    from repro.core import gmres, stencils
+    from repro.core.operators import random_diagdom
+
+    def _sweep(name, op, b, n):
+        f32 = jax.jit(lambda op, b: gmres(op, b, m=m, tol=tol,
+                                          max_restarts=400))
+        bf16 = jax.jit(lambda op, b: gmres(op, b, m=m, tol=tol,
+                                           max_restarts=400,
+                                           compute_dtype=jnp.bfloat16))
+        r32 = f32(op, b)
+        t = _time(bf16, op, b)
+        r16 = bf16(op, b)
+        s32, s16 = int(r32.inner_steps), int(r16.inner_steps)
+        m1 = m + 1
+        bytes32 = s32 * 4 * m1 * n * 4
+        bytes16 = s16 * 4 * m1 * n * 2
+        return {
+            "name": name,
+            "us": t * 1e6,
+            "hbm_bytes_basis_f32": bytes32,
+            "hbm_bytes_basis_bf16": bytes16,
+            "traffic_ratio": bytes16 / bytes32 if bytes32 else 1.0,
+            "derived": (f"bf16/f32_basis_hbm={bytes16 / max(bytes32, 1):.2f} "
+                        f"steps_f32={s32} steps_bf16={s16} "
+                        f"restarts_f32={int(r32.restarts)} "
+                        f"restarts_bf16={int(r16.restarts)} "
+                        f"conv_f32={int(r32.converged)} "
+                        f"conv_bf16={int(r16.converged)}"),
+        }
+
+    rows = []
+    for nx, ny in grids:
+        n = nx * ny
+        op = stencils.poisson_2d(nx, ny)
+        b = jnp.sin(jnp.arange(n) * 0.37)
+        rows.append(_sweep(f"precision_restarts_poisson2d_{nx}x{ny}_bf16",
+                           op, b, n))
+    for n in dense_ns:
+        a = random_diagdom(jax.random.PRNGKey(3), n)
+        b = jax.random.normal(jax.random.PRNGKey(4), (n,))
+        rows.append(_sweep(f"precision_restarts_diagdom_n{n}_bf16", a, b, n))
+    return rows
+
+
 def attention_rows(cases=((1, 8, 8, 1024, 128), (1, 8, 2, 2048, 128))):
     rows = []
     attn = jax.jit(lambda q, k, v: ref.attention(q, k, v, causal=True))
@@ -388,11 +543,16 @@ def main(json_path: str = "BENCH_kernels.json", smoke: bool = False):
                 + sstep_powers_rows(grids=((64, 64, 4),))
                 + block_gs_rows(cases=((21, 4096, 4),),
                                 batched_cases=((31, 2048, 2),))
+                + sharded_rows(cases=((33, 16384, 4),),
+                               grids=((64, 64, 4),))
+                + precision_restart_rows(grids=((16, 16),), dense_ns=(),
+                                         tol=1e-3)
                 + attention_rows(cases=((1, 2, 2, 256, 64),)))
     else:
         rows = (matvec_rows() + gs_rows() + fused_step_rows()
                 + block_matvec_rows() + spmv_rows() + sstep_powers_rows()
-                + block_gs_rows() + attention_rows())
+                + block_gs_rows() + sharded_rows()
+                + precision_restart_rows() + attention_rows())
     _validate_rows(rows)
     print("name,us_per_call,derived")
     for r in rows:

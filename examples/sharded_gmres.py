@@ -1,0 +1,84 @@
+"""Row-sharded GMRES on the shard-aware kernel path — a runnable tour.
+
+The paper's experiments stop at N = 10000 because the whole dense matrix
+had to fit one 2 GB card.  This example removes that wall: the operator
+is row-sharded over a mesh axis and the SAME gmres cycle runs per shard,
+with the per-shard kernel variants dispatched automatically —
+
+  * dense operators all-gather the operand, then run the tiled local GEMV;
+  * banded/ELL stencil operators exchange only their ``halo`` boundary
+    rows with mesh neighbors (2 ppermutes, O(halo) bytes — not O(n));
+  * orthogonalization runs the split-phase CGS2 kernel pair with the h
+    psum between the phases;
+  * the s-step solver does one exchange + one psum per s powers (the
+    communication-avoiding matrix-powers kernel).
+
+Run on any machine — 4 fake host devices are requested before jax loads:
+
+    JAX_PLATFORMS=cpu python examples/sharded_gmres.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax                                                       # noqa: E402
+import jax.numpy as jnp                                          # noqa: E402
+
+from repro.compat import make_mesh                               # noqa: E402
+from repro.core import (gmres, gmres_sharded, gmres_sstep_sharded,  # noqa: E402
+                        operators, stencils)
+
+
+def main():
+    ndev = jax.device_count()
+    nshards = 4 if ndev >= 4 else 1
+    mesh = make_mesh((nshards,), ("rows",))
+    print(f"devices: {ndev} ({jax.default_backend()}), "
+          f"mesh: {nshards}-way row sharding")
+
+    # -- 1. dense: the paper's setting, beyond one device's memory -------
+    n = 1024
+    a = operators.random_diagdom(jax.random.PRNGKey(0), n)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    res = gmres_sharded(mesh, "rows", a, b, m=30, tol=1e-5)
+    rel = float(jnp.linalg.norm(a @ res.x - b) / jnp.linalg.norm(b))
+    print(f"[dense   n={n}] converged={bool(res.converged)} "
+          f"restarts={int(res.restarts)} rel_resid={rel:.2e}")
+
+    # -- 2. banded stencil: halo exchange instead of all-gather ----------
+    nx = 32
+    op = stencils.poisson_2d(nx, nx, backend="pallas")
+    n = nx * nx
+    b = jnp.sin(jnp.arange(n) * 0.37)
+    res = gmres_sharded(mesh, "rows", op, b, m=30, tol=1e-5,
+                        max_restarts=200)
+    rel = float(jnp.linalg.norm(op.todense() @ res.x - b)
+                / jnp.linalg.norm(b))
+    print(f"[banded  n={n}] converged={bool(res.converged)} "
+          f"restarts={int(res.restarts)} rel_resid={rel:.2e} "
+          f"(halo=±{max(abs(int(o)) for o in op.offsets)} rows exchanged "
+          f"per matvec)")
+
+    # -- 3. same stencil through the ELL gather path ---------------------
+    res = gmres_sharded(mesh, "rows", op.to_ell(), b, m=30, tol=1e-5,
+                        max_restarts=200)
+    print(f"[ell     n={n}] converged={bool(res.converged)} "
+          f"restarts={int(res.restarts)} resid={float(res.residual):.2e}")
+
+    # -- 4. communication-avoiding s-step: 1 exchange + 1 psum per s -----
+    res = gmres_sstep_sharded(mesh, "rows", op, b, s=4, blocks=5, tol=1e-5,
+                              max_restarts=100)
+    print(f"[sstep4  n={n}] converged={bool(res.converged)} "
+          f"restarts={int(res.restarts)} resid={float(res.residual):.2e}")
+
+    # parity spot-check against the single-device cycle (same code!)
+    ref = gmres(op, b, m=30, tol=1e-5, max_restarts=200)
+    res = gmres_sharded(mesh, "rows", op, b, m=30, tol=1e-5,
+                        max_restarts=200)
+    err = float(jnp.linalg.norm(res.x - ref.x) / jnp.linalg.norm(ref.x))
+    print(f"[parity] sharded vs single-device solution diff: {err:.2e}")
+    assert err < 2e-3
+
+
+if __name__ == "__main__":
+    main()

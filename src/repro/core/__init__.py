@@ -2,7 +2,9 @@
 
 Public API:
   gmres, gmres_batched       single-device (or shard-local) solver
-  gmres_sharded              shard_map row-sharded distributed solver
+  gmres_sharded              shard_map row-sharded distributed solver —
+                             a thin wrapper over the SAME gmres cycle
+  gmres_sstep_sharded        row-sharded communication-avoiding s-step
   strategies.*               the paper's four offload strategies
   operators.*                dense / sparse / banded / matrix-free operators
   stencils.*                 classic sparse test problems (Poisson 2D/3D,
@@ -11,13 +13,15 @@ Public API:
 """
 from repro.core.gmres import gmres, gmres_batched, gmres_jit, GmresResult
 from repro.core.sstep import gmres_sstep
-from repro.core.distributed import gmres_sharded, make_sharded_solver
+from repro.core.distributed import (gmres_sharded, gmres_sstep_sharded,
+                                    make_sharded_solver, shard_specs)
 from repro.core import (arnoldi, givens, operators, preconditioners,
                         stencils, strategies)
 
 __all__ = [
     "gmres", "gmres_batched", "gmres_jit", "GmresResult", "gmres_sstep",
-    "gmres_sharded", "make_sharded_solver",
+    "gmres_sharded", "gmres_sstep_sharded", "make_sharded_solver",
+    "shard_specs",
     "arnoldi", "givens", "operators", "preconditioners", "stencils",
     "strategies",
 ]

@@ -11,14 +11,16 @@ Four orthogonalization schemes:
              level-2 / MXU work and exactly TWO collective rounds when the
              basis is row-sharded, vs. j rounds for MGS.  Stability is
              equivalent to MGS-with-reorth (Giraud, Langou, Rozloznik 2005).
-- ``cgs2_fused`` — the same CGS2 arithmetic executed by the fused Pallas
-             kernel (``kernels/cgs2.py``): projection and update share one
-             grid, h never round-trips to HBM.  Compiled on TPU,
-             interpreted on CPU, and automatically the plain ``cgs2``
-             reference when Pallas is unavailable or the basis is
-             row-sharded (the kernel is per-shard; the h psum must sit
-             between projection and update, which only the unfused
-             reference exposes).
+- ``cgs2_fused`` — the same CGS2 arithmetic executed by the Pallas
+             kernels (``kernels/cgs2.py``).  Single-shard: the fused
+             kernel — projection and update share one grid, h never
+             round-trips to HBM.  Row-sharded (``axis_name`` set): the
+             SPLIT-PHASE pair — a per-shard project kernel, the h psum
+             at the shard_map level, a per-shard update kernel — so the
+             distributed solve stays on the kernel path with the
+             collective at the only place the scheme admits it.
+             Compiled on TPU, interpreted on CPU, and automatically the
+             plain ``cgs2`` reference when Pallas is unavailable.
 
 The basis ``V`` is stored **row-major (m+1, n)** — basis vector j is row j —
 so dynamic-index writes are contiguous and ``V @ w`` is a single GEMV.
@@ -96,17 +98,20 @@ def mgs_step(v_basis, w, j, axis_name=None) -> ArnoldiStep:
 
 
 def cgs2_fused_step(v_basis, w, j, axis_name=None) -> ArnoldiStep:
-    """CGS2 via the fused Pallas kernel (kernels/cgs2.py).
+    """CGS2 via the Pallas kernels (kernels/cgs2.py).
 
-    The kernel fuses projection and update per pass, so a row-sharded solve
-    (``axis_name`` set) cannot insert the h psum between them — that case,
-    and backends without Pallas support, fall back to the psum-correct jnp
-    reference.  On CPU the kernel runs in interpret mode (what CI tests).
+    Single-shard: the fused kernel (projection and update share one grid).
+    Row-sharded: the split-phase pair, cut where the h psum must cross
+    shards — project kernel, psum, update kernel, per pass — so the
+    distributed solve runs the same per-shard kernel arithmetic instead of
+    bailing to the reference (the pre-PR-5 behavior).  Backends without
+    Pallas support fall back to the psum-correct jnp reference; on CPU the
+    kernels run in interpret mode (what CI tests).
     """
     from repro.kernels import tuning
 
     mode = tuning.kernel_mode()
-    if axis_name is not None or mode == "ref":
+    if mode == "ref":
         return cgs2_step(v_basis, w, j, axis_name)
 
     from repro.kernels import cgs2 as cgs2_k
@@ -114,8 +119,12 @@ def cgs2_fused_step(v_basis, w, j, axis_name=None) -> ArnoldiStep:
     m1, n = v_basis.shape
     mask = _row_mask(m1, j, jnp.float32)
     bn = tuning.choose_gs_block(m1, n, jnp.dtype(v_basis.dtype).name)
-    h, w2 = cgs2_k.cgs2(v_basis, w, mask, block_n=bn,
-                        interpret=mode == "interpret")
+    if axis_name is not None:
+        h, w2 = cgs2_k.cgs2_split(v_basis, w, mask, axis_name, block_n=bn,
+                                  interpret=mode == "interpret")
+    else:
+        h, w2 = cgs2_k.cgs2(v_basis, w, mask, block_n=bn,
+                            interpret=mode == "interpret")
     return finalize(w2.astype(w.dtype), h.astype(w.dtype), j, axis_name)
 
 

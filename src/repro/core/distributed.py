@@ -1,25 +1,33 @@
 """Distributed GMRES: the paper's device-memory wall, removed by sharding.
 
 The paper could not exceed N = 10000 because A (N^2 doubles) had to fit a
-2 GB card.  Here A is **row-sharded** across a mesh axis: chip p owns the
-row block A[p*n/P:(p+1)*n/P, :] and the matching shard of every Krylov
-vector.  Per Arnoldi step the communication is:
+2 GB card.  Here the operator is **row-sharded** across a mesh axis: chip
+p owns row block p of the matrix storage (dense rows, ELL rows, or band
+columns) and the matching shard of every Krylov vector.  Per Arnoldi step
+the communication is:
 
-  - one all-gather of the sharded iterate (n values)   — for the mat-vec
-  - psum-completed inner products                      — 2 rounds for CGS2,
-                                                         j rounds for MGS
+  - the operand exchange for the mat-vec — an all-gather (n values) for
+    dense A, or a ``halo_exchange`` of O(halo) boundary values for
+    banded/ELL operators (the Ioannidis et al. 1906.04051 picture);
+  - psum-completed inner products — 2 rounds for CGS2, j rounds for MGS —
 
-which is exactly why CGS2 is the distributed scheme of choice (DESIGN.md §2).
+which is exactly why CGS2 is the distributed scheme of choice, and why
+the s-step solver (one exchange + one psum per s steps on banded systems)
+is the communication-avoiding end of the same line.
 
-Everything below is `shard_map` over the existing single-device code in
-core/gmres.py — the solver body is IDENTICAL, parameterized by ``axis_name``.
-That is the framework claim: distribution is a deployment config, not a fork
-of the numerics.
+There is ONE cycle implementation.  Everything here is a thin
+``shard_map`` wrapper: the body enters ``kernels.tuning.shard_context``
+(so operators and schemes dispatch their per-shard kernel variants — the
+split-phase CGS2 pair, halo SpMV, CA matrix powers) and calls the very
+same ``gmres`` / ``gmres_sstep`` the single-device solve uses,
+parameterized by ``axis_name``.  No Arnoldi loop, no Givens rotation, no
+orthogonalization scheme lives in this file — distribution is a
+deployment config, not a fork of the numerics.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,20 +35,77 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
+from repro.core import operators as op_mod
 from repro.core.gmres import gmres, GmresResult
+from repro.core.sstep import gmres_sstep
+from repro.kernels import tuning
 
 
-def _local_matvec(a_local: jax.Array, axis_name: str) -> Callable:
-    """Row-sharded dense mat-vec: all-gather x, local GEMM row block.
+def shard_specs(op, axis: str):
+    """Row-sharding PartitionSpec pytree for an explicit operator.
 
-    a_local: (n/P, n) row block.  Input/output are (n/P,) local shards.
+    The returned object mirrors the operator's pytree structure with a
+    spec at every array leaf — exactly what ``shard_map``'s ``in_specs``
+    (and, via ``NamedSharding``, ``jax.jit``'s ``in_shardings``) want:
+
+      DenseOperator   a      -> P(axis, None)     row blocks
+      SparseOperator  values -> P(axis, None)     row blocks (cols too;
+                                column indices stay GLOBAL — the sharded
+                                ``__call__`` remaps them per shard)
+      BandedOperator  bands  -> P(None, axis)     column blocks of the
+                                band stack == row blocks of the matrix
     """
+    if isinstance(op, op_mod.DenseOperator):
+        return op_mod.DenseOperator(P(axis, None), op.backend)
+    if isinstance(op, op_mod.SparseOperator):
+        return op_mod.SparseOperator(P(axis, None), P(axis, None),
+                                     op.backend, op.halo)
+    if isinstance(op, op_mod.BandedOperator):
+        return op_mod.BandedOperator(P(None, axis), op.offsets, op.backend)
+    raise TypeError(
+        f"gmres_sharded needs an explicit-storage operator (Dense/Sparse/"
+        f"Banded) or a dense array; got {type(op).__name__} — matrix-free "
+        f"operators already compose with shard_map directly via "
+        f"gmres(..., axis_name=...)")
 
-    def matvec(v_local):
-        v_full = lax.all_gather(v_local, axis_name, tiled=True)   # (n,)
-        return a_local @ v_full
 
-    return matvec
+def _run_sharded(mesh: Mesh, axis: str, op, b, x0, caller: str, body):
+    """Shared wrapper skeleton of the sharded entry points.
+
+    Validates divisibility, shards (op, b, x0) by ``shard_specs``, runs
+    ``body(op_local, b_local, x0_local) -> GmresResult`` per shard inside
+    the dispatch layer's ``shard_context``, and gathers the solution so
+    callers see the replicated global x.  The entry points below differ
+    ONLY in which shared cycle ``body`` calls.
+    """
+    nshards = mesh.shape[axis]
+    n = b.shape[0]
+    if n % nshards:
+        raise ValueError(f"{caller}: n={n} not divisible by the "
+                         f"{nshards}-way mesh axis")
+    if op.shape[0] != n:
+        raise ValueError(f"{caller}: operator {op.shape} vs b {b.shape}")
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
+
+    def solve_local(op_local, b_local, x0_local):
+        with tuning.shard_context(axis, nshards):
+            res = body(op_local, b_local, x0_local)
+            # x is a local shard; gather it so callers see the global x.
+            x_full = lax.all_gather(res.x, axis, tiled=True)
+            return res._replace(x=x_full)
+
+    out_specs = GmresResult(
+        x=P(), residual=P(), restarts=P(), converged=P(), inner_steps=P()
+    )
+    fn = compat.shard_map(
+        solve_local,
+        mesh=mesh,
+        in_specs=(shard_specs(op, axis), P(axis), P(axis)),
+        out_specs=out_specs,
+        check_vma=False,
+    )
+    return fn(op, b, x0)
 
 
 def _local_block_jacobi(a_local: jax.Array, axis: str):
@@ -48,9 +113,9 @@ def _local_block_jacobi(a_local: jax.Array, axis: str):
 
     own diagonal block of A and applies it with ZERO communication.  This
     is the distributed-optimization lever for Krylov methods: every Arnoldi
-    step costs one all-gather, so cutting steps k-fold cuts collective
-    rounds k-fold while the preconditioner itself stays collective-free
-    (SSPerf hillclimb 3).
+    step costs one operand exchange, so cutting steps k-fold cuts
+    collective rounds k-fold while the preconditioner itself stays
+    collective-free (SSPerf hillclimb 3).
     """
     rows, n = a_local.shape
     p = lax.axis_index(axis)
@@ -66,66 +131,105 @@ def _local_block_jacobi(a_local: jax.Array, axis: str):
 def gmres_sharded(
     mesh: Mesh,
     axis: str,
-    a: jax.Array,
+    a,
     b: jax.Array,
     x0: Optional[jax.Array] = None,
     *,
     m: int = 30,
     tol: float = 1e-5,
     max_restarts: int = 50,
-    gs: str = "cgs2",
+    gs: str = "cgs2_fused",
     precond: Optional[str] = None,
+    compute_dtype=None,
 ) -> GmresResult:
-    """Solve Ax=b with A row-sharded over ``axis`` of ``mesh``.
+    """Solve Ax=b with the operator row-sharded over ``axis`` of ``mesh``.
 
-    ``a`` is the GLOBAL (n, n) array (caller may pass it already device-
-    sharded); ``b`` global (n,).  Returns a replicated GmresResult.
-    ``precond``: None | "block_jacobi" (shard-local, communication-free).
+    ``a`` may be a GLOBAL dense (n, n) array or any explicit operator
+    (``DenseOperator`` / ``SparseOperator`` / ``BandedOperator``) holding
+    global storage — the wrapper derives the row-sharding specs from the
+    operator type (``shard_specs``) and the per-shard communication
+    pattern comes from the operator's own shard-aware mat-vec (all-gather
+    for dense, ppermute halo exchange for banded/ELL).  ``b`` is global
+    (n,).  Returns a replicated ``GmresResult``.
+
+    The default ``gs="cgs2_fused"`` runs the split-phase CGS2 kernel pair
+    per shard (project kernel, h psum, update kernel); it degrades to the
+    psum-correct jnp ``cgs2`` wherever Pallas is unavailable, so the
+    default is safe on any backend.  ``precond``: None | "block_jacobi"
+    (shard-local, communication-free; dense operators only).
     """
+    op = op_mod.as_operator(a)
+    if precond == "block_jacobi" and not isinstance(op, op_mod.DenseOperator):
+        raise ValueError("precond='block_jacobi' needs a dense operator "
+                         "(it factorizes the diagonal block of A)")
 
-    def solve_local(a_local, b_local):
-        mv = _local_matvec(a_local, axis)
-        pc = _local_block_jacobi(a_local, axis) if precond == "block_jacobi" \
-            else None
-        res = gmres(
-            mv, b_local, None, m=m, tol=tol, max_restarts=max_restarts,
-            gs=gs, axis_name=axis, precond=pc,
+    def body(op_local, b_local, x0_local):
+        pc = (_local_block_jacobi(op_local.a, axis)
+              if precond == "block_jacobi" else None)
+        return gmres(
+            op_local, b_local, x0_local, m=m, tol=tol,
+            max_restarts=max_restarts, gs=gs, axis_name=axis,
+            precond=pc, compute_dtype=compute_dtype,
         )
-        # x is a local shard; gather it so callers see the global solution.
-        x_full = lax.all_gather(res.x, axis, tiled=True)
-        return res._replace(x=x_full)
 
-    n_axis = mesh.shape[axis]
-    assert a.shape[0] % n_axis == 0, (a.shape, n_axis)
+    return _run_sharded(mesh, axis, op, b, x0, "gmres_sharded", body)
 
-    spec_a = P(axis, None)
-    spec_b = P(axis)
-    out_specs = GmresResult(
-        x=P(), residual=P(), restarts=P(), converged=P(), inner_steps=P()
-    )
-    fn = compat.shard_map(
-        solve_local,
-        mesh=mesh,
-        in_specs=(spec_a, spec_b),
-        out_specs=out_specs,
-        check_vma=False,
-    )
-    return fn(a, b)
+
+def gmres_sstep_sharded(
+    mesh: Mesh,
+    axis: str,
+    a,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    s: int = 4,
+    blocks: int = 5,
+    tol: float = 1e-5,
+    max_restarts: int = 30,
+) -> GmresResult:
+    """Row-sharded s-step GMRES — the communication-avoiding wrapper.
+
+    Same thin shard_map-over-the-shared-cycle shape as ``gmres_sharded``,
+    driving ``core.sstep.gmres_sstep``.  On banded operators the block
+    step runs the halo matrix-powers kernel (ONE neighbor exchange + ONE
+    psum for all s powers) and the split-phase block-GS pair — per s
+    steps that is 4 collective rounds where the standard sharded cycle
+    pays ~4 PER step.
+    """
+    op = op_mod.as_operator(a)
+
+    def body(op_local, b_local, x0_local):
+        return gmres_sstep(op_local, b_local, x0_local, s=s, blocks=blocks,
+                           tol=tol, max_restarts=max_restarts,
+                           axis_name=axis)
+
+    return _run_sharded(mesh, axis, op, b, x0, "gmres_sstep_sharded", body)
 
 
 def make_sharded_solver(mesh: Mesh, axis: str, n: int, *, m: int = 30,
                         tol: float = 1e-5, max_restarts: int = 50,
-                        gs: str = "cgs2"):
+                        gs: str = "cgs2_fused", operator=None):
     """jit-compiled sharded solver with explicit in/out shardings.
 
-    This is the entry the launcher and the dry-run lower: A and b arrive
-    already sharded (NamedSharding), nothing is re-laid-out at the boundary.
+    This is the entry the launcher and the dry-run lower: the operator and
+    b arrive already device-sharded (NamedSharding derived from the same
+    ``shard_specs`` the solver uses), nothing is re-laid-out at the
+    boundary.  ``operator``: a template operator whose TYPE/static fields
+    determine the shardings — pass e.g. a ``BandedOperator`` to lower the
+    stencil solver; the default (None) keeps the raw dense-array calling
+    convention, ``solver(a, b)`` with a global (n, n) array.
     """
-    solve = functools.partial(
-        gmres_sharded, mesh, axis, m=m, tol=tol, max_restarts=max_restarts, gs=gs
-    )
     from jax.sharding import NamedSharding
 
-    a_sh = NamedSharding(mesh, P(axis, None))
+    solve = functools.partial(
+        gmres_sharded, mesh, axis, m=m, tol=tol, max_restarts=max_restarts,
+        gs=gs,
+    )
+    if operator is None:
+        op_sh = NamedSharding(mesh, P(axis, None))   # raw (n, n) array
+    else:
+        specs = shard_specs(operator, axis)
+        op_sh = jax.tree_util.tree_map(
+            lambda sp: NamedSharding(mesh, sp), specs)
     b_sh = NamedSharding(mesh, P(axis))
-    return jax.jit(solve, in_shardings=(a_sh, b_sh))
+    return jax.jit(solve, in_shardings=(op_sh, b_sh))

@@ -24,7 +24,12 @@ degrades gracefully — interpret mode on CPU, jnp reference where Pallas is
 unavailable or shapes don't fit VMEM.
 
 The same inner cycle, handed an ``axis_name``, becomes the shard_map
-distributed solver (core/distributed.py).
+distributed solver (core/distributed.py) — and since PR 5 it stays
+kernel-backed there too: under the distributed wrapper's
+``tuning.shard_context`` the operators run their halo-exchange /
+all-gather per-shard mat-vecs and ``gs="cgs2_fused"`` runs the
+split-phase CGS2 kernel pair with the h psum between the phases.  There
+is exactly ONE cycle implementation for local and distributed solves.
 """
 from __future__ import annotations
 
@@ -209,11 +214,12 @@ def gmres(
       tol: relative residual target, ||b - Ax|| <= tol * ||b||.
       max_restarts: restart-cycle budget.
       gs: "cgs" (paper listing) | "mgs" (serial standard) | "cgs2" (TPU
-        path) | "cgs2_fused" (Pallas streaming GS kernel) | "fused" (whole
-        Arnoldi step in one Pallas kernel; needs an unpreconditioned
-        single-shard ``DenseOperator`` and a basis that fits VMEM —
-        degrades to "cgs2_fused" otherwise, which itself degrades to
-        "cgs2" when sharded or Pallas is unavailable).
+        path) | "cgs2_fused" (Pallas streaming GS kernel single-shard;
+        the split-phase project/psum/update kernel pair when row-sharded)
+        | "fused" (whole Arnoldi step in one Pallas kernel; needs an
+        unpreconditioned single-shard ``DenseOperator`` and a basis that
+        fits VMEM — degrades to "cgs2_fused" otherwise, which itself
+        degrades to "cgs2" where Pallas is unavailable).
       precond: right preconditioner M^{-1} as a callable (identity default).
       axis_name: mesh axis for the row-sharded distributed solve.
       compute_dtype: Krylov-basis storage dtype (e.g. ``jnp.bfloat16``)

@@ -23,16 +23,36 @@ operator, so sparse systems ride the same code path as dense ones.
 Operators are registered as pytrees so they can be passed through
 ``jax.jit`` / ``vmap`` / ``shard_map`` boundaries with their array
 payloads traced and their format/backend metadata static.
+
+ROW-SHARDED execution (PR 5): inside a ``kernels.tuning.shard_context``
+(the distributed solvers set it around their shard_map bodies) every
+explicit operator treats its payload as the LOCAL row block and its
+operand/result as local shards, and dispatches the per-shard
+communication pattern itself:
+
+  DenseOperator     all-gather the operand (dense rows touch every
+                    column), then the usual tiled local GEMV/GEMM
+  BandedOperator    ``halo_exchange`` of the operand's ``halo`` boundary
+                    rows (2 neighbor ppermutes, O(halo) bytes), then the
+                    stencil kernel over the halo-padded resident shard
+  SparseOperator    same halo exchange — the static ``halo`` field bounds
+                    max |col - row|, columns are remapped to halo-local
+                    coordinates; operators without a halo bound (or wider
+                    than a shard) fall back to all-gather + the reference
+
+so the solver layer stays one code path: ``gmres(..., axis_name=...)``
+calls the operator exactly like the single-device solve does.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 
 @jax.tree_util.register_pytree_node_class
@@ -52,14 +72,21 @@ class DenseOperator:
                  silently degrades to the jnp path.
     """
 
-    a: jax.Array  # (n, n)
+    a: jax.Array  # (n, n) — or the LOCAL (n/P, n) row block under a
+    #               ``tuning.shard_context`` (see module docstring)
     backend: str = "jnp"  # "jnp" | "pallas"
 
     def __call__(self, v: jax.Array) -> jax.Array:
-        # v: (n,) or (n, k)
-        if self.backend == "pallas":
-            from repro.kernels import tuning
+        # v: (n,) or (n, k) — local shards under a shard_context.
+        from repro.kernels import tuning
 
+        axis = tuning.shard_axis()
+        if axis is not None:
+            # Dense rows touch every column: the operand gather is
+            # irreducible.  After it, the local row-block product is the
+            # ordinary kernel/jnp path below.
+            v = lax.all_gather(v, axis, tiled=True)
+        if self.backend == "pallas":
             mode = tuning.kernel_mode()
             if mode != "ref":
                 from repro.kernels import matvec as matvec_k
@@ -118,21 +145,31 @@ class SparseOperator:
     this).  dtype semantics match dense ``a @ v``: the result is the
     promoted (values, v) dtype with f32 accumulation, so bf16 ``values``
     halve matrix traffic without quantizing an f32 operand.
+
+    ``halo`` is the STATIC matrix bandwidth — an upper bound on
+    max |col - row| over the NONZERO entries (padding slots excepted).
+    ``from_dense`` / ``BandedOperator.to_ell`` record it automatically;
+    it is what lets the row-sharded solve replace the all-gather of the
+    operand with a fixed-width neighbor halo exchange.  ``halo=None``
+    (unknown structure) keeps sharded solves correct via the all-gather
+    fallback.
     """
 
-    values: jax.Array   # (n, width)
-    cols: jax.Array     # (n, width) int32
+    values: jax.Array   # (n, width) — LOCAL row block under shard_context
+    cols: jax.Array     # (n, width) int32, GLOBAL column indices
     backend: str = "jnp"
+    halo: Optional[int] = None   # static bandwidth bound (aux data)
 
     def __call__(self, v: jax.Array) -> jax.Array:
-        from repro.kernels import spmv
+        from repro.kernels import spmv, tuning
 
+        n, width = self.values.shape
+        k = 1 if v.ndim == 1 else v.shape[1]
+        axis = tuning.shard_axis()
+        if axis is not None:
+            return self._sharded_call(v, axis, n, width, k)
         if self.backend == "pallas":
-            from repro.kernels import tuning
-
             mode = tuning.kernel_mode()
-            n, width = self.values.shape
-            k = 1 if v.ndim == 1 else v.shape[1]
             if mode != "ref" and tuning.spmv_fits(n, width,
                                                   self.values.dtype, k=k):
                 bm = tuning.choose_spmv_block(
@@ -142,13 +179,52 @@ class SparseOperator:
                                        interpret=mode == "interpret")
         return spmv.ell_matvec_ref(self.values, self.cols, v)
 
+    def _sharded_call(self, v: jax.Array, axis: str, n: int, width: int,
+                      k: int) -> jax.Array:
+        """Row-sharded SpMV: halo exchange + per-shard kernel.
+
+        ``self`` holds the local (n_local, width) row block with GLOBAL
+        column indices; ``v`` the matching (n_local, ...) operand shard.
+        Without a usable ``halo`` bound (None, or wider than a shard) the
+        operand is all-gathered instead — correct for any structure.
+        """
+        from repro.kernels import spmv, tuning
+
+        halo = self.halo
+        if halo is None or halo > n:
+            x_full = lax.all_gather(v, axis, tiled=True)
+            return spmv.ell_matvec_ref(self.values, self.cols, x_full)
+        # Remap global columns into the halo-padded local frame.  Real
+        # nonzeros land in [0, n + 2*halo) by the bandwidth bound; padding
+        # slots (value 0 at global column 0) clip to 0 and contribute 0.
+        # The remap is a pure function of solve constants, so XLA's
+        # while-loop LICM hoists it out of the Arnoldi loop (verified in
+        # the lowered HLO); do NOT cache the result on the instance —
+        # axis_index is a tracer, and a cached tracer leaks across traces.
+        p = lax.axis_index(axis)
+        cols_local = jnp.clip(self.cols - p * n + halo, 0,
+                              n + 2 * halo - 1).astype(jnp.int32)
+        x_halo = spmv.halo_exchange(v, halo, axis, tuning.shard_size())
+        mode = tuning.kernel_mode()
+        if (self.backend == "pallas" and mode != "ref"
+                and tuning.spmv_fits(n, width, self.values.dtype, k=k,
+                                     halo=halo)):
+            bm = tuning.choose_spmv_block(
+                n, width, jnp.dtype(self.values.dtype).name, k=k, halo=halo)
+            return spmv.ell_matvec_halo(self.values, cols_local, x_halo,
+                                        block_m=bm,
+                                        interpret=mode == "interpret")
+        return spmv.ell_matvec_ref(self.values, cols_local, x_halo)
+
     @classmethod
     def from_dense(cls, a, *, width: int | None = None,
                    backend: str = "jnp") -> "SparseOperator":
         """Compress a dense (n, n) matrix to ELL form.
 
         ``width`` defaults to the widest row's nonzero count; passing a
-        smaller width raises rather than silently dropping entries.
+        smaller width raises rather than silently dropping entries.  The
+        static ``halo`` (bandwidth) bound for the row-sharded path is
+        recorded from the nonzero pattern.
         """
         a_np = np.asarray(a)
         n = a_np.shape[0]
@@ -164,9 +240,11 @@ class SparseOperator:
         order = np.argsort(~mask, axis=1, kind="stable")[:, :width]
         vals = np.take_along_axis(a_np, order, axis=1)
         keep = np.take_along_axis(mask, order, axis=1)
+        rows, nz_cols = np.nonzero(mask)
+        halo = int(np.abs(nz_cols - rows).max()) if rows.size else 0
         return cls(jnp.asarray(np.where(keep, vals, 0).astype(a_np.dtype)),
                    jnp.asarray(np.where(keep, order, 0).astype(np.int32)),
-                   backend)
+                   backend, halo)
 
     def todense(self) -> jax.Array:
         """Materialize the dense (n, n) matrix (tests / small systems)."""
@@ -186,12 +264,12 @@ class SparseOperator:
         return self.values.dtype
 
     def tree_flatten(self):
-        return (self.values, self.cols), self.backend
+        return (self.values, self.cols), (self.backend, self.halo)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1],
-                   aux if aux is not None else "jnp")
+        backend, halo = aux if aux is not None else ("jnp", None)
+        return cls(children[0], children[1], backend, halo)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -224,15 +302,16 @@ class BandedOperator:
     backend: str = "jnp"
 
     def __call__(self, v: jax.Array) -> jax.Array:
-        from repro.kernels import spmv
+        from repro.kernels import spmv, tuning
 
+        nbands, n = self.bands.shape
+        halo = max(abs(int(o)) for o in self.offsets)
+        k = 1 if v.ndim == 1 else v.shape[1]
+        axis = tuning.shard_axis()
+        if axis is not None:
+            return self._sharded_call(v, axis, n, nbands, halo, k)
         if self.backend == "pallas":
-            from repro.kernels import tuning
-
             mode = tuning.kernel_mode()
-            nbands, n = self.bands.shape
-            halo = max(abs(int(o)) for o in self.offsets)
-            k = 1 if v.ndim == 1 else v.shape[1]
             if mode != "ref" and tuning.banded_fits(n, nbands,
                                                     self.bands.dtype,
                                                     halo=halo, k=k):
@@ -244,6 +323,41 @@ class BandedOperator:
                                           interpret=mode == "interpret")
         return spmv.banded_matvec_ref(self.bands, v, self.offsets)
 
+    def _sharded_call(self, v: jax.Array, axis: str, n: int, nbands: int,
+                      halo: int, k: int) -> jax.Array:
+        """Row-sharded stencil SpMV: ppermute halo exchange + local kernel.
+
+        ``self.bands`` holds the local (nbands, n_local) column block of
+        the band stack; out-of-range reads at the GLOBAL edges see the
+        zeros ``halo_exchange`` leaves on edge shards, so the semantics
+        match the single-device kernel exactly.  A stencil wider than a
+        shard (halo > n_local — pathological) falls back to an all-gather
+        window.
+        """
+        from repro.kernels import spmv, tuning
+
+        if halo > n:
+            x_full = lax.all_gather(v, axis, tiled=True)
+            pad = ((halo, halo), (0, 0)) if x_full.ndim == 2 else (halo, halo)
+            x_pad = jnp.pad(x_full, pad)
+            start = lax.axis_index(axis) * n
+            sizes = ((n + 2 * halo,) if x_full.ndim == 1
+                     else (n + 2 * halo, x_full.shape[1]))
+            starts = (start,) if x_full.ndim == 1 else (start, 0)
+            x_halo = lax.dynamic_slice(x_pad, starts, sizes)
+        else:
+            x_halo = spmv.halo_exchange(v, halo, axis, tuning.shard_size())
+        mode = tuning.kernel_mode()
+        if (self.backend == "pallas" and mode != "ref"
+                and tuning.banded_fits(n, nbands, self.bands.dtype,
+                                       halo=halo, k=k)):
+            bm = tuning.choose_banded_block(
+                n, nbands, jnp.dtype(self.bands.dtype).name, halo=halo, k=k)
+            return spmv.banded_matvec_halo(self.bands, x_halo, self.offsets,
+                                           block_m=bm,
+                                           interpret=mode == "interpret")
+        return spmv.banded_matvec_halo_ref(self.bands, x_halo, self.offsets)
+
     def to_ell(self, backend: str | None = None) -> SparseOperator:
         """Convert to ELL form (width = nbands; OOB slots become padding)."""
         nbands, n = self.bands.shape
@@ -251,8 +365,10 @@ class BandedOperator:
         cols = jnp.stack([i + off for off in self.offsets], axis=1)
         valid = (cols >= 0) & (cols < n)
         vals = jnp.where(valid, self.bands.T, 0)
+        halo = max((abs(int(o)) for o in self.offsets), default=0)
         return SparseOperator(vals, jnp.where(valid, cols, 0).astype(jnp.int32),
-                              self.backend if backend is None else backend)
+                              self.backend if backend is None else backend,
+                              halo)
 
     def todense(self) -> jax.Array:
         """Materialize the dense (n, n) matrix (tests / small systems)."""

@@ -31,9 +31,25 @@ Since PR 3 the whole block step is kernel-backed on single-shard solves
            The (s, s) Cholesky between passes is replicated algebra and
            stays out here, at the collective boundary.
 
-Row-sharded (``axis_name``) and ``kernel_mode() == "ref"`` solves run the
-psum-safe jnp references (``matrix_powers_ref`` / ``block_gs_pass_ref``)
-— identical arithmetic, collectives where the kernel outputs sit.
+Row-sharded solves (``axis_name`` under the distributed wrapper's
+``tuning.shard_context``) are kernel-backed too since PR 5:
+
+  powers   banded operators run the COMMUNICATION-AVOIDING matrix-powers
+           kernel (``matrix_powers.banded_powers_halo``): one ppermute
+           halo exchange of width s*halo, all s raw powers per-shard in
+           one pallas_call, one psum completing every norm — 2 collective
+           rounds per block where the reference pays s all-gathers +
+           s psums.  Dense A keeps the per-power all-gather reference
+           (dense rows touch every column; nothing to halo).
+  block GS the split-phase pair (``block_gs.block_gs_pass_sharded``):
+           per-shard project kernel, C psum, per-shard update kernel,
+           G psum — the collectives sit exactly where
+           ``block_gs_pass_ref`` puts them, so the cycle code is shared.
+
+``kernel_mode() == "ref"``, VMEM-overflowing shapes, and sharded solves
+without a shard_context still run the psum-safe jnp references
+(``matrix_powers_ref`` / ``block_gs_pass_ref``) — identical arithmetic,
+collectives where the kernel outputs sit.
 
 Hessenberg reconstruction (exact, from the power recurrence):
   u_0 = v_k;  A u_{j-1} = sigma_j u_j  (sigma_j = normalization scale)
@@ -71,19 +87,31 @@ from repro.core.operators import BandedOperator, DenseOperator, as_operator
 def _make_block_fns(op, n: int, s: int, m1: int, dtype, axis_name):
     """Trace-time dispatch: (powers_fn, gs_pass_fn, basis_shape).
 
-    Kernel paths need a single-shard solve, a kernel-capable backend
-    (``tuning.kernel_mode() != "ref"``) and a working set that fits VMEM;
-    anything else gets the psum-safe jnp references.  Mirrors the
-    ``gs="fused"`` dispatch in core/gmres.py — including the pre-padded
-    loop carry: when the block-GS kernel is engaged, ``basis_shape`` is
-    the tile-aligned (m1_pad, n_pad) the cycle allocates directly, so the
-    basis is never re-padded (a full HBM copy) inside the block step.
+    Kernel paths need a kernel-capable backend (``tuning.kernel_mode()
+    != "ref"``) and a working set that fits VMEM; row-sharded solves
+    additionally pick the PER-SHARD variants — the communication-avoiding
+    halo powers kernel (banded operators, when the ambient
+    ``tuning.shard_context`` supplies the ppermute geometry) and the
+    split-phase block-GS pair.  Anything else gets the psum-safe jnp
+    references.  Mirrors the ``gs="fused"`` dispatch in core/gmres.py —
+    including the pre-padded loop carry: when a block-GS kernel is
+    engaged, ``basis_shape`` is the tile-aligned (m1_pad, n_pad) the
+    cycle allocates directly, so the basis is never re-padded (a full HBM
+    copy) inside the block step.
+
+    Note ``n`` is the LOCAL vector length under sharding, so the VMEM
+    fits-checks divide by the shard count — sharding ADMITS kernel-path
+    systems the single device could not hold.
     """
-    from repro.kernels import block_gs, matrix_powers, tuning
+    from repro.kernels import block_gs, matrix_powers, spmv, tuning
 
     mode = tuning.kernel_mode()
     interp = mode == "interpret"
     guard = float(jnp.finfo(dtype).tiny) ** 0.5   # breakdown guard
+    # The halo-exchange powers path builds static ppermute permutations,
+    # which needs the shard count — only the ambient shard_context (set by
+    # core/distributed.py) carries it.
+    ctx_sharded = axis_name is not None and tuning.shard_axis() == axis_name
 
     powers_fn = None
     if mode != "ref" and axis_name is None:
@@ -99,14 +127,62 @@ def _make_block_fns(op, n: int, s: int, m1: int, dtype, axis_name):
                     n, jnp.dtype(op.a.dtype).name, s=s)
                 powers_fn = lambda u0: matrix_powers.dense_powers(
                     op.a, u0, s, block=block, interpret=interp)
+    elif (mode != "ref" and ctx_sharded and isinstance(op, BandedOperator)):
+        halo = max(abs(int(o)) for o in op.offsets)
+        nshards = tuning.shard_size()
+        if (s * halo <= n
+                and tuning.powers_fits(n + 2 * s * halo, op.bands.dtype, s,
+                                       nbands=op.bands.shape[0], halo=halo)):
+            # Bands are loop-invariant: exchange the (s-1)*halo neighbor
+            # columns ONCE here (trace top level, outside the restart
+            # loop) and zero-pad the outer halo margin.
+            bands_ex = spmv.halo_exchange(op.bands.T, (s - 1) * halo,
+                                          axis_name, nshards).T
+            bands_pad = jnp.pad(bands_ex, ((0, 0), (halo, halo)))
+            # Deferred normalization computes RAW powers, whose magnitude
+            # grows like ||A||^s — enough to overflow f32 for moderately
+            # scaled systems.  Pre-scale by theta >= ||A||_inf (row sums,
+            # pmax-completed): the kernel then powers B = A/theta with
+            # ||B||_inf <= 1, so no system scale can overflow, and the
+            # recurrence is recovered EXACTLY via
+            # sigma_j = theta * ||z'_j|| / ||z'_{j-1}|| — this also makes
+            # the sharded path scale-invariant by construction (solving
+            # c*A, c*b pre-scales c away entirely).
+            row_sums = jnp.sum(jnp.abs(op.bands.astype(jnp.float32)),
+                               axis=0)
+            theta = lax.pmax(jnp.max(row_sums), axis_name)
+            theta = jnp.maximum(theta, jnp.asarray(guard, theta.dtype))
+            bands_pad = (bands_pad.astype(jnp.float32)
+                         / theta).astype(bands_pad.dtype)
+
+            def powers_fn(u0):
+                # One neighbor exchange + one psum for ALL s powers: the
+                # kernel computes z'_j = (A/theta)^j u0 per-shard, the
+                # batched psum completes every ||z'_j||, and u_j / sigma_j
+                # follow exactly (see kernels/matrix_powers.py).
+                x_halo = spmv.halo_exchange(u0, s * halo, axis_name,
+                                            nshards)
+                z, nrm_part = matrix_powers.banded_powers_halo(
+                    bands_pad, x_halo, op.offsets, s, interpret=interp)
+                znorm = jnp.sqrt(lax.psum(nrm_part, axis_name))
+                g = jnp.asarray(guard, znorm.dtype)
+                prev = jnp.concatenate(
+                    [jnp.ones((1,), znorm.dtype), znorm[:-1]])
+                sigma = theta.astype(znorm.dtype) * znorm / jnp.maximum(
+                    prev, g)
+                u = z / jnp.maximum(znorm, g)[:, None]
+                return u, sigma
     if powers_fn is None:
         powers_fn = lambda u0: matrix_powers.matrix_powers_ref(
             op, u0, s, guard, axis_name)
 
-    if (mode != "ref" and axis_name is None
-            and tuning.block_gs_fits(m1, n, dtype, s=s)):
-        gs_pass = lambda v, w, tin, mask: block_gs.block_gs_pass(
-            v, w, tin, mask, interpret=interp)
+    if mode != "ref" and tuning.block_gs_fits(m1, n, dtype, s=s):
+        if axis_name is None:
+            gs_pass = lambda v, w, tin, mask: block_gs.block_gs_pass(
+                v, w, tin, mask, interpret=interp)
+        else:
+            gs_pass = lambda v, w, tin, mask: block_gs.block_gs_pass_sharded(
+                v, w, tin, mask, axis_name, interpret=interp)
         m1p, n_pad, _ = tuning.choose_block_gs(m1, n, s,
                                                jnp.dtype(dtype).name)
         basis_shape = (m1p, n_pad)

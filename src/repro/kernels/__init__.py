@@ -3,14 +3,22 @@
   matvec.py        tiled dense GEMV + block multi-RHS GEMM (one A stream)
   spmv.py          sparse mat-vec: ELL gather kernel + banded/stencil
                    kernel (operand VMEM-resident, bands/values streamed)
+                   + row-sharded halo variants (ppermute halo_exchange
+                   outside, halo-padded local shard resident inside)
   cgs2.py          fused Gram-Schmidt projection (Arnoldi orthogonalization)
+                   + the split-phase project/update pair the row-sharded
+                   solve runs with the h psum between them
   arnoldi_fused.py ONE-pallas_call Arnoldi step: mat-vec + CGS2, basis
                    VMEM-resident, w/h never round-trip to HBM
   matrix_powers.py s-step matrix powers: all s Krylov directions in ONE
                    launch (banded A resident; dense streamed once/power)
+                   + the communication-avoiding row-sharded banded variant
+                   (one s*halo exchange, deferred normalization, one psum)
   block_gs.py      block Gram-Schmidt: fused CGS2+CholQR pass for the
-                   s-step cycle + batched per-lane CGS2 for gmres_batched
+                   s-step cycle (+ its split-phase sharded pair) and
+                   batched per-lane CGS2 for gmres_batched
   tuning.py        VMEM block-size autotuner + backend dispatch policy
+                   (+ the shard_context that makes dispatch axis-aware)
   attention.py     blockwise flash attention w/ GQA + sliding window
   ssd.py           Mamba2 SSD chunk scan, state carried in VMEM (zamba2 lever)
   gated_norm.py    fused SiLU-gate + RMSNorm (the SSD elementwise floor)
@@ -26,22 +34,30 @@ from repro.kernels import ops, ref, tuning
 from repro.kernels.arnoldi_fused import arnoldi_step as arnoldi_step_fused
 from repro.kernels.attention import attention as flash_attention
 from repro.kernels.block_gs import (batched_cgs2, block_gs_pass,
-                                    block_gs_pass_ref)
-from repro.kernels.cgs2 import cgs2 as cgs2_fused, gs_project as gs_project_fused
+                                    block_gs_pass_ref, block_gs_pass_sharded,
+                                    block_gs_project, block_gs_update)
+from repro.kernels.cgs2 import (cgs2 as cgs2_fused, cgs2_split,
+                                gs_project as gs_project_fused,
+                                gs_project_partial, gs_update)
 from repro.kernels.gated_norm import gated_rmsnorm, gated_rmsnorm_ref
-from repro.kernels.matrix_powers import (banded_powers, dense_powers,
-                                         matrix_powers_ref)
+from repro.kernels.matrix_powers import (banded_powers, banded_powers_halo,
+                                         dense_powers, matrix_powers_ref)
 from repro.kernels.matvec import block_matvec, matvec as matvec_tiled
-from repro.kernels.spmv import (banded_matvec, banded_matvec_ref, ell_matvec,
-                                ell_matvec_ref)
+from repro.kernels.spmv import (banded_matvec, banded_matvec_halo,
+                                banded_matvec_halo_ref, banded_matvec_ref,
+                                ell_matvec, ell_matvec_halo, ell_matvec_ref,
+                                halo_exchange)
 from repro.kernels.ssd import ssd_scan, ssd_scan_ref
 
 __all__ = [
-    "ops", "ref", "tuning", "flash_attention", "cgs2_fused",
-    "gs_project_fused", "matvec_tiled", "block_matvec", "ell_matvec",
-    "ell_matvec_ref", "banded_matvec", "banded_matvec_ref",
-    "arnoldi_step_fused", "banded_powers", "dense_powers",
+    "ops", "ref", "tuning", "flash_attention", "cgs2_fused", "cgs2_split",
+    "gs_project_fused", "gs_project_partial", "gs_update", "matvec_tiled",
+    "block_matvec", "ell_matvec", "ell_matvec_halo", "ell_matvec_ref",
+    "banded_matvec", "banded_matvec_halo", "banded_matvec_halo_ref",
+    "banded_matvec_ref", "halo_exchange", "arnoldi_step_fused",
+    "banded_powers", "banded_powers_halo", "dense_powers",
     "matrix_powers_ref", "block_gs_pass", "block_gs_pass_ref",
+    "block_gs_pass_sharded", "block_gs_project", "block_gs_update",
     "batched_cgs2", "ssd_scan", "ssd_scan_ref", "gated_rmsnorm",
     "gated_rmsnorm_ref",
 ]

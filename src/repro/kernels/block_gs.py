@@ -50,6 +50,23 @@ in-register, matching the other kernels in this package.
 set, the C and G reductions complete across the row-sharded mesh — the
 collective boundaries sit exactly where the kernel's outputs do, which is
 why the sharded solve can fall back with identical semantics.
+
+ROW-SHARDED kernel path (PR 5): the fused ``block_gs_pass`` cannot run
+per-shard because the projection C must psum across shards BEFORE the
+update consumes it.  ``block_gs_project`` / ``block_gs_update`` are the
+same arithmetic split at exactly that boundary (the split-phase shape
+``kernels/cgs2.py`` uses for the standard cycle):
+
+    project kernel:  Q = T W;  C_partial = mask * (V_local Q^T)
+    psum(C)          OUTSIDE, at the shard_map level
+    update kernel:   W' = Q - C^T V_local;  G_partial = W' W'^T
+    psum(G)          OUTSIDE — feeds the replicated CholQR
+
+``block_gs_pass_sharded`` strings them together; per shard V streams once
+per phase (twice per pass — the jnp reference's count) but the CholQR
+Gram accumulates in-register with the update and W never round-trips
+within a phase, and above all the sharded s-step cycle stays on the
+kernel path instead of bailing to the reference.
 """
 from __future__ import annotations
 
@@ -149,6 +166,132 @@ def block_gs_pass_ref(v: jax.Array, w: jax.Array, tin: jax.Array,
     g = w2 @ w2.T
     if axis_name is not None:
         g = lax.psum(g, axis_name)
+    return c, w2, g
+
+
+# --------------------------------------------------------------------------
+# Split-phase s-step pass for the row-sharded solve
+# --------------------------------------------------------------------------
+def _block_gs_project_kernel(v_ref, w_ref, t_ref, mask_ref, q_ref, c_ref):
+    acc = c_ref.dtype
+    v = v_ref[...].astype(acc)                               # (m1p, np)
+    q = _dot(t_ref[...], w_ref[...], ((1,), (0,)), acc)      # (sp, np)
+    c_ref[...] = mask_ref[...] * _dot(v, q, ((1,), (1,)), acc)
+    q_ref[...] = q
+
+
+def _block_gs_update_kernel(v_ref, q_ref, c_ref, wout_ref, g_ref):
+    acc = g_ref.dtype
+    v = v_ref[...].astype(acc)
+    w2 = q_ref[...] - _dot(c_ref[...], v, ((0,), (0,)), acc)  # (sp, np)
+    g_ref[...] = _dot(w2, w2, ((1,), (1,)), acc)              # (sp, sp)
+    wout_ref[...] = w2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_gs_project(v: jax.Array, w: jax.Array, tin: jax.Array,
+                     mask: jax.Array, *, interpret: bool = False):
+    """Projection phase: Q = T W and the PRE-psum C_partial = mask*(V Q^T).
+
+    All arrays are local shards along the vector dim: v (m1, n_local), w
+    (s, n_local), tin (s, s), mask (m1,).  Returns ``(q, c_partial)`` with
+    q (s, n_local) — the transformed block the update phase consumes — and
+    c_partial (m1, s), to be psum-completed by the caller.
+    """
+    m1, n = v.shape
+    s = w.shape[0]
+    if w.shape[1] != n:
+        raise TypeError(f"block_gs_project: v {v.shape} and w {w.shape} "
+                        f"must share the vector length")
+    if tin.shape != (s, s) or mask.shape != (m1,):
+        raise TypeError(f"block_gs_project: tin {tin.shape} must be "
+                        f"({s}, {s}) and mask {mask.shape} ({m1},)")
+    acc = jnp.promote_types(w.dtype, jnp.float32)
+    m1p, np_, sp = tuning.choose_block_gs(m1, n, s, jnp.dtype(v.dtype).name)
+    v = jnp.pad(v, ((0, m1p - m1), (0, np_ - n)))
+    w = jnp.pad(w.astype(acc), ((0, sp - s), (0, np_ - n)))
+    tin = jnp.pad(tin.astype(acc), ((0, sp - s), (0, sp - s)))
+    mask = jnp.pad(mask.astype(acc), (0, m1p - m1))
+
+    q, c = pl.pallas_call(
+        _block_gs_project_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m1p, np_), lambda _: (0, 0)),
+            pl.BlockSpec((sp, np_), lambda _: (0, 0)),
+            pl.BlockSpec((sp, sp), lambda _: (0, 0)),
+            pl.BlockSpec((m1p, 1), lambda _: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((sp, np_), lambda _: (0, 0)),
+            pl.BlockSpec((m1p, sp), lambda _: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((sp, np_), acc),
+            jax.ShapeDtypeStruct((m1p, sp), acc),
+        ],
+        interpret=interpret,
+        name="gmres_block_gs_project",
+    )(v, w, tin, mask[:, None])
+    return q[:s, :n], c[:m1, :s]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_gs_update(v: jax.Array, q: jax.Array, c: jax.Array, *,
+                    interpret: bool = False):
+    """Update phase: W' = Q - C^T V and the PRE-psum Gram G_partial = W'W'^T.
+
+    ``c`` is the psum-COMPLETED (global) projection; v/q are local shards.
+    Returns ``(w2, g_partial)`` — w2 (s, n_local), g_partial (s, s) to be
+    psum-completed for the replicated CholQR outside.
+    """
+    m1, n = v.shape
+    s = q.shape[0]
+    if q.shape[1] != n or c.shape != (m1, s):
+        raise TypeError(f"block_gs_update: v {v.shape} needs q ({s}, {n}) "
+                        f"and c ({m1}, {s}); got {q.shape}, {c.shape}")
+    acc = jnp.promote_types(q.dtype, jnp.float32)
+    m1p, np_, sp = tuning.choose_block_gs(m1, n, s, jnp.dtype(v.dtype).name)
+    v = jnp.pad(v, ((0, m1p - m1), (0, np_ - n)))
+    q = jnp.pad(q.astype(acc), ((0, sp - s), (0, np_ - n)))
+    c = jnp.pad(c.astype(acc), ((0, m1p - m1), (0, sp - s)))
+
+    w2, g = pl.pallas_call(
+        _block_gs_update_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m1p, np_), lambda _: (0, 0)),
+            pl.BlockSpec((sp, np_), lambda _: (0, 0)),
+            pl.BlockSpec((m1p, sp), lambda _: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((sp, np_), lambda _: (0, 0)),
+            pl.BlockSpec((sp, sp), lambda _: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((sp, np_), acc),
+            jax.ShapeDtypeStruct((sp, sp), acc),
+        ],
+        interpret=interpret,
+        name="gmres_block_gs_update",
+    )(v, q, c)
+    return w2[:s, :n], g[:s, :s]
+
+
+def block_gs_pass_sharded(v: jax.Array, w: jax.Array, tin: jax.Array,
+                          mask: jax.Array, axis_name: str, *,
+                          interpret: bool = False):
+    """One row-sharded block-GS pass: split-phase kernels, psums between.
+
+    Same (c, w', g) contract as ``block_gs_pass`` / ``block_gs_pass_ref``
+    with all vector-dim arrays local shards; c and g return GLOBAL
+    (psum-completed), matching where ``block_gs_pass_ref`` places its
+    collectives — the s-step cycle cannot tell the implementations apart.
+    """
+    q, c = block_gs_project(v, w, tin, mask, interpret=interpret)
+    c = lax.psum(c, axis_name)
+    w2, g = block_gs_update(v, q, c, interpret=interpret)
+    g = lax.psum(g, axis_name)
     return c, w2, g
 
 

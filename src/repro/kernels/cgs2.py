@@ -19,8 +19,24 @@ intermediate (m1, n_tiles) partial array — vs. the XLA lowering of the
 reference which materializes partial reductions and re-loads h.
 
 For the ROW-SHARDED distributed solver the phase boundary is also where the
-psum of h would sit; the kernel is written per-shard so the collective stays
-outside (shard_map composes with pallas_call).
+psum of h must sit — the projection's partial sums have to cross shards
+before the update may run — so the fused two-phase grid above cannot be
+used per-shard.  The SPLIT-PHASE pair below is the same arithmetic cut at
+that boundary:
+
+    ``gs_project_partial``  one pallas_call: the per-shard h contribution
+                            (phase 0 of the fused grid, alone);
+    ``lax.psum``            OUTSIDE, at the shard_map level;
+    ``gs_update``           one pallas_call: w' = w - h V with the now
+                            GLOBAL h (phase 1 of the fused grid, alone).
+
+``cgs2_split`` strings two such pass pairs together with the two psums of
+the CGS2 scheme between them — per shard the basis is still streamed
+exactly as often as the fused kernel streams it (twice per pass), w/h
+round-trips stay off HBM within each phase, and the collective rounds are
+the 2-per-pass minimum the scheme admits.  This is what keeps the
+row-sharded solve on the kernel path (pre-PR-5 it bailed to the jnp
+reference whenever ``axis_name`` was set).
 """
 from __future__ import annotations
 
@@ -28,6 +44,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 
 
@@ -105,3 +122,120 @@ def cgs2(v: jax.Array, w: jax.Array, mask: jax.Array, *,
     h1, w1 = gs_project(v, w, mask, block_n=block_n, interpret=interpret)
     h2, w2 = gs_project(v, w1, mask, block_n=block_n, interpret=interpret)
     return h1 + h2, w2
+
+
+# --------------------------------------------------------------------------
+# Split-phase pair for the row-sharded solve (psum between the phases)
+# --------------------------------------------------------------------------
+def _project_kernel(v_ref, w_ref, mask_ref, h_ref):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    # (m1, bn) @ (bn, 1) -> (m1, 1): the h accumulator lives in the output
+    # VMEM block (revisited every grid step — partials never touch HBM).
+    h_ref[...] += jax.lax.dot_general(
+        v_ref[...].astype(h_ref.dtype), w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=h_ref.dtype,
+    ) * mask_ref[...]
+
+
+def _update_kernel(v_ref, w_ref, h_ref, wout_ref):
+    # w' = w - h^T V per column tile; h arrives already masked AND already
+    # psum-completed (global), so the update is pure per-shard work.
+    hv = jax.lax.dot_general(
+        h_ref[...], v_ref[...].astype(h_ref.dtype),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=h_ref.dtype,
+    )  # (1, bn)
+    wout_ref[...] = w_ref[...] - hv.T.astype(wout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gs_project_partial(v: jax.Array, w: jax.Array, mask: jax.Array, *,
+                       block_n: int = 1024, interpret: bool = False):
+    """Per-shard projection half: h_partial = mask * (V_local @ w_local).
+
+    v: (m1, n_local), w: (n_local,), mask: (m1,).  Returns the (m1,)
+    PRE-psum contribution — the caller completes it over the mesh axis
+    before handing it to ``gs_update``.
+    """
+    m1, n = v.shape
+    bn = min(block_n, n)
+    if n % bn:
+        np_ = (n + bn - 1) // bn * bn
+        return gs_project_partial(
+            jnp.pad(v, ((0, 0), (0, np_ - n))), jnp.pad(w, (0, np_ - n)),
+            mask, block_n=bn, interpret=interpret)
+
+    acc_dtype = jnp.promote_types(w.dtype, jnp.float32)
+    h = pl.pallas_call(
+        _project_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m1, bn), lambda j: (0, j)),
+            pl.BlockSpec((bn, 1), lambda j: (j, 0)),
+            pl.BlockSpec((m1, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m1, 1), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m1, 1), acc_dtype),
+        interpret=interpret,
+        name="gmres_gs_project",
+    )(v, w[:, None].astype(acc_dtype), mask[:, None].astype(acc_dtype))
+    return h[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gs_update(v: jax.Array, w: jax.Array, h: jax.Array, *,
+              block_n: int = 1024, interpret: bool = False):
+    """Per-shard update half: w' = w - h @ V_local with a GLOBAL h.
+
+    v: (m1, n_local), w: (n_local,), h: (m1,) — already masked and
+    psum-completed.  Returns w' (n_local,) in w's dtype.
+    """
+    m1, n = v.shape
+    bn = min(block_n, n)
+    if n % bn:
+        np_ = (n + bn - 1) // bn * bn
+        wout = gs_update(
+            jnp.pad(v, ((0, 0), (0, np_ - n))), jnp.pad(w, (0, np_ - n)),
+            h, block_n=bn, interpret=interpret)
+        return wout[:n]
+
+    acc_dtype = jnp.promote_types(w.dtype, jnp.float32)
+    wout = pl.pallas_call(
+        _update_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m1, bn), lambda j: (0, j)),
+            pl.BlockSpec((bn, 1), lambda j: (j, 0)),
+            pl.BlockSpec((m1, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, 1), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), acc_dtype),
+        interpret=interpret,
+        name="gmres_gs_update",
+    )(v, w[:, None].astype(acc_dtype), h[:, None].astype(acc_dtype))
+    return wout[:, 0].astype(w.dtype)
+
+
+def cgs2_split(v: jax.Array, w: jax.Array, mask: jax.Array, axis_name: str,
+               *, block_n: int = 1024, interpret: bool = False):
+    """Row-sharded CGS2 through the split-phase kernel pair.
+
+    Two project/psum/update rounds — the collective-round minimum for the
+    reorthogonalized scheme — with every level-2 product a per-shard
+    ``pallas_call``.  All arrays are LOCAL shards; returns (h, w'') with h
+    the GLOBAL Hessenberg column contribution and w'' the local shard of
+    the orthogonalized vector.
+    """
+    h1 = lax.psum(gs_project_partial(v, w, mask, block_n=block_n,
+                                     interpret=interpret), axis_name)
+    w1 = gs_update(v, w, h1, block_n=block_n, interpret=interpret)
+    h2 = lax.psum(gs_project_partial(v, w1, mask, block_n=block_n,
+                                     interpret=interpret), axis_name)
+    w2 = gs_update(v, w1, h2, block_n=block_n, interpret=interpret)
+    return (h1 + h2).astype(w.dtype), w2

@@ -41,10 +41,30 @@ small enough that any representable system scale keeps the recurrence
 a collapsed basis (solve converged mid-block) degrades exactly like the
 jnp reference.
 
+``banded_powers_halo`` (PR 5) — the ROW-SHARDED banded variant, i.e. the
+  classic communication-avoiding matrix-powers kernel (Demmel/Hoemmen
+  line, which Chronopoulos' s-step method anticipates): ONE ``ppermute``
+  halo exchange of width s*halo brings in every remote operand value the
+  whole s-power sequence will touch, the per-shard kernel then computes
+  the s UNNORMALIZED powers z_j = A^j u_0 over the shrinking-validity
+  halo-padded shard (wrongness creeps inward one halo per power and never
+  reaches the center rows), and ONE psum afterwards completes all s
+  squared norms at once — from which u_j = z_j/||z_j|| and
+  sigma_j = ||z_j||/||z_{j-1}|| are recovered exactly.  Collective
+  rounds per block: 2 (one neighbor exchange + one psum) vs the
+  reference's s all-gathers + s psums.  The deferred normalization costs
+  dynamic range — |z_s| grows like ||A||^s — so the CALLER must pre-scale
+  the band stack by theta >= ||A|| and multiply theta back into the
+  sigmas (core/sstep.py does exactly this with the pmax-completed
+  ||A||_inf row-sum bound, making the path overflow-proof and
+  scale-invariant at any system scale; the residual conditioning left is
+  the monomial basis's own kappa^s, which bounds practical s at ~8
+  regardless of implementation).
+
 ``matrix_powers_ref`` is the jnp oracle and the ``kernel_mode() == "ref"``
-/ row-sharded fallback: the per-power norm psums over ``axis_name``, which
-is why the distributed solve cannot use the fused kernels (the reduction
-must cross shards between powers).
+fallback (also the dense row-sharded path: dense A needs the whole
+operand per power, so an all-gather per power is irreducible there): the
+per-power norm psums over ``axis_name``.
 
 HBM traffic per s-step block (f32, five-point stencil, modeled in
 ``benchmarks/kernel_bench.py`` as the ``sstep_powers_*`` rows):
@@ -152,6 +172,94 @@ def banded_powers(bands: jax.Array, x: jax.Array, offsets: tuple, s: int, *,
         name="gmres_sstep_powers_banded",
     )(bands, x[None, :])
     return u[:s, :n], sig[0, :s]
+
+
+# --------------------------------------------------------------------------
+# Row-sharded banded matrix powers (communication-avoiding)
+# --------------------------------------------------------------------------
+def _banded_powers_halo_kernel(bands_ref, x_ref, z_ref, nrm_ref, pad_ref, *,
+                               offsets, halo, center, ln):
+    p = pl.program_id(0)
+    w_width = x_ref.shape[1]                 # n_local + 2*s*halo
+    acc = nrm_ref.dtype
+
+    @pl.when(p == 0)
+    def _seed():
+        pad_ref[...] = jnp.zeros_like(pad_ref)
+        pad_ref[:, pl.ds(halo, w_width)] = x_ref[...].astype(acc)
+
+    # One UNNORMALIZED banded mat-vec over the whole halo-padded width.
+    # Positions closer than p*halo to either edge go stale (their true
+    # neighbors were not exchanged) — by construction the center slice
+    # stays exact through all s powers (see module docstring).
+    w = jnp.zeros((1, w_width), acc)
+    for d, off in enumerate(offsets):
+        band = bands_ref[d:d + 1, :].astype(acc)
+        w += band * pad_ref[:, pl.ds(halo + off, w_width)]
+
+    zc = w[:, center:center + ln]            # this shard's rows of z_{p+1}
+    nrm_ref[0, p] = jnp.sum(zc * zc)         # PER-SHARD partial sq-norm
+    z_ref[pl.ds(p, 1), :] = zc
+    pad_ref[:, pl.ds(halo, w_width)] = w     # raw carry — no division here
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "s", "interpret"))
+def banded_powers_halo(bands_pad: jax.Array, x_halo: jax.Array,
+                       offsets: tuple, s: int, *, interpret: bool = False):
+    """All s RAW powers of a row-sharded banded operator in one launch.
+
+    bands_pad: (nbands, n_local + 2*s*halo) — the local band-stack shard
+    extended with (s-1)*halo exchanged neighbor columns each side and then
+    halo zeros each side (the caller builds this ONCE per solve; bands are
+    loop-invariant).  x_halo: (n_local + 2*s*halo,) — ``halo_exchange`` of
+    the unit-norm starting vector with width s*halo.  Returns
+    ``(z, nrm_partial)``: z (s, n_local) holds the LOCAL rows of the raw
+    powers z_j = A^j u_0, and nrm_partial (s,) their per-shard squared
+    norms — one psum of nrm_partial recovers every ||z_j||, from which
+    u_j = z_j / ||z_j|| and sigma_j = ||z_j|| / ||z_{j-1}|| follow with
+    NO collective between powers.
+    """
+    nbands, w_width = bands_pad.shape
+    if len(offsets) != nbands:
+        raise TypeError(f"banded_powers_halo: {nbands} bands but "
+                        f"{len(offsets)} offsets")
+    halo = max(abs(int(o)) for o in offsets)
+    ln = w_width - 2 * s * halo
+    if ln <= 0:
+        raise TypeError(f"banded_powers_halo: padded width {w_width} too "
+                        f"small for s={s} powers of halo={halo}")
+    if x_halo.shape != (w_width,):
+        raise TypeError(f"banded_powers_halo: bands_pad {bands_pad.shape} "
+                        f"needs x_halo of shape ({w_width},), got "
+                        f"{x_halo.shape}")
+    acc = _acc_dtype(bands_pad.dtype, x_halo.dtype)
+    s_pad = tuning._round_up(s, tuning.sublane(acc))
+
+    z, nrm = pl.pallas_call(
+        functools.partial(_banded_powers_halo_kernel, offsets=offsets,
+                          halo=halo, center=s * halo, ln=ln),
+        grid=(s,),
+        in_specs=[
+            # Band stack and operand are ONE VMEM-resident block each; per
+            # shard that is 1/P of the global residency, which is how the
+            # sharded fits-check admits systems the single-device kernel
+            # cannot hold.
+            pl.BlockSpec((nbands, w_width), lambda p: (0, 0)),
+            pl.BlockSpec((1, w_width), lambda p: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((s_pad, ln), lambda p: (0, 0)),
+            pl.BlockSpec((1, s_pad), lambda p: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_pad, ln), acc),
+            jax.ShapeDtypeStruct((1, s_pad), acc),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, w_width + 2 * halo), acc)],
+        interpret=interpret,
+        name="gmres_sstep_powers_banded_halo",
+    )(bands_pad, x_halo[None, :])
+    return z[:s, :], nrm[0, :s]
 
 
 # --------------------------------------------------------------------------

@@ -38,6 +38,19 @@ HBM traffic per matvec (f32, vs dense GEMV's 4*(n*n + 2n) bytes):
 For a five-point stencil on a 256x256 grid that is ~650x less traffic than
 the dense stream — the reason sparse GMRES iterations are matvec-cheap and
 orthogonalization-dominated (see benchmarks/kernel_bench.py spmv rows).
+
+ROW-SHARDED variants (PR 5).  When the matrix rows are sharded over a mesh
+axis, a shard's matvec needs operand values at most ``halo`` rows beyond
+its own block (halo = the matrix bandwidth, max |col - row|) — NOT the
+whole vector.  ``halo_exchange`` moves exactly those boundary rows with
+two ``ppermute`` rounds (neighbors only; edge shards read zeros, matching
+the out-of-range-is-zero convention of the kernels), and the
+``*_matvec_halo`` entry points run the SAME kernels as above over the
+halo-padded LOCAL operand — VMEM-resident per shard, so the residency
+fits-checks divide by the shard count while the exchanged bytes stay
+O(halo), independent of n.  That is the communication picture Ioannidis
+et al. (1906.04051) identify as the multi-GPU GMRES bottleneck: an
+all-gather per matvec becomes a fixed-width neighbor exchange.
 """
 from __future__ import annotations
 
@@ -45,6 +58,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 
 
@@ -98,21 +112,30 @@ def ell_matvec(values: jax.Array, cols: jax.Array, x: jax.Array, *,
         return out[:, 0] if squeeze else out
 
     compute_dtype, acc_dtype = _acc_dtypes(values.dtype, x.dtype)
-    out = pl.pallas_call(
+    out = _ell_pallas(values, cols, x.astype(compute_dtype), bm, interpret,
+                      acc_dtype, "gmres_spmv_ell").astype(compute_dtype)
+    return out[:, 0] if squeeze else out
+
+
+def _ell_pallas(values, cols, x, bm, interpret, acc_dtype, name):
+    """Shared pallas_call: (n, width) values/cols row tiles, operand x
+    WHOLE in VMEM — x has n rows single-device, n + 2*halo rows for the
+    row-sharded variant (``cols`` then index the halo-local frame)."""
+    n, width = values.shape
+    k = x.shape[1]
+    return pl.pallas_call(
         _ell_kernel,
         grid=(n // bm,),
         in_specs=[
             pl.BlockSpec((bm, width), lambda i: (i, 0)),
             pl.BlockSpec((bm, width), lambda i: (i, 0)),
-            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((x.shape[0], k), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, k), acc_dtype),
         interpret=interpret,
-        name="gmres_spmv_ell",
-    )(values, cols, x.astype(compute_dtype))
-    out = out.astype(compute_dtype)
-    return out[:, 0] if squeeze else out
+        name=name,
+    )(values, cols, x)
 
 
 def ell_matvec_ref(values: jax.Array, cols: jax.Array,
@@ -174,7 +197,18 @@ def banded_matvec(bands: jax.Array, x: jax.Array, offsets: tuple, *,
     halo = max(abs(int(o)) for o in offsets)
     compute_dtype, acc_dtype = _acc_dtypes(bands.dtype, x.dtype)
     x_pad = jnp.pad(x.astype(compute_dtype), ((halo, halo), (0, 0)))
-    out = pl.pallas_call(
+    out = _banded_pallas(bands, x_pad, offsets, halo, bm, interpret,
+                         acc_dtype).astype(compute_dtype)
+    return out[:, 0] if squeeze else out
+
+
+def _banded_pallas(bands, x_pad, offsets, halo, bm, interpret, acc_dtype):
+    """Shared pallas_call: bands (nbands, n), x_pad (n + 2*halo, k) — the
+    operand arrives halo-padded (zeros single-device, neighbor rows when
+    row-sharded) and stays WHOLE in VMEM."""
+    nbands, n = bands.shape
+    k = x_pad.shape[1]
+    return pl.pallas_call(
         functools.partial(_banded_kernel, offsets=offsets, halo=halo, bm=bm),
         grid=(n // bm,),
         in_specs=[
@@ -188,22 +222,147 @@ def banded_matvec(bands: jax.Array, x: jax.Array, offsets: tuple, *,
         interpret=interpret,
         name="gmres_spmv_banded",
     )(bands.T, x_pad)
-    out = out.astype(compute_dtype)
-    return out[:, 0] if squeeze else out
 
 
 def banded_matvec_ref(bands: jax.Array, x: jax.Array,
                       offsets: tuple) -> jax.Array:
     """Pure-jnp banded SpMV oracle (and the ``kernel_mode() == "ref"`` path)."""
-    nbands, n = bands.shape
-    compute_dtype, acc_dtype = _acc_dtypes(bands.dtype, x.dtype)
+    halo = max(abs(int(o)) for o in offsets)
     squeeze = x.ndim == 1
     xp = x[:, None] if squeeze else x
+    xp = jnp.pad(xp, ((halo, halo), (0, 0)))
+    out = banded_matvec_halo_ref(bands, xp, offsets)
+    return out[:, 0] if squeeze else out
+
+
+# --------------------------------------------------------------------------
+# Row-sharded halo variants
+# --------------------------------------------------------------------------
+def halo_exchange(x: jax.Array, halo: int, axis_name: str,
+                  num_shards: int) -> jax.Array:
+    """Fetch ``halo`` boundary rows from each mesh neighbor.
+
+    x: the LOCAL (n_local,) or (n_local, k) shard of a row-partitioned
+    vector.  Returns (n_local + 2*halo, ...) with rows [0, halo) holding
+    the PREVIOUS shard's last rows and rows [halo + n_local, ...) the NEXT
+    shard's first rows.  Edge shards receive zeros (``ppermute`` leaves
+    non-receiving parties zeroed), which matches the kernels'
+    out-of-range-reads-are-zero convention, so Dirichlet boundaries stay
+    free.  Communication: 2 neighbor ppermutes of halo*k values —
+    independent of the global n, vs. the (n - n_local)*k values an
+    all-gather would move.
+
+    ``num_shards`` must be the static size of ``axis_name`` (the
+    permutation is built at trace time); requires halo <= n_local.
+    """
+    if halo == 0:
+        return x
+    if halo > x.shape[0]:
+        raise ValueError(f"halo_exchange: halo={halo} exceeds the local "
+                         f"shard length {x.shape[0]} — neighbors' neighbors "
+                         f"would be needed; use an all-gather fallback")
+    squeeze = x.ndim == 1
+    xp = x[:, None] if squeeze else x
+    down = [(p, p + 1) for p in range(num_shards - 1)]   # shard p -> p+1
+    up = [(p + 1, p) for p in range(num_shards - 1)]     # shard p+1 -> p
+    top = lax.ppermute(xp[-halo:], axis_name, perm=down)
+    bot = lax.ppermute(xp[:halo], axis_name, perm=up)
+    out = jnp.concatenate([top, xp, bot], axis=0)
+    return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("offsets", "block_m", "interpret"))
+def banded_matvec_halo(bands: jax.Array, x_halo: jax.Array, offsets: tuple,
+                       *, block_m: int = 1024,
+                       interpret: bool = False) -> jax.Array:
+    """Per-shard banded SpMV over an ALREADY halo-padded operand.
+
+    bands: the (nbands, n_local) shard of the band stack; x_halo: the
+    (n_local + 2*halo, ...) output of ``halo_exchange`` (halo =
+    max |offsets|).  Same kernel as ``banded_matvec`` — the only
+    difference is that the halo rows hold neighbor values instead of
+    zeros.  Returns the (n_local, ...) local output shard.
+    """
+    nbands, n = bands.shape
+    if len(offsets) != nbands:
+        raise TypeError(f"banded_matvec_halo: {nbands} bands but "
+                        f"{len(offsets)} offsets")
     halo = max(abs(int(o)) for o in offsets)
-    xp = jnp.pad(xp.astype(acc_dtype), ((halo, halo), (0, 0)))
+    if x_halo.shape[0] != n + 2 * halo:
+        raise TypeError(f"banded_matvec_halo: bands {bands.shape} with "
+                        f"halo={halo} need x_halo of {n + 2 * halo} rows, "
+                        f"got {x_halo.shape}")
+    squeeze = x_halo.ndim == 1
+    if squeeze:
+        x_halo = x_halo[:, None]
+    bm = min(block_m, n)
+    if n % bm:
+        # Pad the row grid; appended zero-band rows read (real) trailing
+        # halo values times zero, so they contribute nothing, and every
+        # live row's read indices are unchanged.
+        np_ = (n + bm - 1) // bm * bm
+        out = banded_matvec_halo(
+            jnp.pad(bands, ((0, 0), (0, np_ - n))),
+            jnp.pad(x_halo, ((0, np_ - n), (0, 0))),
+            offsets, block_m=bm, interpret=interpret)[:n]
+        return out[:, 0] if squeeze else out
+
+    compute_dtype, acc_dtype = _acc_dtypes(bands.dtype, x_halo.dtype)
+    out = _banded_pallas(bands, x_halo.astype(compute_dtype), offsets, halo,
+                         bm, interpret, acc_dtype).astype(compute_dtype)
+    return out[:, 0] if squeeze else out
+
+
+def banded_matvec_halo_ref(bands: jax.Array, x_halo: jax.Array,
+                           offsets: tuple) -> jax.Array:
+    """jnp oracle / fallback for ``banded_matvec_halo`` (prepadded x)."""
+    nbands, n = bands.shape
+    compute_dtype, acc_dtype = _acc_dtypes(bands.dtype, x_halo.dtype)
+    squeeze = x_halo.ndim == 1
+    xp = x_halo[:, None] if squeeze else x_halo
+    halo = max(abs(int(o)) for o in offsets)
+    xp = xp.astype(acc_dtype)
     acc = jnp.zeros((n, xp.shape[1]), acc_dtype)
     for d, off in enumerate(offsets):
         seg = jax.lax.slice_in_dim(xp, halo + off, halo + off + n, axis=0)
         acc = acc + bands[d][:, None].astype(acc_dtype) * seg
     out = acc.astype(compute_dtype)
+    return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def ell_matvec_halo(values: jax.Array, cols: jax.Array, x_halo: jax.Array,
+                    *, block_m: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """Per-shard ELL SpMV over an ALREADY halo-padded operand.
+
+    values/cols: the (n_local, width) shard, with ``cols`` REMAPPED to
+    halo-local coordinates (global col - shard offset + halo; see
+    ``SparseOperator.__call__``); x_halo: the output of ``halo_exchange``.
+    The gather kernel is identical to ``ell_matvec``'s — the resident
+    operand is just (n_local + 2*halo, k) instead of (n, k), which is the
+    whole point: residency divides by the shard count.
+    """
+    n, width = values.shape
+    if cols.shape != (n, width):
+        raise TypeError(f"ell_matvec_halo: cols {cols.shape} must match "
+                        f"values {values.shape}")
+    squeeze = x_halo.ndim == 1
+    if squeeze:
+        x_halo = x_halo[:, None]
+    bm = min(block_m, n)
+    if n % bm:
+        # Padding rows carry value 0 at column 0 — in-bounds in x_halo.
+        np_ = (n + bm - 1) // bm * bm
+        out = ell_matvec_halo(
+            jnp.pad(values, ((0, np_ - n), (0, 0))),
+            jnp.pad(cols, ((0, np_ - n), (0, 0))),
+            x_halo, block_m=bm, interpret=interpret)[:n]
+        return out[:, 0] if squeeze else out
+
+    compute_dtype, acc_dtype = _acc_dtypes(values.dtype, x_halo.dtype)
+    out = _ell_pallas(values, cols, x_halo.astype(compute_dtype), bm,
+                      interpret, acc_dtype,
+                      "gmres_spmv_ell_halo").astype(compute_dtype)
     return out[:, 0] if squeeze else out

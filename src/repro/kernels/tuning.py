@@ -17,11 +17,24 @@ Also here: the kernel execution mode policy.  The solver asks
                  reference, no Pallas at all.
 
 so ``gmres(gs="cgs2_fused")`` is safe to call on any backend.
+
+Since PR 5 the policy is ALSO axis-aware: a row-sharded solve enters a
+``shard_context(axis_name, num_shards)`` (core/distributed.py does this
+around the shard_map body) and every dispatch site combines
+``kernel_mode()`` with ``shard_axis()``/``shard_size()`` to pick the
+per-shard kernels — the split-phase CGS2 pair, the halo-exchange SpMV
+variants, the communication-avoiding matrix powers — instead of bailing
+to the jnp reference the way pre-PR-5 code did.  The context is
+trace-time static (same contract as ``kernel_mode``): shard_map traces
+the per-shard program once, with the context set, and the resulting jaxpr
+carries the kernel calls with the collectives between them.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import os
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +61,13 @@ def _round_up(x: int, mult: int) -> int:
 
 
 def kernel_mode() -> str:
-    """Execution mode for kernel-backed solver paths (trace-time static)."""
+    """Execution mode for kernel-backed solver paths (trace-time static).
+
+    Shard-agnostic on purpose: a row-sharded trace keeps its "compiled" /
+    "interpret" mode and dispatch sites consult ``shard_axis()`` to pick
+    the per-shard (split-phase / halo) kernel variants — sharding changes
+    WHICH kernel runs, not WHETHER kernels run.
+    """
     forced = os.environ.get("REPRO_KERNELS")
     if forced in ("ref", "interpret", "compiled"):
         return forced
@@ -58,6 +77,42 @@ def kernel_mode() -> str:
     if backend == "cpu":
         return "interpret"
     return "ref"  # GPU etc.: these kernels are TPU-shaped; use the reference
+
+
+class _ShardCtx(NamedTuple):
+    axis_name: str
+    num_shards: int
+
+
+_SHARD_CTX: list = []   # stack; trace-time static, like kernel_mode()
+
+
+@contextlib.contextmanager
+def shard_context(axis_name: str, num_shards: int):
+    """Declare that code traced inside operates on ROW-LOCAL shards.
+
+    The distributed solvers wrap their shard_map bodies in this context;
+    operators and orthogonalization schemes read it back via
+    ``shard_axis()`` / ``shard_size()`` to dispatch the per-shard kernels
+    (halo-exchange SpMV, split-phase CGS2, CA matrix powers).  The
+    ``num_shards`` is needed wherever a static ``ppermute`` permutation is
+    built — jax < 0.5 has no ``lax.axis_size``.
+    """
+    _SHARD_CTX.append(_ShardCtx(str(axis_name), int(num_shards)))
+    try:
+        yield
+    finally:
+        _SHARD_CTX.pop()
+
+
+def shard_axis() -> Optional[str]:
+    """Mesh axis of the ambient ``shard_context`` (None = single-shard)."""
+    return _SHARD_CTX[-1].axis_name if _SHARD_CTX else None
+
+
+def shard_size() -> int:
+    """Shard count of the ambient ``shard_context`` (1 = single-shard)."""
+    return _SHARD_CTX[-1].num_shards if _SHARD_CTX else 1
 
 
 @functools.lru_cache(maxsize=256)
@@ -91,7 +146,8 @@ def choose_matvec_blocks(m: int, n: int, dtype_name: str = "float32",
 
 @functools.lru_cache(maxsize=256)
 def choose_spmv_block(n: int, width: int, dtype_name: str = "float32",
-                      k: int = 1, budget: int = VMEM_BUDGET) -> int:
+                      k: int = 1, halo: int = 0,
+                      budget: int = VMEM_BUDGET) -> int:
     """Pick ``block_m`` (rows per grid step) for the ELL SpMV kernel.
 
     The gather kernel keeps the WHOLE operand x (n, k) resident in VMEM
@@ -100,10 +156,13 @@ def choose_spmv_block(n: int, width: int, dtype_name: str = "float32",
     double-buffered (bm, width) values tile + int32 cols tile and the
     (bm, k) f32 output tile.  We maximize the row block under the budget —
     bigger blocks amortize the gather setup and the grid overhead.
+
+    ``halo``: extra resident operand rows on EACH side — the row-sharded
+    halo variant gathers from a (n + 2*halo, k) exchanged operand.
     """
     s = itemsize(dtype_name)
     sub = sublane(dtype_name)
-    resident = _round_up(n, LANE) * k * 4          # x, promoted to f32
+    resident = _round_up(n + 2 * halo, LANE) * k * 4   # x, promoted to f32
     best = sub
     for bm in (128, 256, 512, 1024, 2048):
         need = 2 * bm * width * (s + 4) + resident + bm * k * 4
@@ -112,19 +171,23 @@ def choose_spmv_block(n: int, width: int, dtype_name: str = "float32",
     return min(best, _round_up(n, sub))
 
 
-def spmv_fits(n: int, width: int, dtype, k: int = 1,
+def spmv_fits(n: int, width: int, dtype, k: int = 1, halo: int = 0,
               budget: int = VMEM_BUDGET) -> bool:
     """Can the gather SpMV kernel keep the full operand x in VMEM?
 
     This is the kernel's hard requirement (see ``choose_spmv_block``); when
     it fails — n in the several-millions for f32 — the operator degrades to
-    the jnp gather reference, which XLA streams from HBM.
+    the jnp gather reference, which XLA streams from HBM.  ``halo`` prices
+    the row-sharded variant's exchanged (n + 2*halo, k) operand; note the
+    sharded check runs on the LOCAL n, so sharding P-fold also divides the
+    residency requirement P-fold — the halo path FITS systems the
+    single-device kernel cannot hold.
     """
     s = itemsize(dtype)
     sub = sublane(dtype)
-    need = (2 * sub * width * (s + 4)        # minimal values+cols tiles
-            + _round_up(n, LANE) * k * 4     # resident x
-            + sub * k * 4)                   # output tile
+    need = (2 * sub * width * (s + 4)                  # min values+cols tiles
+            + _round_up(n + 2 * halo, LANE) * k * 4    # resident x (+ halo)
+            + sub * k * 4)                             # output tile
     return need <= budget
 
 

@@ -1,0 +1,286 @@
+"""The shard-aware kernel path: one GMRES cycle, local and distributed.
+
+Everything here drives ``gmres_sharded`` / ``gmres_sstep_sharded`` — thin
+shard_map wrappers over the SAME cycle the single-device solver runs —
+and asserts three things:
+
+  1. parity: sharded solves match single-device solves to tolerance on
+     dense / ELL / banded operators, at every shard count the running
+     process can host (the hypothesis PROPERTY version lives in
+     tests/test_properties.py with the other hypothesis suites);
+  2. dispatch: the split-phase CGS2 pair, the halo SpMV kernels and the
+     CA matrix-powers kernel actually ENGAGE under shard_map
+     (spy-verified), and a forced VMEM overflow degrades to the
+     psum-safe reference with identical results;
+  3. multi-shard for real: the main pytest process usually sees ONE cpu
+     device (1-shard meshes — the wrappers, contexts and collectives all
+     still execute), so one subprocess with 4 fake host devices pins
+     4-way parity for all operator formats.  CI additionally runs this
+     whole module under XLA_FLAGS=--xla_force_host_platform_device_count=4,
+     where the in-process tests sweep 1/2/4-shard meshes directly.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.core import (gmres, gmres_sharded, gmres_sstep,
+                        gmres_sstep_sharded, operators, stencils)
+from repro.core.distributed import shard_specs
+from repro.kernels import tuning
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# 1 in the plain tier-1 run; 1/2/4 when the process hosts 4 fake devices
+# (the CI distributed step) — the parametrized sweeps adapt automatically.
+SHARDS = [p for p in (1, 2, 4) if p <= jax.device_count()]
+
+
+def _mesh(p):
+    return make_mesh((p,), ("rows",))
+
+
+def _system(fmt, nx, key):
+    """(operator, b) for a small convergent system; n = nx * nx."""
+    n = nx * nx
+    if fmt == "dense":
+        a = operators.random_diagdom(jax.random.PRNGKey(key), n)
+        op = operators.DenseOperator(a, backend="pallas")
+    elif fmt == "banded":
+        op = stencils.poisson_2d(nx, nx, backend="pallas")
+    elif fmt == "ell":
+        op = stencils.poisson_2d(nx, nx, backend="pallas").to_ell()
+    else:
+        raise ValueError(fmt)
+    b = jax.random.normal(jax.random.PRNGKey(key + 1), (n,))
+    return op, b
+
+
+def _assert_parity(res_sharded, res_single, a_dense, b, rtol=2e-3):
+    assert bool(res_sharded.converged)
+    bn = float(jnp.linalg.norm(b))
+    rel = float(jnp.linalg.norm(a_dense @ res_sharded.x - b)) / bn
+    assert rel < 5e-5, rel
+    err = (float(jnp.linalg.norm(res_sharded.x - res_single.x))
+           / max(float(jnp.linalg.norm(res_single.x)), 1e-30))
+    assert err < rtol, err
+
+
+# --------------------------------------------------------------------------
+# parity: sharded == single-device, per format and shard count
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("p", SHARDS)
+@pytest.mark.parametrize("fmt", ["dense", "ell", "banded"])
+def test_sharded_matches_single(fmt, p):
+    op, b = _system(fmt, 8, key=0)
+    res_s = gmres(op, b, m=16, tol=1e-5, max_restarts=100)
+    res_d = gmres_sharded(_mesh(p), "rows", op, b, m=16, tol=1e-5,
+                          max_restarts=100)
+    a_dense = op.a if fmt == "dense" else op.todense()
+    _assert_parity(res_d, res_s, a_dense, b)
+
+
+@pytest.mark.parametrize("p", SHARDS)
+def test_sstep_sharded_matches_single(p):
+    op, b = _system("banded", 10, key=4)
+    res_s = gmres_sstep(op, b, s=4, blocks=5, tol=1e-5, max_restarts=60)
+    res_d = gmres_sstep_sharded(_mesh(p), "rows", op, b, s=4, blocks=5,
+                                tol=1e-5, max_restarts=60)
+    _assert_parity(res_d, res_s, op.todense(), b)
+
+
+def test_sstep_sharded_scale_invariant_through_ca_kernel():
+    """The CA powers path must survive ANY system scale (PR 3 contract).
+
+    Deferred normalization computes raw ||A||^j-sized powers; without the
+    theta pre-scaling in sstep._make_block_fns, bands scaled by 1e4 at
+    s=8 overflow f32 and the solve returns NaN.  A 1-shard mesh
+    guarantees s*halo <= n_local so the CA kernel genuinely engages.
+    """
+    base = stencils.poisson_2d(16, 16, backend="pallas")
+    n = 256
+    for c in (1e4, 1e-4):
+        op = operators.BandedOperator(base.bands * c, base.offsets,
+                                      "pallas")
+        b = jnp.sin(jnp.arange(n) * 0.37) * c
+        ref = gmres_sstep(op, b, s=8, blocks=2, tol=1e-4, max_restarts=60)
+        sh = gmres_sstep_sharded(_mesh(1), "rows", op, b, s=8, blocks=2,
+                                 tol=1e-4, max_restarts=60)
+        assert bool(jnp.isfinite(sh.x).all()), f"NaN at scale {c}"
+        assert bool(sh.converged) == bool(ref.converged)
+        err = (float(jnp.linalg.norm(sh.x - ref.x))
+               / max(float(jnp.linalg.norm(ref.x)), 1e-30))
+        assert err < 2e-3, (c, err)
+
+
+def test_sharded_compute_dtype_bf16_converges():
+    """The sharded split-phase path composes with bf16 basis storage."""
+    op, b = _system("banded", 8, key=6)
+    res = gmres_sharded(_mesh(SHARDS[-1]), "rows", op, b, m=16, tol=1e-4,
+                        max_restarts=200, compute_dtype=jnp.bfloat16)
+    assert bool(res.converged)
+    rel = float(jnp.linalg.norm(op.todense() @ res.x - b)
+                / jnp.linalg.norm(b))
+    assert rel < 5e-4
+
+
+def test_sparse_without_halo_bound_falls_back_to_gather():
+    """halo=None (unknown structure) must stay correct via all-gather."""
+    op, b = _system("ell", 8, key=8)
+    blind = operators.SparseOperator(op.values, op.cols, backend="pallas",
+                                     halo=None)
+    res_s = gmres(blind, b, m=16, tol=1e-5, max_restarts=100)
+    res_d = gmres_sharded(_mesh(SHARDS[-1]), "rows", blind, b, m=16,
+                          tol=1e-5, max_restarts=100)
+    _assert_parity(res_d, res_s, op.todense(), b)
+
+
+def test_shard_specs_rejects_matrix_free():
+    fn = operators.FunctionOperator(lambda v: v, 8)
+    with pytest.raises(TypeError):
+        shard_specs(fn, "rows")
+
+
+# --------------------------------------------------------------------------
+# dispatch: the sharded solve must actually HIT the per-shard kernels
+# --------------------------------------------------------------------------
+def _spy(monkeypatch, mod, name, calls):
+    orig = getattr(mod, name)
+
+    def wrapper(*args, **kw):
+        calls[name] = calls.get(name, 0) + 1
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(mod, name, wrapper)
+
+
+def test_sharded_dispatch_hits_split_phase_cgs2(monkeypatch):
+    import repro.kernels.cgs2 as cgs2_mod
+
+    calls = {}
+    _spy(monkeypatch, cgs2_mod, "gs_project_partial", calls)
+    _spy(monkeypatch, cgs2_mod, "gs_update", calls)
+    op, b = _system("banded", 8, key=20)
+    res = gmres_sharded(_mesh(SHARDS[-1]), "rows", op, b, m=12, tol=1e-5,
+                        max_restarts=100)
+    assert bool(res.converged)
+    assert calls.get("gs_project_partial", 0) > 0, \
+        "split-phase project kernel never engaged in the sharded solve"
+    assert calls.get("gs_update", 0) > 0, \
+        "split-phase update kernel never engaged in the sharded solve"
+
+
+def test_sharded_dispatch_hits_halo_spmv(monkeypatch):
+    import repro.kernels.spmv as spmv_mod
+
+    calls = {}
+    _spy(monkeypatch, spmv_mod, "banded_matvec_halo", calls)
+    _spy(monkeypatch, spmv_mod, "ell_matvec_halo", calls)
+    mesh = _mesh(SHARDS[-1])
+    op, b = _system("banded", 8, key=22)
+    gmres_sharded(mesh, "rows", op, b, m=12, tol=1e-5, max_restarts=100)
+    gmres_sharded(mesh, "rows", op.to_ell(), b, m=12, tol=1e-5,
+                  max_restarts=100)
+    assert calls.get("banded_matvec_halo", 0) > 0, \
+        "banded halo kernel never engaged"
+    assert calls.get("ell_matvec_halo", 0) > 0, \
+        "ELL halo kernel never engaged"
+
+
+def test_sstep_sharded_dispatch_hits_ca_kernels(monkeypatch):
+    import repro.kernels.block_gs as bg_mod
+    import repro.kernels.matrix_powers as mp_mod
+
+    calls = {}
+    _spy(monkeypatch, mp_mod, "banded_powers_halo", calls)
+    _spy(monkeypatch, bg_mod, "block_gs_project", calls)
+    _spy(monkeypatch, bg_mod, "block_gs_update", calls)
+    op, b = _system("banded", 8, key=24)
+    res = gmres_sstep_sharded(_mesh(SHARDS[-1]), "rows", op, b, s=2,
+                              blocks=4, tol=1e-5, max_restarts=40)
+    assert bool(res.converged)
+    for name in ("banded_powers_halo", "block_gs_project",
+                 "block_gs_update"):
+        assert calls.get(name, 0) > 0, f"{name} never engaged"
+
+
+def test_sharded_forced_overflow_falls_back(monkeypatch):
+    """fits forced False: the halo REFERENCE must carry the solve, with
+    the same answer (the silent-degrade contract, sharded edition)."""
+    op, b = _system("banded", 8, key=26)
+    mesh = _mesh(SHARDS[-1])
+    res_kernel = gmres_sharded(mesh, "rows", op, b, m=12, tol=1e-5,
+                               max_restarts=100)
+
+    import repro.kernels.spmv as spmv_mod
+
+    def boom(*a, **k):
+        raise AssertionError("kernel path taken despite forced overflow")
+
+    monkeypatch.setattr(tuning, "banded_fits", lambda *a, **k: False)
+    monkeypatch.setattr(spmv_mod, "banded_matvec_halo", boom)
+    res_ref = gmres_sharded(mesh, "rows", op, b, m=12, tol=1e-5,
+                            max_restarts=100)
+    assert bool(res_ref.converged)
+    np.testing.assert_allclose(np.asarray(res_ref.x),
+                               np.asarray(res_kernel.x),
+                               rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# multi-shard for real: 4 fake host devices in a subprocess
+# --------------------------------------------------------------------------
+def test_sharded_parity_4dev_subprocess():
+    code = textwrap.dedent("""
+        import json, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
+        from repro.core import (gmres, gmres_sharded, gmres_sstep,
+                                gmres_sstep_sharded, operators, stencils)
+        mesh = make_mesh((4,), ('rows',))
+        out = {}
+        b = jax.random.normal(jax.random.PRNGKey(1), (144,))
+        banded = stencils.poisson_2d(12, 12, backend='pallas')
+        cases = {
+            'dense': operators.DenseOperator(
+                operators.random_diagdom(jax.random.PRNGKey(0), 144),
+                backend='pallas'),
+            'banded': banded,
+            'ell': banded.to_ell(),
+        }
+        for fmt, op in cases.items():
+            ref = gmres(op, b, m=16, tol=1e-5, max_restarts=150)
+            sh = gmres_sharded(mesh, 'rows', op, b, m=16, tol=1e-5,
+                               max_restarts=150)
+            out[fmt] = {
+                'conv': bool(sh.converged),
+                'err': float(jnp.linalg.norm(sh.x - ref.x)
+                             / jnp.linalg.norm(ref.x)),
+            }
+        ref = gmres_sstep(banded, b, s=4, blocks=5, tol=1e-5,
+                          max_restarts=60)
+        sh = gmres_sstep_sharded(mesh, 'rows', banded, b, s=4, blocks=5,
+                                 tol=1e-5, max_restarts=60)
+        out['sstep_banded'] = {
+            'conv': bool(sh.converged),
+            'err': float(jnp.linalg.norm(sh.x - ref.x)
+                         / jnp.linalg.norm(ref.x)),
+        }
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    for fmt, r in out.items():
+        assert r["conv"], (fmt, r)
+        assert r["err"] < 2e-3, (fmt, r)
