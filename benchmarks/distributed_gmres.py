@@ -30,19 +30,34 @@ _CODE = textwrap.dedent("""
     from repro.core import (gmres, gmres_sharded, gmres_sstep,
                             gmres_sstep_sharded, operators, stencils)
     from repro.compat import make_mesh
-    from repro.roofline import parse_collectives
+    from repro.roofline import (parse_collectives,
+                                innermost_loop_collectives)
 
     def coll_stats(jsol, *args):
-        lowered = jsol.lower(*args)
-        colls = parse_collectives(lowered.compile().as_text())
+        # Whole-program counts AND the innermost while-body counts: the
+        # latter is the per-Arnoldi-step collective schedule (whole-program
+        # counts dilute it with prologue/epilogue collectives).
+        hlo = jsol.lower(*args).compile().as_text()
+        colls = parse_collectives(hlo)
         nops = sum(c.count for c in colls)
         cbytes = sum(c.result_bytes * c.count for c in colls)
-        return nops, cbytes
+        _, loop = innermost_loop_collectives(hlo)
+        loop_ops = sum(c.count for c in loop)
+        loop_psums = sum(c.count for c in loop if c.kind == "all-reduce")
+        return nops, cbytes, loop_ops, loop_psums
 
     def timed(jsol, *args):
         r = jsol(*args); r.x.block_until_ready()
         t0 = time.perf_counter(); r = jsol(*args); r.x.block_until_ready()
         return r, time.perf_counter() - t0
+
+    def row(n, gs, t_single, t, r, stats):
+        nops, cbytes, loop_ops, loop_psums = stats
+        return {"n": n, "gs": gs, "t_single_us": t_single * 1e6,
+                "t_sharded_us": t * 1e6, "steps": int(r.inner_steps),
+                "restarts": int(r.restarts), "collective_ops": nops,
+                "collective_bytes": cbytes, "loop_coll_ops": loop_ops,
+                "loop_psums": loop_psums}
 
     out = []
     mesh = make_mesh((8,), ('model',))
@@ -56,33 +71,30 @@ _CODE = textwrap.dedent("""
         # s-step (communication-avoiding), single-device wall time; its
         # value is the ROUND count: (s + 4)/s rounds per step vs 4 (CGS2).
         # steps = one full m=20 cycle (residual checks are per-cycle).
+        # Collective counts are PARSED from the lowered HLO like every
+        # other row (a local program honestly counts 0) — no placeholder.
         ssol = jax.jit(lambda a, b: gmres_sstep(a, b, s=4, blocks=5,
                                                 tol=1e-5))
+        stats = coll_stats(ssol, a, b)
         r, t = timed(ssol, a, b)
-        out.append({"n": n, "gs": "SINGLEDEV_sstep4",
-                    "t_single_us": t_single * 1e6,
-                    "t_sharded_us": t * 1e6,
-                    "steps": int(r.inner_steps), "collective_ops": 0,
-                    "collective_bytes": 0})
+        out.append(row(n, "SINGLEDEV_sstep4", t_single, t, r, stats))
 
         for gs, pc in (('cgs2', None), ('mgs', None),
-                       ('cgs2', 'block_jacobi')):
+                       ('cgs2', 'block_jacobi'),
+                       ('cgs2_pipelined', None)):
             sol = lambda a, b, gs=gs, pc=pc: gmres_sharded(
                 mesh, 'model', a, b, m=20, tol=1e-5, gs=gs, precond=pc)
             jsol = jax.jit(sol)
-            nops, cbytes = coll_stats(jsol, a, b)
+            stats = coll_stats(jsol, a, b)
             r, t = timed(jsol, a, b)
-            out.append({"n": n, "gs": gs + ("+bj" if pc else ""),
-                        "t_single_us": t_single * 1e6,
-                        "t_sharded_us": t * 1e6,
-                        "steps": int(r.inner_steps),
-                        "collective_ops": nops,
-                        "collective_bytes": cbytes})
+            out.append(row(n, gs + ("+bj" if pc else ""), t_single, t, r,
+                           stats))
 
     # --- the shard-aware KERNEL path: banded stencil operators ----------
     # halo exchange instead of all-gather per matvec (watch
     # collective_bytes collapse vs the dense rows above), split-phase
-    # CGS2 structure, and the CA s-step solver at ~4 rounds per s steps.
+    # CGS2 structure, the pipelined single-reduce scheme (1 psum per
+    # step), and the CA s-step solver at ~4 rounds per s steps.
     # Restart budgets are capped: the interesting quantities (per-step
     # collective schedule, wall time per step) don't need full Poisson
     # convergence, which is slow unpreconditioned.
@@ -97,19 +109,20 @@ _CODE = textwrap.dedent("""
             ('banded_cgs2', lambda o, v: gmres_sharded(
                 mesh, 'model', o, v, m=20, tol=1e-4, max_restarts=40,
                 gs='cgs2')),
+            ('banded_pipelined', lambda o, v: gmres_sharded(
+                mesh, 'model', o, v, m=20, tol=1e-4, max_restarts=40,
+                gs='cgs2_pipelined')),
             ('banded_sstep4', lambda o, v: gmres_sstep_sharded(
                 mesh, 'model', o, v, s=4, blocks=5, tol=1e-4,
                 max_restarts=40)),
+            ('banded_sstep4_pipelined', lambda o, v: gmres_sstep_sharded(
+                mesh, 'model', o, v, s=4, blocks=5, tol=1e-4,
+                max_restarts=40, gs='cgs2_pipelined')),
         ):
             jsol = jax.jit(sol)
-            nops, cbytes = coll_stats(jsol, op, bb)
+            stats = coll_stats(jsol, op, bb)
             r, t = timed(jsol, op, bb)
-            out.append({"n": n, "gs": tag,
-                        "t_single_us": t_single * 1e6,
-                        "t_sharded_us": t * 1e6,
-                        "steps": int(r.inner_steps),
-                        "collective_ops": nops,
-                        "collective_bytes": cbytes})
+            out.append(row(n, tag, t_single, t, r, stats))
     print(json.dumps(out))
 """)
 
@@ -132,7 +145,9 @@ def main():
         print(f"{tag},{r['t_sharded_us']:.0f},"
               f"single_dev_us={r['t_single_us']:.0f};steps={r['steps']};"
               f"coll_ops={r['collective_ops']};"
-              f"coll_bytes={r['collective_bytes']}")
+              f"coll_bytes={r['collective_bytes']};"
+              f"loop_coll_ops={r['loop_coll_ops']};"
+              f"loop_psums={r['loop_psums']}")
     return rows
 
 

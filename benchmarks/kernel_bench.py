@@ -7,12 +7,26 @@ Two kinds of numbers:
      step, arithmetic intensity, HBM traffic) — the quantities that
      determine TPU performance, derivable without hardware.
 
+Every row carries a ``mode`` tag saying what its ``us`` column IS:
+
+  modeled    default — ``us`` times the jnp reference; the headline numbers
+             are the modeled structural metrics (HBM bytes, psum schedule)
+  measured   ``--measure`` on an accelerator — ``us`` times the actual
+             Pallas kernel, compiled for the attached device
+  interpret  ``--measure`` on CPU — the kernel path runs under the Pallas
+             interpreter (functional check + relative timing only; absolute
+             times are NOT device wall times)
+
 All rows are also dumped to ``BENCH_kernels.json`` so the perf trajectory
-is machine-diffable across PRs.
+is machine-diffable across PRs (``tools/bench_gate.py`` enforces it).
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
@@ -21,6 +35,31 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.roofline import HBM_BW, PEAK_FLOPS
+
+# Set by main(); families that have a kernel path consult it via _pick().
+MODE = "modeled"
+
+
+def _detect_mode() -> str:
+    """measured on a real accelerator, interpret under CPU emulation."""
+    return "measured" if jax.default_backend() != "cpu" else "interpret"
+
+
+def _pick(kernel_fn, ref_fn):
+    """--measure times the kernel path; the default times the reference."""
+    return ref_fn if MODE == "modeled" else kernel_fn
+
+
+def _interp() -> bool:
+    return MODE == "interpret"
+
+
+def _tag(rows):
+    """Mode-stamp rows of a family that actually swaps in the kernel path
+    under --measure; model-only families keep the default 'modeled' tag."""
+    for r in rows:
+        r["mode"] = MODE
+    return rows
 
 
 def _time(fn, *args, repeats=5):
@@ -34,8 +73,11 @@ def _time(fn, *args, repeats=5):
 
 
 def matvec_rows(sizes=(1024, 4096, 8192)):
+    from repro.kernels import matvec_tiled
+
     rows = []
-    mv = jax.jit(ref.matvec)
+    mv = jax.jit(_pick(lambda a, x: matvec_tiled(a, x, interpret=_interp()),
+                       ref.matvec))
     for n in sizes:
         a = jax.random.normal(jax.random.PRNGKey(0), (n, n))
         x = jax.random.normal(jax.random.PRNGKey(1), (n,))
@@ -50,12 +92,16 @@ def matvec_rows(sizes=(1024, 4096, 8192)):
                         f"tpu_mem_bound={bytes_ / HBM_BW * 1e6:.1f}us "
                         f"vmem_tile_kib=514"),
         })
-    return rows
+    return _tag(rows)
 
 
 def gs_rows(ns=(8192, 65536), m1=33):
+    from repro.kernels import cgs2_fused
+
     rows = []
-    gs = jax.jit(ref.cgs2)
+    gs = jax.jit(_pick(lambda v, w, mk: cgs2_fused(v, w, mk,
+                                                   interpret=_interp()),
+                       ref.cgs2))
     for n in ns:
         v = jax.random.normal(jax.random.PRNGKey(0), (m1, n)) / np.sqrt(n)
         w = jax.random.normal(jax.random.PRNGKey(1), (n,))
@@ -71,7 +117,7 @@ def gs_rows(ns=(8192, 65536), m1=33):
             "derived": (f"tpu_mem_bound={bytes_fused / HBM_BW * 1e6:.1f}us "
                         f"passes_over_V=4"),
         })
-    return rows
+    return _tag(rows)
 
 
 def fused_step_traffic(n: int, m1: int, s: int = 4):
@@ -105,7 +151,10 @@ def fused_step_rows(cases=((96, 97), (384, 129), (1024, 513), (4096, 33))):
     from repro.kernels import arnoldi_fused
 
     rows = []
-    stepped = jax.jit(arnoldi_fused.arnoldi_step_ref)
+    stepped = jax.jit(_pick(
+        lambda a, vb, j: arnoldi_fused.arnoldi_step(a, vb, j,
+                                                    interpret=_interp()),
+        arnoldi_fused.arnoldi_step_ref))
     for n, m1 in cases:
         a = jax.random.normal(jax.random.PRNGKey(0), (n, n)) / np.sqrt(n)
         vb = jax.random.normal(jax.random.PRNGKey(1), (m1, n)) / np.sqrt(n)
@@ -123,7 +172,7 @@ def fused_step_rows(cases=((96, 97), (384, 129), (1024, 513), (4096, 33))):
                         f"tpu_mem_bound_unfused={unfused / HBM_BW * 1e6:.1f}us "
                         f"A_and_V_streamed_once=1 w_h_roundtrips=0"),
         })
-    return rows
+    return _tag(rows)
 
 
 def block_matvec_rows(cases=((2048, 8), (4096, 16))):
@@ -183,6 +232,7 @@ def spmv_rows(grids=((64, 64), (128, 128), (256, 256))):
     the modeled HBM bytes and their ratio to the dense GEMV stream.
     """
     from repro.core import stencils
+    from repro.kernels import spmv
 
     rows = []
     for nx, ny in grids:
@@ -190,8 +240,15 @@ def spmv_rows(grids=((64, 64), (128, 128), (256, 256))):
         banded = stencils.poisson_2d(nx, ny)
         ell = banded.to_ell()
         x = jax.random.normal(jax.random.PRNGKey(1), (n,))
-        t_ell = _time(jax.jit(lambda v: ell(v)), x)
-        t_banded = _time(jax.jit(lambda v: banded(v)), x)
+        ell_fn = _pick(lambda v: spmv.ell_matvec(ell.values, ell.cols, v,
+                                                 interpret=_interp()),
+                       lambda v: ell(v))
+        band_fn = _pick(lambda v: spmv.banded_matvec(banded.bands, v,
+                                                     banded.offsets,
+                                                     interpret=_interp()),
+                        lambda v: banded(v))
+        t_ell = _time(jax.jit(ell_fn), x)
+        t_banded = _time(jax.jit(band_fn), x)
         width = ell.values.shape[1]
         nbands = banded.bands.shape[0]
         b_ell, b_banded, b_dense = spmv_traffic(n, width, nbands)
@@ -217,7 +274,7 @@ def spmv_rows(grids=((64, 64), (128, 128), (256, 256))):
                         f"tpu_mem_bound={b_banded / HBM_BW * 1e6:.2f}us "
                         f"gather_free=1"),
         })
-    return rows
+    return _tag(rows)
 
 
 def sstep_powers_traffic(n: int, nbands: int, s: int):
@@ -254,8 +311,10 @@ def sstep_powers_rows(grids=((64, 64, 2), (128, 128, 4), (256, 256, 8))):
         x = jax.random.normal(jax.random.PRNGKey(1), (n,))
         x = x / jnp.linalg.norm(x)
         eps = float(jnp.finfo(jnp.float32).eps) * 100
-        powers = jax.jit(lambda v: matrix_powers.matrix_powers_ref(
-            op, v, s, eps))
+        powers = jax.jit(_pick(
+            lambda v: matrix_powers.banded_powers(op.bands, v, op.offsets, s,
+                                                  interpret=_interp()),
+            lambda v: matrix_powers.matrix_powers_ref(op, v, s, eps)))
         t = _time(powers, x)
         nbands = op.bands.shape[0]
         fused, unfused = sstep_powers_traffic(n, nbands, s)
@@ -271,7 +330,7 @@ def sstep_powers_rows(grids=((64, 64, 2), (128, 128, 4), (256, 256, 8))):
                         f"A_hbm_passes=1 u_roundtrips=0 "
                         f"bands_vmem_kib={nbands * n * 4 // 1024}"),
         })
-    return rows
+    return _tag(rows)
 
 
 def block_gs_traffic(m1: int, n: int, s: int):
@@ -306,7 +365,9 @@ def block_gs_rows(cases=((21, 4096, 4), (33, 16384, 4), (65, 8192, 8)),
         w = jax.random.normal(jax.random.PRNGKey(1), (s, n))
         tin = jnp.eye(s)
         mask = jnp.ones((m1,), jnp.float32)
-        t = _time(jax.jit(block_gs.block_gs_pass_ref), v, w, tin, mask)
+        pass_fn = _pick(lambda v, w, t, mk: block_gs.block_gs_pass(
+            v, w, t, mk, interpret=_interp()), block_gs.block_gs_pass_ref)
+        t = _time(jax.jit(pass_fn), v, w, tin, mask)
         fused, unfused = block_gs_traffic(m1, n, s)
         ratio = fused / unfused
         rows.append({
@@ -327,7 +388,9 @@ def block_gs_rows(cases=((21, 4096, 4), (33, 16384, 4), (65, 8192, 8)),
         vb = jax.random.normal(jax.random.PRNGKey(2), (k, m1, n)) / np.sqrt(n)
         wb = jax.random.normal(jax.random.PRNGKey(3), (k, n))
         maskb = jnp.ones((k, m1), jnp.float32)
-        t = _time(jax.jit(jax.vmap(ref.cgs2)), vb, wb, maskb)
+        batched_fn = _pick(lambda v, w, mk: block_gs.batched_cgs2(
+            v, w, mk, interpret=_interp()), jax.vmap(ref.cgs2))
+        t = _time(jax.jit(batched_fn), vb, wb, maskb)
         rows.append({
             "name": f"block_gs_batched_m{m1 - 1}_n{n}_k{k}",
             "us": t * 1e6,
@@ -338,7 +401,7 @@ def block_gs_rows(cases=((21, 4096, 4), (33, 16384, 4), (65, 8192, 8)),
                         f"per_lane_V_streams=1of4 "
                         f"lane_vmem_kib={m1 * n * 4 // 1024}"),
         })
-    return rows
+    return _tag(rows)
 
 
 def sharded_cgs2_traffic(m1: int, n: int, p: int):
@@ -440,6 +503,132 @@ def sharded_rows(cases=((33, 65536, 8), (33, 262144, 8), (65, 65536, 4)),
     return rows
 
 
+_PIPE_CODE = textwrap.dedent("""
+    import json, sys
+    import jax, jax.numpy as jnp
+    from repro.core import gmres_sharded, stencils
+    from repro.compat import make_mesh
+    from repro.roofline import innermost_loop_collectives
+
+    # DENSE 2-D Poisson: dense storage exercises the all-gather matvec
+    # schedule (the 2x claim), the Poisson spectrum makes convergence
+    # genuinely iterative — restart parity is exact, not a coin flip at
+    # the tolerance floor like diag-dominant random systems (which
+    # converge in ~5 steps and stop AT the fp32 noise level).
+    nx, m = int(sys.argv[1]), int(sys.argv[2])
+    n = nx * nx
+    op = stencils.poisson_2d(nx, nx)
+    a = jnp.zeros((n, n), op.bands.dtype)
+    for d, off in enumerate(op.offsets):
+        off = int(off)
+        if off >= 0:
+            a = a + jnp.diag(op.bands[d, :n - off], k=off)
+        else:
+            a = a + jnp.diag(op.bands[d, -off:], k=off)
+    b = jnp.sin(jnp.arange(n) * 0.37)
+    mesh = make_mesh((4,), ('model',))
+    out = {}
+    for tag, gs in (("split", "cgs2"), ("pipelined", "cgs2_pipelined")):
+        jsol = jax.jit(lambda a, b, gs=gs: gmres_sharded(
+            mesh, 'model', a, b, m=m, tol=1e-4, gs=gs, max_restarts=60))
+        hlo = jsol.lower(a, b).compile().as_text()
+        _, ops = innermost_loop_collectives(hlo)
+        out["loop_coll_ops_" + tag] = sum(o.count for o in ops)
+        out["loop_psums_" + tag] = sum(o.count for o in ops
+                                       if o.kind == "all-reduce")
+        r = jsol(a, b)
+        out["restarts_" + tag] = int(r.restarts)
+        out["residual_" + tag] = float(r.residual)
+    print(json.dumps(out))
+""")
+
+
+def _pipelined_hlo_counts(nx: int, m: int):
+    """Lower both sharded schemes on 4 fake devices; parse the inner loop.
+
+    Subprocess so the parent keeps its 1-device view (the same trick as
+    benchmarks/distributed_gmres.py).  Raises on failure — the row is the
+    PR's acceptance evidence and must not silently degrade to a placeholder.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run([sys.executable, "-c", _PIPE_CODE, str(nx), str(m)],
+                         env=env, capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        raise RuntimeError(f"pipelined HLO probe failed: {res.stderr[-500:]}")
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def pipelined_rows(cases=((20, 16384), (30, 65536)), hlo_case=(32, 20)):
+    """Pipelined single-reduce CGS2 rows: psum schedule + the HLO proof.
+
+    Schedule rows: the split-phase path psums 3 scalars-ish payloads per
+    Arnoldi step (projection pass 1, projection pass 2, norm); the
+    single-reduce scheme fuses them into ONE (m1+1, 2)-block psum
+    ([V @ [z, v_j]; norms] — projections plus the measured Gram row)
+    whose launch overlaps the next SpMV.  ``us`` times the local recovery
+    arithmetic (payload + delayed-reorthogonalization algebra) — the
+    compute added to save two latency-bound rounds.
+
+    The ``pipelined_hlo_p4`` row lowers BOTH sharded solvers (dense 2-D
+    Poisson, hlo_case = (nx, m)) on 4 fake devices and reads the collective
+    schedule off the innermost while body of the optimized HLO — the PR's
+    acceptance metric (>= 2x fewer collectives per step at residual parity)
+    asserted by tools/bench_gate.py.
+    """
+    from repro.core import arnoldi
+
+    rows = []
+    for m, n in cases:
+        m1 = m + 1
+        v = jax.random.normal(jax.random.PRNGKey(0), (m1, n)) / np.sqrt(n)
+        z = jax.random.normal(jax.random.PRNGKey(1), (n,))
+        gram = jnp.eye(m1)
+
+        def _step(v, z, gram, j=m // 2):
+            payload = arnoldi.sr_payload_ref(v, z, j, None)
+            return arnoldi.sr_recover(payload, gram, j)
+
+        t = _time(jax.jit(_step), v, z, gram)
+        split_bytes = (2 * m1 + 1) * 4      # h psum x2 + the norm scalar
+        payload_bytes = 2 * (m1 + 1) * 4    # [V@[z,v_j]; norms] block
+        rows.append({
+            "name": f"pipelined_schedule_m{m}_n{n}",
+            "us": t * 1e6,
+            "psums_per_step_split": 3,
+            "psums_per_step_pipelined": 1,
+            "psum_bytes_split": split_bytes,
+            "psum_bytes_pipelined": payload_bytes,
+            "derived": (f"psum_rounds=1of3 "
+                        f"payload_B={payload_bytes} split_B={split_bytes} "
+                        f"overlapped_with_next_spmv=1"),
+        })
+    c = _pipelined_hlo_counts(*hlo_case)
+    ratio = c["loop_coll_ops_split"] / max(c["loop_coll_ops_pipelined"], 1)
+    rows.append({
+        "name": (f"pipelined_hlo_p4_poisson{hlo_case[0]}x{hlo_case[0]}"
+                 f"_m{hlo_case[1]}"),
+        "us": 0.0,
+        "loop_coll_ops_split": c["loop_coll_ops_split"],
+        "loop_coll_ops_pipelined": c["loop_coll_ops_pipelined"],
+        "loop_psums_split": c["loop_psums_split"],
+        "loop_psums_pipelined": c["loop_psums_pipelined"],
+        "restarts_split": c["restarts_split"],
+        "restarts_pipelined": c["restarts_pipelined"],
+        "loop_coll_ratio": ratio,
+        "derived": (f"loop_coll_ops={c['loop_coll_ops_split']}->"
+                    f"{c['loop_coll_ops_pipelined']} ({ratio:.2f}x) "
+                    f"loop_psums={c['loop_psums_split']}->"
+                    f"{c['loop_psums_pipelined']} "
+                    f"restarts={c['restarts_split']}vs"
+                    f"{c['restarts_pipelined']} "
+                    f"residual_split={c['residual_split']:.2e} "
+                    f"residual_pipelined={c['residual_pipelined']:.2e}"),
+    })
+    return rows
+
+
 def precision_restart_rows(grids=((24, 24), (32, 32)), dense_ns=(512,),
                            m: int = 20, tol: float = 1e-4):
     """compute_dtype=bf16 precision-vs-restarts sweep (ROADMAP item).
@@ -519,19 +708,25 @@ def attention_rows(cases=((1, 8, 8, 1024, 128), (1, 8, 2, 2048, 128))):
 
 def _validate_rows(rows):
     """Schema guard (what the CI smoke run asserts): every row carries the
-    universal keys, names are unique, traffic rows have both byte counts."""
+    universal keys, names are unique, traffic rows have both byte counts,
+    every row is mode-tagged."""
     names = [r["name"] for r in rows]
     assert len(set(names)) == len(names), "duplicate row names"
     for r in rows:
         assert isinstance(r["name"], str) and isinstance(r["derived"], str)
         assert r["us"] >= 0.0
+        assert r.get("mode") in ("modeled", "measured", "interpret"), \
+            f"{r['name']}: missing/bad mode tag {r.get('mode')!r}"
         if "traffic_ratio" in r:
             hbm = [k for k in r if k.startswith("hbm_bytes_")]
             assert len(hbm) == 2, (f"{r['name']}: traffic row needs 2 "
                                    f"hbm_bytes_* keys, has {hbm}")
 
 
-def main(json_path: str = "BENCH_kernels.json", smoke: bool = False):
+def main(json_path: str = "BENCH_kernels.json", smoke: bool = False,
+         measure: bool = False):
+    global MODE
+    MODE = _detect_mode() if measure else "modeled"
     if smoke:
         # CI schema guard: one cheap case per row family — EVERY family,
         # so no row's schema can drift unchecked — through the same code
@@ -545,14 +740,17 @@ def main(json_path: str = "BENCH_kernels.json", smoke: bool = False):
                                 batched_cases=((31, 2048, 2),))
                 + sharded_rows(cases=((33, 16384, 4),),
                                grids=((64, 64, 4),))
+                + pipelined_rows(cases=((10, 4096),), hlo_case=(16, 8))
                 + precision_restart_rows(grids=((16, 16),), dense_ns=(),
                                          tol=1e-3)
                 + attention_rows(cases=((1, 2, 2, 256, 64),)))
     else:
         rows = (matvec_rows() + gs_rows() + fused_step_rows()
                 + block_matvec_rows() + spmv_rows() + sstep_powers_rows()
-                + block_gs_rows() + sharded_rows()
+                + block_gs_rows() + sharded_rows() + pipelined_rows()
                 + precision_restart_rows() + attention_rows())
+    for r in rows:
+        r.setdefault("mode", MODE)
     _validate_rows(rows)
     print("name,us_per_call,derived")
     for r in rows:
@@ -572,6 +770,8 @@ def main(json_path: str = "BENCH_kernels.json", smoke: bool = False):
         with open(json_path, "w") as f:
             json.dump({"suite": "kernel_bench",
                        "backend": jax.default_backend(),
+                       "device": jax.devices()[0].device_kind,
+                       "mode": MODE,
                        "rows": rows}, f, indent=1)
         print(f"# wrote {json_path}")
     return rows
@@ -584,6 +784,11 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="fast subset (one case per family) — the CI "
                          "schema guard")
+    ap.add_argument("--measure", action="store_true",
+                    help="time the Pallas kernel path instead of the jnp "
+                         "reference: compiled on an attached accelerator "
+                         "(rows tagged 'measured'), interpreter on CPU "
+                         "(rows tagged 'interpret'; relative timing only)")
     ap.add_argument("--json", default=None,
                     help="output path ('' to skip writing).  Default: "
                          "BENCH_kernels.json for a full run; NOT written "
@@ -591,5 +796,5 @@ if __name__ == "__main__":
                          "full suite only)")
     args = ap.parse_args()
     if args.json is None:
-        args.json = "" if args.smoke else "BENCH_kernels.json"
-    main(json_path=args.json, smoke=args.smoke)
+        args.json = "" if args.smoke or args.measure else "BENCH_kernels.json"
+    main(json_path=args.json, smoke=args.smoke, measure=args.measure)

@@ -128,6 +128,109 @@ def cgs2_fused_step(v_basis, w, j, axis_name=None) -> ArnoldiStep:
     return finalize(w2.astype(w.dtype), h.astype(w.dtype), j, axis_name)
 
 
+# --------------------------------------------------------------------------
+# Single-reduce CGS2 (gs="cgs2_pipelined"): payload + replicated recovery
+# --------------------------------------------------------------------------
+#
+# The split-phase CGS2 step pays three collective rounds (h1 psum, h2 psum,
+# norm psum).  The single-reduce scheme packs everything one step needs into
+# ONE stacked payload over the column block W = [z, v_j]:
+#
+#     p = psum([ mask * (V @ [z, v_j]) ; z.z, v_j.v_j ])   -- (m+2, 2)
+#
+# Column 0 is the projection of the fresh mat-vec output; column 1 is the
+# MEASURED row j of the basis Gram matrix G = V V^T — v_j was built (and
+# normalized) last step, so its actual inner products against the older
+# rows carry every rounding error of that update.  This measurement is the
+# load-bearing part: a G maintained by algebraic prediction alone (the
+# g_col = (h1 - G h_tot)/s recurrence of the classical derivation) cannot
+# see update/normalization rounding, and the norm recovery's cancellation
+# amplifies the resulting G drift by ~||h||^2/||w''||^2 per step —
+# orthogonality collapses within a handful of steps on fast-converging
+# systems.  With G measured, the recovery is replicated O(m^2) algebra:
+#
+#     h1     = mask * p[:m1, 0]       zeta = p[m1, 0] = ||z||^2
+#     G[j,:] = G[:,j] = mask * p[:m1, 1]   (measured, overwrites the j row)
+#     h2     = mask * (h1 - G h1)     (delayed reorthogonalization)
+#     h_tot  = h1 + h2                w'' = z - h_tot @ V   (single update)
+#     ||w''||^2 = zeta - 2 h_tot.h1 + h_tot.G.h_tot   (exact quadratic form)
+#
+# No second projection pass, no separate norm psum, no predicted Gram
+# column.  The G entries are immutable once measured (basis rows never
+# change), so G converges to the true floating-point Gram matrix of the
+# basis as built; each restart still recomputes the TRUE residual, which
+# is what the +-1-restart parity contract absorbs.
+
+
+def sr_payload_ref(v_basis, z, j, axis_name=None):
+    """psum-safe jnp reference for the fused payload (one psum).
+
+    Returns the psum-completed (m1 + 1, 2) block
+    ``[mask * (V @ [z, v_j]); z.z, v_j.v_j]`` — column 0 the projection of
+    the mat-vec output, column 1 the measured Gram row of basis row j.
+    """
+    acc = jnp.promote_types(z.dtype, jnp.float32)
+    mask = _row_mask(v_basis.shape[0], j, acc)
+    vj = lax.dynamic_index_in_dim(v_basis, j, axis=0, keepdims=False)
+    w2 = jnp.stack([z, vj.astype(z.dtype)], axis=1).astype(acc)
+    h = (v_basis.astype(acc) @ w2) * mask[:, None]
+    nrm = jnp.sum(w2 * w2, axis=0, keepdims=True)
+    return _psum(jnp.concatenate([h, nrm], axis=0), axis_name)
+
+
+def sr_payload(v_basis, z, j, axis_name=None):
+    """Fused single-reduce payload psum — ONE collective per Arnoldi step.
+
+    Dispatches to the Pallas payload kernel under the standard policy
+    (compiled on TPU / interpret on CPU / jnp reference otherwise, plus the
+    ``tuning.gs_payload_fits`` VMEM gate) and completes the psum here so
+    callers see the GLOBAL payload either way.
+    """
+    from repro.kernels import tuning
+
+    m1, n = v_basis.shape
+    mode = tuning.kernel_mode()
+    dtn = jnp.dtype(v_basis.dtype).name
+    if mode == "ref" or not tuning.gs_payload_fits(m1, n, dtn):
+        return sr_payload_ref(v_basis, z, j, axis_name)
+
+    from repro.kernels import cgs2 as cgs2_k
+
+    mask = _row_mask(m1, j, jnp.float32)
+    vj = lax.dynamic_index_in_dim(v_basis, j, axis=0, keepdims=False)
+    w2 = jnp.stack([z, vj.astype(z.dtype)], axis=1)
+    bn = tuning.choose_gs_block(m1, n, dtn)
+    p = cgs2_k.gs_project_norm_partial(v_basis, w2, mask, block_n=bn,
+                                       interpret=mode == "interpret")
+    return _psum(p, axis_name)
+
+
+def sr_recover(payload, gram, j):
+    """Replicated single-reduce recovery (no collectives, O(m^2) flops).
+
+    payload: the psum-completed (m1+1, 2) block; gram: the maintained
+    (m1, m1) basis Gram matrix (identity at cycle start); j: current step
+    index.
+
+    Returns ``(h_tot, s_norm, zeta, gram')`` — the combined two-pass
+    Hessenberg coefficients, the recovered norm ||w''||, the raw ||z||^2,
+    and the Gram matrix with row/column j overwritten by the MEASURED
+    inner products of basis row j (payload column 1).
+    """
+    m1 = gram.shape[0]
+    mask = _row_mask(m1, j, payload.dtype)
+    h1 = payload[:m1, 0] * mask
+    zeta = jnp.maximum(payload[m1, 0], 0.0)
+    g_row = payload[:m1, 1] * mask        # measured V @ v_j (diag at j)
+    gram = lax.dynamic_update_slice(gram, g_row[None, :], (j, 0))
+    gram = lax.dynamic_update_slice(gram, g_row[:, None], (0, j))
+    h2 = (h1 - gram @ h1) * mask          # second pass against measured G
+    h_tot = h1 + h2
+    delta = zeta - 2.0 * (h_tot @ h1) + h_tot @ (gram @ h_tot)
+    s_norm = jnp.sqrt(jnp.maximum(delta, 0.0))
+    return h_tot, s_norm, zeta, gram
+
+
 def finalize(w, h, j, axis_name=None) -> ArnoldiStep:
     """Normalize the orthogonalized w and record the h[j+1] breakdown probe.
 
@@ -149,8 +252,17 @@ _SCHEMES: dict = {"cgs": cgs_step, "cgs2": cgs2_step, "mgs": mgs_step,
 
 
 def step(scheme: str) -> Callable:
+    if scheme == "cgs2_pipelined":
+        # Stateful scheme (carries a Gram matrix and the pipelined matvec
+        # across steps) — implemented as a dedicated cycle in core/gmres.py,
+        # not as a per-step function.  Callers that can only run stateless
+        # steps (e.g. the batched solver) degrade it to plain CGS2.
+        raise ValueError(
+            "gs='cgs2_pipelined' is a whole-cycle scheme handled inside "
+            "gmres(); use step('cgs2') for a stateless equivalent")
     try:
         return _SCHEMES[scheme]
     except KeyError:
         raise ValueError(f"unknown gram-schmidt scheme {scheme!r}; "
-                         f"options: {sorted(_SCHEMES)}") from None
+                         f"options: {sorted(_SCHEMES)} + ['cgs2_pipelined']"
+                         ) from None

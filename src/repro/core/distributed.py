@@ -186,6 +186,7 @@ def gmres_sstep_sharded(
     blocks: int = 5,
     tol: float = 1e-5,
     max_restarts: int = 30,
+    gs: str = "cgs2",
 ) -> GmresResult:
     """Row-sharded s-step GMRES — the communication-avoiding wrapper.
 
@@ -194,14 +195,16 @@ def gmres_sstep_sharded(
     step runs the halo matrix-powers kernel (ONE neighbor exchange + ONE
     psum for all s powers) and the split-phase block-GS pair — per s
     steps that is 4 collective rounds where the standard sharded cycle
-    pays ~4 PER step.
+    pays ~4 PER step.  ``gs="cgs2_pipelined"`` fuses each block-GS pass's
+    C and Gram psums into ONE stacked payload reduction (6 -> 4 rounds
+    per block; see ``core.sstep.gmres_sstep``).
     """
     op = op_mod.as_operator(a)
 
     def body(op_local, b_local, x0_local):
         return gmres_sstep(op_local, b_local, x0_local, s=s, blocks=blocks,
                            tol=tol, max_restarts=max_restarts,
-                           axis_name=axis)
+                           axis_name=axis, gs=gs)
 
     return _run_sharded(mesh, axis, op, b, x0, "gmres_sstep_sharded", body)
 

@@ -65,7 +65,7 @@ class _CycleState(NamedTuple):
 # backend, sharded basis, ...).
 _FUSED_STEP_SCHEMES = ("fused", "arnoldi_fused")
 _SCHEME_FALLBACK = {"fused": "cgs2", "arnoldi_fused": "cgs2",
-                    "cgs2_fused": "cgs2"}
+                    "cgs2_fused": "cgs2", "cgs2_pipelined": "cgs2"}
 
 
 def _make_step_fn(matvec, precond, gs: str, axis_name, *, identity_precond,
@@ -184,6 +184,138 @@ def _gmres_cycle(step_fn, x0, r0, beta, m, tol_abs, precond, basis_dtype):
     return x, state.steps
 
 
+# --------------------------------------------------------------------------
+# Pipelined single-reduce cycle (gs="cgs2_pipelined")
+# --------------------------------------------------------------------------
+class _PipelinedState(NamedTuple):
+    v: jax.Array             # (m+1, n_local) Krylov basis, row-major
+    z: jax.Array             # op(v_j): the pipelined raw mat-vec carry
+    hraw: jax.Array          # (m+1, m) raw Hessenberg columns (recurrence)
+    gram: jax.Array          # (m+1, m+1) maintained basis Gram matrix
+    giv: givens.GivensState
+    done: jax.Array
+    steps: jax.Array
+
+
+def _make_pipelined_fns(matvec, precond, axis_name, *, m: int, n: int,
+                        basis_dtype):
+    """Build ``(op, update)`` for the pipelined cycle.
+
+    ``op`` is the preconditioned operator A M^{-1}; ``update`` computes
+    ``w - h @ V`` through the streaming update kernel under the standard
+    dispatch policy (compiled / interpret / jnp reference, VMEM-gated).
+    The payload half dispatches inside ``arnoldi.sr_payload``.
+    """
+    from repro.kernels import tuning
+
+    mode = tuning.kernel_mode()
+    dtn = jnp.dtype(basis_dtype).name
+    if mode != "ref" and tuning.gs_payload_fits(m + 1, n, dtn):
+        from repro.kernels import cgs2 as cgs2_k
+
+        bn = tuning.choose_gs_block(m + 1, n, dtn)
+        interp = mode == "interpret"
+
+        def update(v_basis, w, h):
+            return cgs2_k.gs_update(v_basis, w, h, block_n=bn,
+                                    interpret=interp)
+    else:
+
+        def update(v_basis, w, h):
+            acc = jnp.promote_types(w.dtype, jnp.float32)
+            out = w.astype(acc) - h.astype(acc) @ v_basis.astype(acc)
+            return out.astype(w.dtype)
+
+    def op(zv):
+        return matvec(precond(zv))
+
+    return op, update
+
+
+def _gmres_cycle_pipelined(op, update, x0, r0, beta, m, tol_abs, precond,
+                           basis_dtype, axis_name):
+    """One restart cycle of depth-1 pipelined single-reduce GMRES.
+
+    Per Arnoldi step the body pays exactly ONE collective — the fused
+    ``sr_payload`` psum — and issues it BEFORE the step-(j+1) mat-vec,
+    consuming it after (Ghysels & Vanroose 2013 style depth-1 pipelining):
+
+        payload_j = psum([mask*(V@z_j); z_j.z_j])     <- the only collective
+        u         = op(z_j)                           <- independent: XLA's
+                                                         latency-hiding
+                                                         scheduler overlaps
+                                                         it with the psum
+        recover h_tot, ||w''||, Gram column from payload_j (replicated)
+        v_{j+1}   = (z_j - h_tot @ V) / ||w''||
+        z_{j+1}   = (u - (H h_lt) @ V - h_tot[j] z_j) / ||w''||
+
+    The z recurrence uses op(v_i) = V @ H[:, i] (the Arnoldi relation) so
+    the next mat-vec never waits for v_{j+1}: the basis never sees ``op``
+    on the critical path behind the reduction.  Cost: one speculative
+    mat-vec per cycle is wasted at the final step (the pipeline bubble),
+    and the correction inherits recurrence rounding — bounded by the TRUE
+    residual recompute at every restart (the +-1-restart parity contract).
+
+    Scale-invariant by construction: z scales linearly with the system, the
+    recovered norm with z, and the breakdown probe compares ||w''|| against
+    eps * ||z|| (relative), matching PR 3's invariance contract.
+    """
+    n = x0.shape[0]
+    dtype = x0.dtype
+    tiny = jnp.asarray(jnp.finfo(dtype).tiny ** 0.5, dtype)
+    eps_rel = jnp.asarray(jnp.finfo(dtype).eps * 100.0, dtype)
+    acc = jnp.promote_types(dtype, jnp.float32)
+
+    v0 = (r0 / jnp.maximum(beta, tiny)).astype(dtype)
+    v = jnp.zeros((m + 1, n), basis_dtype).at[0].set(v0.astype(basis_dtype))
+    state = _PipelinedState(
+        v=v,
+        z=op(v0),                               # pipeline prologue mat-vec
+        hraw=jnp.zeros((m + 1, m), dtype),
+        gram=jnp.eye(m + 1, dtype=acc),
+        giv=givens.init(m, beta, dtype),
+        done=beta <= tol_abs,
+        steps=jnp.zeros((), jnp.int32),
+    )
+
+    def cond(s: _PipelinedState):
+        return jnp.logical_not(s.done) & (s.steps < m)
+
+    def body(s: _PipelinedState):
+        j = s.steps
+        # --- issue the ONE collective of this step ---
+        payload = arnoldi.sr_payload(s.v, s.z, j, axis_name)
+        # --- the next mat-vec, independent of the psum result ---
+        u = op(s.z)
+        # --- consume: replicated recovery of both passes + norm ---
+        h_tot, s_norm, zeta, gram = arnoldi.sr_recover(payload, s.gram, j)
+        h_tot = h_tot.astype(dtype)
+        s_d = s_norm.astype(dtype)
+        sg = jnp.maximum(s_d, tiny)
+        w2 = update(s.v, s.z, h_tot)            # w'' = z - h_tot @ V
+        v_next = w2 / sg
+        # correct the speculative mat-vec onto v_{j+1} via the recurrence
+        lt = (jnp.arange(m) < j).astype(dtype)
+        c_vec = s.hraw @ (h_tot[:m] * lt)       # (m+1,) basis coefficients
+        z_next = (update(s.v, u, c_vec) - h_tot[j] * s.z) / sg
+
+        v = s.v.at[j + 1].set(v_next.astype(basis_dtype))
+        hcol = h_tot.at[j + 1].set(s_d)
+        hraw = s.hraw.at[:, j].set(hcol)
+        giv = givens.update(s.giv, hcol, j, active=jnp.asarray(True))
+        resid = givens.residual_norm(giv, j)
+        happy = s_d <= eps_rel * jnp.sqrt(zeta).astype(dtype)
+        done = (resid <= tol_abs) | happy
+        return _PipelinedState(v=v, z=z_next, hraw=hraw, gram=gram, giv=giv,
+                               done=done, steps=j + 1)
+
+    state = lax.while_loop(cond, body, state)
+    y = givens.solve(state.giv, state.steps)
+    dx = y @ state.v[:m].astype(dtype)
+    x = x0 + precond(dx)
+    return x, state.steps
+
+
 def gmres(
     a,
     b: jax.Array,
@@ -219,7 +351,14 @@ def gmres(
         | "fused" (whole Arnoldi step in one Pallas kernel; needs an
         unpreconditioned single-shard ``DenseOperator`` and a basis that
         fits VMEM — degrades to "cgs2_fused" otherwise, which itself
-        degrades to "cgs2" where Pallas is unavailable).
+        degrades to "cgs2" where Pallas is unavailable)
+        | "cgs2_pipelined" (single-reduce CGS2 with depth-1 pipelining:
+        ONE fused psum per Arnoldi step — projection coefficients and the
+        norm contribution in one stacked payload — issued before and
+        consumed after the next mat-vec so the collective hides behind
+        compute; kernel-backed payload/update halves with the same
+        compiled/interpret/jnp-ref dispatch, psum-safe reference when
+        unfit).
       precond: right preconditioner M^{-1} as a callable (identity default).
       axis_name: mesh axis for the row-sharded distributed solve.
       compute_dtype: Krylov-basis storage dtype (e.g. ``jnp.bfloat16``)
@@ -239,9 +378,15 @@ def gmres(
         precond = lambda v: v
     basis_dtype = b.dtype if compute_dtype is None else compute_dtype
 
-    step_fn = _make_step_fn(matvec, precond, gs, axis_name,
-                            identity_precond=identity_precond, m=m,
-                            n=b.shape[0], basis_dtype=basis_dtype)
+    pipelined = gs == "cgs2_pipelined"
+    if pipelined:
+        op_fn, update_fn = _make_pipelined_fns(
+            matvec, precond, axis_name, m=m, n=b.shape[0],
+            basis_dtype=basis_dtype)
+    else:
+        step_fn = _make_step_fn(matvec, precond, gs, axis_name,
+                                identity_precond=identity_precond, m=m,
+                                n=b.shape[0], basis_dtype=basis_dtype)
 
     bnorm = arnoldi.norm(b, axis_name)
     tol_abs = jnp.maximum(tol * bnorm, jnp.asarray(0.0, b.dtype))
@@ -258,9 +403,14 @@ def gmres(
 
     def body(carry):
         x, r, beta, k, steps = carry
-        x, inner = _gmres_cycle(
-            step_fn, x, r, beta, m, tol_abs, precond, basis_dtype
-        )
+        if pipelined:
+            x, inner = _gmres_cycle_pipelined(
+                op_fn, update_fn, x, r, beta, m, tol_abs, precond,
+                basis_dtype, axis_name)
+        else:
+            x, inner = _gmres_cycle(
+                step_fn, x, r, beta, m, tol_abs, precond, basis_dtype
+            )
         r, beta = resid_of(x)
         return x, r, beta, k + 1, steps + inner
 
@@ -277,7 +427,8 @@ def gmres(
 # --------------------------------------------------------------------------
 # Schemes whose arithmetic is CGS2 — the batched block-GS kernel implements
 # exactly that, so any of these may ride it in gmres_batched.
-_CGS2_FAMILY = ("cgs2", "cgs2_fused", "fused", "arnoldi_fused")
+_CGS2_FAMILY = ("cgs2", "cgs2_fused", "fused", "arnoldi_fused",
+                "cgs2_pipelined")
 
 
 def _make_batched_gs(gs: str, m: int, n: int, basis_dtype) -> Callable:

@@ -84,8 +84,9 @@ from repro.core.gmres import GmresResult
 from repro.core.operators import BandedOperator, DenseOperator, as_operator
 
 
-def _make_block_fns(op, n: int, s: int, m1: int, dtype, axis_name):
-    """Trace-time dispatch: (powers_fn, gs_pass_fn, basis_shape).
+def _make_block_fns(op, n: int, s: int, m1: int, dtype, axis_name,
+                    gs: str = "cgs2"):
+    """Trace-time dispatch: (powers_fn, gs_pass_fn, basis_shape, single_reduce).
 
     Kernel paths need a kernel-capable backend (``tuning.kernel_mode()
     != "ref"``) and a working set that fits VMEM; row-sharded solves
@@ -176,32 +177,64 @@ def _make_block_fns(op, n: int, s: int, m1: int, dtype, axis_name):
         powers_fn = lambda u0: matrix_powers.matrix_powers_ref(
             op, u0, s, guard, axis_name)
 
-    if mode != "ref" and tuning.block_gs_fits(m1, n, dtype, s=s):
+    if gs not in ("cgs2", "cgs2_pipelined"):
+        raise ValueError(f"gmres_sstep: unknown gs {gs!r}; options: "
+                         f"['cgs2', 'cgs2_pipelined']")
+    single_reduce = gs == "cgs2_pipelined"
+    kernel_gs = mode != "ref" and tuning.block_gs_fits(m1, n, dtype, s=s)
+    if single_reduce:
+        # ONE stacked psum per pass ([C_hat; M] payload, CholQR Gram
+        # recovered against the maintained basis Gram matrix) — 2 rounds
+        # per block instead of 4.  The matrix-powers exchange/psum above
+        # stays separate: its operand is the RAW power block, whose row
+        # scaling would destabilize CholQR if folded into this payload.
+        if kernel_gs:
+            gs_pass = (lambda v, w, tin, mask, gram:
+                       block_gs.block_gs_pass_single_reduce(
+                           v, w, tin, mask, gram, axis_name,
+                           interpret=interp))
+        else:
+            gs_pass = (lambda v, w, tin, mask, gram:
+                       block_gs.block_gs_pass_single_reduce_ref(
+                           v, w, tin, mask, gram, axis_name))
+    elif kernel_gs:
         if axis_name is None:
             gs_pass = lambda v, w, tin, mask: block_gs.block_gs_pass(
                 v, w, tin, mask, interpret=interp)
         else:
             gs_pass = lambda v, w, tin, mask: block_gs.block_gs_pass_sharded(
                 v, w, tin, mask, axis_name, interpret=interp)
+    else:
+        gs_pass = lambda v, w, tin, mask: block_gs.block_gs_pass_ref(
+            v, w, tin, mask, axis_name)
+    if kernel_gs:
         m1p, n_pad, _ = tuning.choose_block_gs(m1, n, s,
                                                jnp.dtype(dtype).name)
         basis_shape = (m1p, n_pad)
     else:
-        gs_pass = lambda v, w, tin, mask: block_gs.block_gs_pass_ref(
-            v, w, tin, mask, axis_name)
         basis_shape = (m1, n)
-    return powers_fn, gs_pass, basis_shape
+    return powers_fn, gs_pass, basis_shape, single_reduce
 
 
 def _block_step(powers_fn, gs_pass, v_basis, h, k_start: int, s: int, eps,
-                n: int):
+                n: int, gram=None):
     """One s-step block at STATIC offset k_start.
 
     v_basis: (m1_pad, n_pad) basis carry — live rows/cols are (m+1, n),
     any padding rows/cols are zero (see ``_make_block_fns``).  h: (m+1, m)
     Hessenberg built so far (columns >= k_start are zero).  Returns
     (v_basis with rows k_start+1..k_start+s written,
-     h with columns k_start..k_start+s-1 written).
+     h with columns k_start..k_start+s-1 written, gram).
+
+    ``gram`` (single-reduce mode): the maintained (m1_pad, m1_pad) basis
+    Gram matrix.  Each pass then pays ONE stacked psum and the CholQR Gram
+    is recovered from it; after CholQR the s new basis rows' measured
+    inner products extend ``gram`` via
+
+        Gamma_cross = V Q_new^T = (C_hat_2 - Gamma C_2) R_2^{-1}
+        Gamma_diag  = Q_new Q_new^T = R_2^{-T} G_2 R_2^{-1}
+
+    — replicated (m x s) algebra, no collective.
     """
     m1p, n_pad = v_basis.shape
     m1 = h.shape[0]                      # live rows: m + 1
@@ -232,15 +265,33 @@ def _block_step(powers_fn, gs_pass, v_basis, h, k_start: int, s: int, eps,
         return jnp.linalg.cholesky(g).mT                  # upper
 
     eye_s = jnp.eye(s, dtype=dtype)
-    c1, w1, g1 = gs_pass(v_basis, u_cols, eye_s, row_mask)
+    if gram is None:
+        c1, w1, g1 = gs_pass(v_basis, u_cols, eye_s, row_mask)
+    else:
+        c1, w1, g1, _ = gs_pass(v_basis, u_cols, eye_s, row_mask, gram)
     r1 = cholqr_factor(g1)
     # T = inv(R1^T): folds the CholQR back-substitution (Q1 = R1^{-T} W1)
     # into the second pass's stream instead of a separate (s, n) solve.
     t1 = jax.scipy.linalg.solve_triangular(r1.mT, eye_s, lower=True)
-    c2, w2, g2 = gs_pass(v_basis, w1.astype(dtype), t1, row_mask)
+    if gram is None:
+        c2, w2, g2 = gs_pass(v_basis, w1.astype(dtype), t1, row_mask)
+    else:
+        c2, w2, g2, c_hat2 = gs_pass(v_basis, w1.astype(dtype), t1,
+                                     row_mask, gram)
     r2 = cholqr_factor(g2)
     q = jax.scipy.linalg.solve_triangular(r2.mT, w2.astype(dtype),
                                           lower=True)
+    if gram is not None:
+        # Extend the maintained Gram matrix by the s rows just built.
+        gacc = gram.dtype
+        t2 = jax.scipy.linalg.solve_triangular(
+            r2.mT.astype(gacc), jnp.eye(s, dtype=gacc), lower=True)
+        cross = (c_hat2.astype(gacc)
+                 - gram @ c2.astype(gacc)) @ t2.mT       # (m1p, s) X R2^{-1}
+        diag = t2 @ g2.astype(gacc) @ t2.mT              # (s, s)
+        gram = lax.dynamic_update_slice(gram, cross, (0, k_start + 1))
+        gram = lax.dynamic_update_slice(gram, cross.mT, (k_start + 1, 0))
+        gram = lax.dynamic_update_slice(gram, diag, (k_start + 1, k_start + 1))
     # Padded basis rows are masked to zero in C, so the Hessenberg algebra
     # below runs at the live (m+1) row count.
     c_tot = (c1[:m1] + c2[:m1] @ r1).astype(dtype)  # (m1, s)
@@ -263,12 +314,13 @@ def _block_step(powers_fn, gs_pass, v_basis, h, k_start: int, s: int, eps,
 
     v_basis = lax.dynamic_update_slice(v_basis, q, (k_start + 1, 0))
     h = lax.dynamic_update_slice(h, h_new, (0, k_start))
-    return v_basis, h
+    return v_basis, h, gram
 
 
 def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
                 tol: float = 1e-5, max_restarts: int = 30,
-                axis_name: Optional[str] = None) -> GmresResult:
+                axis_name: Optional[str] = None,
+                gs: str = "cgs2") -> GmresResult:
     """Restarted s-step GMRES(m = s * blocks).
 
     ``a`` may be any operator ``gmres`` accepts; ``BandedOperator`` /
@@ -278,6 +330,16 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
     The per-cycle least-squares solve folds the replicated (m+1, m)
     Hessenberg through incremental Givens QR — tiny next to the mat-vecs
     and collective-free.
+
+    ``gs``: "cgs2" (the split-phase block passes — 4 psums per block when
+    sharded) | "cgs2_pipelined" (single-reduce passes: each pass's C and
+    Gram reductions cross shards as ONE stacked payload, with the CholQR
+    Gram recovered against a maintained basis Gram matrix — 2 psums per
+    block; with the banded CA powers path that is 4 collective rounds per
+    s steps total).  There is no cross-block mat-vec pipelining here: the
+    power basis of block k+1 starts from the LAST orthonormal vector of
+    block k, a true dependency the standard cycle's depth-1 trick cannot
+    break.
     """
     matvec = as_operator(a)
     if x0 is None:
@@ -289,8 +351,9 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
     m = s * blocks
     bnorm = arnoldi.norm(b, axis_name)
     tol_abs = tol * bnorm
-    powers_fn, gs_pass, basis_shape = _make_block_fns(matvec, n, s, m + 1,
-                                                      dtype, axis_name)
+    powers_fn, gs_pass, basis_shape, single_reduce = _make_block_fns(
+        matvec, n, s, m + 1, dtype, axis_name, gs)
+    gacc = jnp.promote_types(dtype, jnp.float32)
 
     def cycle(x):
         r = b - matvec(x)
@@ -298,8 +361,12 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
         v = jnp.zeros(basis_shape, dtype).at[0, :n].set(
             r / jnp.maximum(beta, guard))
         h = jnp.zeros((m + 1, m), dtype)
+        # Identity init is exact where it matters: rows beyond the current
+        # block are only ever touched against zero (masked) columns.
+        gram = jnp.eye(basis_shape[0], dtype=gacc) if single_reduce else None
         for blk in range(blocks):                  # static offsets
-            v, h = _block_step(powers_fn, gs_pass, v, h, blk * s, s, eps, n)
+            v, h, gram = _block_step(powers_fn, gs_pass, v, h, blk * s, s,
+                                     eps, n, gram)
 
         # Fold the m Hessenberg columns through incremental Givens QR.  The
         # ``done`` latch mirrors the standard solver's cycle masking: once

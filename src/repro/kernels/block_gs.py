@@ -296,6 +296,126 @@ def block_gs_pass_sharded(v: jax.Array, w: jax.Array, tin: jax.Array,
 
 
 # --------------------------------------------------------------------------
+# Single-reduce s-step pass (gs="cgs2_pipelined"): ONE psum per pass
+# --------------------------------------------------------------------------
+def _block_gs_project_gram_kernel(v_ref, w_ref, t_ref, q_ref, c_ref, m_ref):
+    acc = c_ref.dtype
+    v = v_ref[...].astype(acc)                               # (m1p, np)
+    q = _dot(t_ref[...], w_ref[...], ((1,), (0,)), acc)      # (sp, np)
+    c_ref[...] = _dot(v, q, ((1,), (1,)), acc)   # UNMASKED C_hat = V Q^T
+    m_ref[...] = _dot(q, q, ((1,), (1,)), acc)   # M = Q Q^T
+    q_ref[...] = q
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_gs_project_gram(v: jax.Array, w: jax.Array, tin: jax.Array, *,
+                          interpret: bool = False):
+    """Single-reduce projection phase: Q = T W plus the PRE-psum payload
+    halves ``C_hat_partial = V Q^T`` (UNMASKED — the Gram recurrence needs
+    the full column) and ``M_partial = Q Q^T``, all from ONE stream of V/W.
+
+    Returns ``(q, c_hat_partial, m_partial)``; the caller stacks the last
+    two into one psum payload (``block_gs_pass_single_reduce``).
+    """
+    m1, n = v.shape
+    s = w.shape[0]
+    if w.shape[1] != n:
+        raise TypeError(f"block_gs_project_gram: v {v.shape} and w "
+                        f"{w.shape} must share the vector length")
+    if tin.shape != (s, s):
+        raise TypeError(f"block_gs_project_gram: tin {tin.shape} must be "
+                        f"({s}, {s})")
+    acc = jnp.promote_types(w.dtype, jnp.float32)
+    m1p, np_, sp = tuning.choose_block_gs(m1, n, s, jnp.dtype(v.dtype).name)
+    v = jnp.pad(v, ((0, m1p - m1), (0, np_ - n)))
+    w = jnp.pad(w.astype(acc), ((0, sp - s), (0, np_ - n)))
+    tin = jnp.pad(tin.astype(acc), ((0, sp - s), (0, sp - s)))
+
+    q, c, mm = pl.pallas_call(
+        _block_gs_project_gram_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m1p, np_), lambda _: (0, 0)),
+            pl.BlockSpec((sp, np_), lambda _: (0, 0)),
+            pl.BlockSpec((sp, sp), lambda _: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((sp, np_), lambda _: (0, 0)),
+            pl.BlockSpec((m1p, sp), lambda _: (0, 0)),
+            pl.BlockSpec((sp, sp), lambda _: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((sp, np_), acc),
+            jax.ShapeDtypeStruct((m1p, sp), acc),
+            jax.ShapeDtypeStruct((sp, sp), acc),
+        ],
+        interpret=interpret,
+        name="gmres_block_gs_project_gram",
+    )(v, w, tin)
+    return q[:s, :n], c[:m1, :s], mm[:s, :s]
+
+
+def _sr_recover_block(payload, mask, gram, m1):
+    """Replicated recovery of (c, g, c_hat) from the stacked psum payload.
+
+    With Gamma = ``gram`` the maintained basis Gram matrix (~= V V^T), the
+    CholQR Gram of the updated block W' = Q - C^T V is exactly
+
+        G = M - C_hat^T C - C^T C_hat + C^T Gamma C
+
+    — no second reduction: the W'W'^T psum of the split-phase pass is
+    replaced by collective-free (m x s) algebra.
+    """
+    c_hat = payload[:m1]
+    mm = payload[m1:]
+    c = c_hat * mask[:, None]
+    gc = gram @ c
+    g = mm - c_hat.T @ c - c.T @ c_hat + c.T @ gc
+    return c, g, c_hat
+
+
+def block_gs_pass_single_reduce(v: jax.Array, w: jax.Array, tin: jax.Array,
+                                mask: jax.Array, gram: jax.Array,
+                                axis_name=None, *, interpret: bool = False):
+    """One single-reduce block-GS pass: ONE stacked psum instead of two.
+
+    Same ``(c, w', g)`` contract as ``block_gs_pass_sharded`` plus the raw
+    ``c_hat`` column (the caller maintains the basis Gram matrix ``gram``
+    with it).  The projection kernel emits the unmasked C_hat = V Q^T and
+    M = Q Q^T from one stream; both cross shards as ONE stacked
+    (m1 + s, s) payload, and the CholQR Gram is recovered from it against
+    ``gram`` (see ``_sr_recover_block``).  The update kernel's own Gram
+    output is discarded — its psum is the round being saved.
+    """
+    m1 = v.shape[0]
+    q, c_hat, mm = block_gs_project_gram(v, w, tin, interpret=interpret)
+    payload = jnp.concatenate([c_hat, mm], axis=0)
+    if axis_name is not None:
+        payload = lax.psum(payload, axis_name)           # the ONE collective
+    c, g, c_hat = _sr_recover_block(payload, mask.astype(payload.dtype),
+                                    gram, m1)
+    w2, _ = block_gs_update(v, q, c, interpret=interpret)
+    return c, w2, g, c_hat
+
+
+def block_gs_pass_single_reduce_ref(v: jax.Array, w: jax.Array,
+                                    tin: jax.Array, mask: jax.Array,
+                                    gram: jax.Array, axis_name=None):
+    """jnp oracle / psum-safe fallback for ``block_gs_pass_single_reduce``
+    — identical payload stacking and the same single psum placement."""
+    acc = jnp.promote_types(w.dtype, jnp.float32)
+    m1 = v.shape[0]
+    va = v.astype(acc)
+    q = tin.astype(acc) @ w.astype(acc)
+    payload = jnp.concatenate([va @ q.T, q @ q.T], axis=0)
+    if axis_name is not None:
+        payload = lax.psum(payload, axis_name)
+    c, g, c_hat = _sr_recover_block(payload, mask.astype(acc), gram, m1)
+    w2 = q - c.T @ va
+    return c, w2, g, c_hat
+
+
+# --------------------------------------------------------------------------
 # batched per-lane CGS2 for gmres_batched
 # --------------------------------------------------------------------------
 def _batched_cgs2_kernel(v_ref, w_ref, mask_ref, h_ref, wout_ref):

@@ -37,6 +37,25 @@ round-trips stay off HBM within each phase, and the collective rounds are
 the 2-per-pass minimum the scheme admits.  This is what keeps the
 row-sharded solve on the kernel path (pre-PR-5 it bailed to the jnp
 reference whenever ``axis_name`` was set).
+
+SINGLE-REDUCE payload (PR 6): ``gs_project_norm_partial`` is the project
+kernel extended by one row and generalized to a small column block — the
+same tile loop projects V against W = [z, v_j] (the fresh mat-vec output
+AND the basis row built last step) while accumulating the local column
+norms, so the per-shard output is the stacked (m1 + 1, 2) payload
+
+    [ mask * (V_local @ [z, v_j]) ;  z.z, v_j.v_j ]
+
+that the ``gs="cgs2_pipelined"`` scheme completes with ONE psum per
+Arnoldi step (vs the split-phase pair's two h psums plus the norm psum).
+Column 0 carries the projection coefficients and norm; column 1 is the
+MEASURED row j of the basis Gram matrix — it captures the rounding of
+the previous step's update and normalization, which a predicted Gram
+recurrence cannot (that prediction error compounds ~two digits per step
+on fast-converging systems).  The second-pass CGS2 correction and
+||w''|| are recovered from the payload by replicated O(m^2) algebra
+(core/arnoldi.py ``sr_recover``); the update half reuses ``gs_update``
+unchanged.
 """
 from __future__ import annotations
 
@@ -186,6 +205,69 @@ def gs_project_partial(v: jax.Array, w: jax.Array, mask: jax.Array, *,
         name="gmres_gs_project",
     )(v, w[:, None].astype(acc_dtype), mask[:, None].astype(acc_dtype))
     return h[:, 0]
+
+
+def _project_norm_kernel(v_ref, w_ref, mask_ref, p_ref):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    # Rows 0..m1-1 accumulate mask * (V @ W) for a small column block W;
+    # the extra last row accumulates the local column norms — ONE streaming
+    # pass over the tile produces the whole single-reduce payload
+    # in-register.  The mask broadcasts across columns.
+    w = w_ref[...]  # (bn, k), already acc dtype
+    h = jax.lax.dot_general(
+        v_ref[...].astype(p_ref.dtype), w,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=p_ref.dtype,
+    ) * mask_ref[...]  # (m1, k)
+    nrm = jnp.sum(w * w, axis=0, keepdims=True)  # (1, k)
+    p_ref[...] += jnp.concatenate([h, nrm], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gs_project_norm_partial(v: jax.Array, w: jax.Array, mask: jax.Array, *,
+                            block_n: int = 1024, interpret: bool = False):
+    """Per-shard single-reduce payload: [mask * (V_local @ W); colnorms(W)].
+
+    v: (m1, n_local), w: (n_local,) or (n_local, k), mask: (m1,).  Returns
+    the (m1 + 1,) / (m1 + 1, k) PRE-psum stacked payload — one ``lax.psum``
+    of this block at the shard_map level is the ONLY collective a pipelined
+    Arnoldi step pays (``core/arnoldi.py::sr_recover`` turns the k=2
+    payload [z, v_j] into both CGS2 coefficient sets, the norm and the
+    measured Gram row).  Padding contributes zeros to both halves.
+    """
+    squeeze = w.ndim == 1
+    wk = w[:, None] if squeeze else w
+    m1, n = v.shape
+    k = wk.shape[1]
+    bn = min(block_n, n)
+    if n % bn:
+        np_ = (n + bn - 1) // bn * bn
+        p = gs_project_norm_partial(
+            jnp.pad(v, ((0, 0), (0, np_ - n))),
+            jnp.pad(wk, ((0, np_ - n), (0, 0))),
+            mask, block_n=bn, interpret=interpret)
+        return p[:, 0] if squeeze else p
+
+    acc_dtype = jnp.promote_types(w.dtype, jnp.float32)
+    p = pl.pallas_call(
+        _project_norm_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m1, bn), lambda j: (0, j)),
+            pl.BlockSpec((bn, k), lambda j: (j, 0)),
+            pl.BlockSpec((m1, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m1 + 1, k), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m1 + 1, k), acc_dtype),
+        interpret=interpret,
+        name="gmres_gs_project_norm",
+    )(v, wk.astype(acc_dtype), mask[:, None].astype(acc_dtype))
+    return p[:, 0] if squeeze else p
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))

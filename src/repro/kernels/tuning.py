@@ -115,7 +115,121 @@ def shard_size() -> int:
     return _SHARD_CTX[-1].num_shards if _SHARD_CTX else 1
 
 
-@functools.lru_cache(maxsize=256)
+# --------------------------------------------------------------------------
+# Persistent autotune cache
+# --------------------------------------------------------------------------
+# Every ``choose_*`` decision below is deterministic arithmetic today, but
+# serving processes re-derive them on every restart and future measured
+# tuning (ROADMAP) needs somewhere durable to live.  Tuned choices are
+# cached to an on-disk JSON keyed by (function, args, dtype, topology):
+#
+#     REPRO_TUNE_CACHE=<path>   override the cache file location
+#     REPRO_TUNE_CACHE=off      disable persistence (in-memory lru only)
+#
+# Default: ~/.cache/repro/tuning.json.  All I/O is best-effort — an
+# unreadable/unwritable cache silently degrades to the computed value —
+# and writes are atomic (tmp + rename) so concurrent processes never see
+# a torn file.
+
+_TUNE_CACHE_ENV = "REPRO_TUNE_CACHE"
+_DISK_CACHE: Optional[dict] = None   # lazily-loaded {key: value} mirror
+_PERSISTENT_FNS: list = []           # for clear_tune_cache()
+
+
+def tune_cache_path() -> Optional[str]:
+    """Resolved cache file path, or None when persistence is disabled."""
+    p = os.environ.get(_TUNE_CACHE_ENV)
+    if p is not None:
+        return None if p.lower() in ("", "0", "off", "none") else p
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "tuning.json")
+
+
+def _disk_load() -> dict:
+    global _DISK_CACHE
+    if _DISK_CACHE is None:
+        _DISK_CACHE = {}
+        path = tune_cache_path()
+        if path is not None:
+            try:
+                import json
+                with open(path) as f:
+                    data = json.load(f)
+                if isinstance(data, dict):
+                    _DISK_CACHE.update(data)
+            except (OSError, ValueError):
+                pass  # missing/corrupt cache: start fresh
+    return _DISK_CACHE
+
+
+def _disk_store(cache: dict) -> None:
+    path = tune_cache_path()
+    if path is None:
+        return
+    try:
+        import json
+        import tempfile
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   suffix=".tune.tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(cache, f, indent=0, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass  # read-only FS etc.: persistence is best-effort
+
+
+def _decode(v):
+    return tuple(v) if isinstance(v, list) else v
+
+
+def persistent_choice(fn):
+    """lru_cache + on-disk JSON persistence for a ``choose_*`` function.
+
+    Disk keys include the ambient topology (``shard_size()``): choices are
+    deterministic in their arguments today, so entries recorded under
+    different topologies agree — but measured tuning won't, and the key
+    schema is what survives restarts.
+    """
+
+    @functools.lru_cache(maxsize=256)
+    def _lookup(key, args, kwargs):
+        disk = _disk_load()
+        if key in disk:
+            return _decode(disk[key])
+        val = fn(*args, **dict(kwargs))
+        disk[key] = val
+        _disk_store(disk)
+        return val
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        kw = tuple(sorted(kwargs.items()))
+        key = f"{fn.__name__}|{args}|{kw}|p{shard_size()}"
+        return _lookup(key, args, kw)
+
+    wrapper.cache_clear = _lookup.cache_clear
+    wrapper.__wrapped__ = fn
+    _PERSISTENT_FNS.append(wrapper)
+    return wrapper
+
+
+def clear_tune_cache(disk: bool = False) -> None:
+    """Drop the in-memory tuning caches (and the disk file when ``disk``)."""
+    global _DISK_CACHE
+    for fn in _PERSISTENT_FNS:
+        fn.cache_clear()
+    _DISK_CACHE = None
+    if disk:
+        path = tune_cache_path()
+        if path is not None:
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+
+
+@persistent_choice
 def choose_matvec_blocks(m: int, n: int, dtype_name: str = "float32",
                          k: int = 1, budget: int = VMEM_BUDGET):
     """Pick (block_m, block_n) for the tiled GEMV/GEMM kernel.
@@ -144,7 +258,7 @@ def choose_matvec_blocks(m: int, n: int, dtype_name: str = "float32",
     return bm, bn
 
 
-@functools.lru_cache(maxsize=256)
+@persistent_choice
 def choose_spmv_block(n: int, width: int, dtype_name: str = "float32",
                       k: int = 1, halo: int = 0,
                       budget: int = VMEM_BUDGET) -> int:
@@ -191,7 +305,7 @@ def spmv_fits(n: int, width: int, dtype, k: int = 1, halo: int = 0,
     return need <= budget
 
 
-@functools.lru_cache(maxsize=256)
+@persistent_choice
 def choose_banded_block(n: int, nbands: int, dtype_name: str = "float32",
                         halo: int = 0, k: int = 1,
                         budget: int = VMEM_BUDGET) -> int:
@@ -223,7 +337,7 @@ def banded_fits(n: int, nbands: int, dtype, halo: int = 0, k: int = 1,
     return need <= budget
 
 
-@functools.lru_cache(maxsize=256)
+@persistent_choice
 def choose_powers_block(n: int, dtype_name: str = "float32", s: int = 4,
                         budget: int = VMEM_BUDGET) -> int:
     """Square A-tile size for the dense s-step matrix-powers kernel.
@@ -265,7 +379,7 @@ def powers_fits(n: int, dtype, s: int, *, nbands: int | None = None,
     return need <= budget
 
 
-@functools.lru_cache(maxsize=256)
+@persistent_choice
 def choose_block_gs(m1: int, n: int, s: int = 1,
                     dtype_name: str = "float32"):
     """Padded residency plan ``(m1_pad, n_pad, s_pad)`` for the block-GS kernel.
@@ -298,7 +412,7 @@ def block_gs_fits(m1: int, n: int, dtype, s: int = 1,
     return need <= budget
 
 
-@functools.lru_cache(maxsize=256)
+@persistent_choice
 def choose_gs_block(m1: int, n: int, dtype_name: str = "float32",
                     budget: int = VMEM_BUDGET):
     """Pick ``block_n`` for the streaming fused Gram-Schmidt kernel.
@@ -314,7 +428,23 @@ def choose_gs_block(m1: int, n: int, dtype_name: str = "float32",
     return min(best, _round_up(n, LANE))
 
 
-@functools.lru_cache(maxsize=256)
+def gs_payload_fits(m1: int, n: int, dtype, budget: int = VMEM_BUDGET) -> bool:
+    """Can the single-reduce payload/update kernel pair run at (m1, n)?
+
+    The streaming payload kernel tiles V, so the bound is the minimum tile
+    working set — a (m1, LANE) V tile double-buffered, the (LANE, 2) W tile
+    ([z, v_j]) and the (m1 + 1, 2) payload accumulator, all f32-accumulated.
+    This effectively always holds; it exists as the EXPLICIT dispatch gate
+    of the ``gs="cgs2_pipelined"`` scheme so overflow (and tests forcing it)
+    degrade to the psum-safe jnp reference rather than a kernel failure.
+    """
+    del dtype  # accumulation is f32 regardless of storage dtype
+    s = 4
+    need = 2 * m1 * LANE * s + 2 * LANE * s + 2 * (m1 + 1) * s
+    return n > 0 and need <= budget
+
+
+@persistent_choice
 def _choose_fused_block(n: int, dtype_name: str, budget: int):
     best = LANE
     for b in (256, 512):

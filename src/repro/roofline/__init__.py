@@ -1,6 +1,11 @@
 from repro.roofline.analysis import (Roofline, analyze, parse_collectives,
+                                     parse_collectives_by_computation,
+                                     split_computations,
+                                     innermost_loop_collectives,
                                      model_flops_for, PEAK_FLOPS, HBM_BW,
                                      LINK_BW)
 
-__all__ = ["Roofline", "analyze", "parse_collectives", "model_flops_for",
+__all__ = ["Roofline", "analyze", "parse_collectives",
+           "parse_collectives_by_computation", "split_computations",
+           "innermost_loop_collectives", "model_flops_for",
            "PEAK_FLOPS", "HBM_BW", "LINK_BW"]

@@ -78,36 +78,113 @@ class CollectiveOp:
         return self.result_bytes * eff / bw
 
 
-def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+def _match_collective(line: str) -> Optional[tuple]:
+    """(kind, result_bytes, group_size) when the HLO line is a collective."""
+    s = line.strip()
+    m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\d]+)\s+"
+                 r"([\w\-]+)\(", s)
+    if not m:
+        return None
+    result_type, opname = m.group(1), m.group(2)
+    kind = None
+    for c in _COLLECTIVES:
+        if opname == c or opname.startswith(c + "-start") or \
+                opname.startswith(c + "."):
+            kind = c
+            break
+    if kind is None:
+        return None
+    rbytes = _shape_bytes(result_type)
+    gm = _GROUPS_RE.search(s)
+    if gm:
+        gsize = len(gm.group(1).split(","))
+    else:
+        gi = _GROUPS_IOTA_RE.search(s)
+        gsize = int(gi.group(2)) if gi else 2
+    return kind, rbytes, gsize
+
+
+def _collect(lines) -> list[CollectiveOp]:
     ops: dict[tuple, CollectiveOp] = {}
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\d]+)\s+"
-                     r"([\w\-]+)\(", s)
-        if not m:
+    for line in lines:
+        key = _match_collective(line)
+        if key is None:
             continue
-        result_type, opname = m.group(1), m.group(2)
-        kind = None
-        for c in _COLLECTIVES:
-            if opname == c or opname.startswith(c + "-start") or \
-                    opname.startswith(c + "."):
-                kind = c
-                break
-        if kind is None:
-            continue
-        rbytes = _shape_bytes(result_type)
-        gm = _GROUPS_RE.search(s)
-        if gm:
-            gsize = len(gm.group(1).split(","))
-        else:
-            gi = _GROUPS_IOTA_RE.search(s)
-            gsize = int(gi.group(2)) if gi else 2
-        key = (kind, rbytes, gsize)
         if key in ops:
             ops[key].count += 1
         else:
-            ops[key] = CollectiveOp(kind, rbytes, gsize)
+            ops[key] = CollectiveOp(*key)
     return list(ops.values())
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    return _collect(hlo_text.splitlines())
+
+
+def split_computations(hlo_text: str) -> dict[str, str]:
+    """HLO computation name -> body text (computations are flat in HLO text:
+    a ``%name (...) -> ... {`` header at column 0, closed by ``}``)."""
+    comps: dict[str, str] = {}
+    name, body = None, []
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                name, body = m.group(1), []
+                continue
+        if name is not None:
+            if line.startswith("}"):
+                comps[name] = "\n".join(body)
+                name, body = None, []
+            else:
+                body.append(line)
+    return comps
+
+
+def parse_collectives_by_computation(
+        hlo_text: str) -> dict[str, list[CollectiveOp]]:
+    return {name: _collect(body.splitlines())
+            for name, body in split_computations(hlo_text).items()}
+
+
+def innermost_loop_collectives(hlo_text: str):
+    """Collectives of the hot (innermost collective-bearing) while body.
+
+    Whole-program collective counts dilute per-step schedule differences
+    with shared prologue/epilogue work (initial residual, final gather, the
+    per-restart true-residual recompute), so per-STEP claims — like the
+    pipelined scheme's "one psum per Arnoldi step" — must be read off the
+    inner loop body.  HLO while ops name their body computation
+    (``body=%name``); a body's OWN ``body=`` references give the loop
+    nesting (restart cycle -> Arnoldi step -> Givens helper loops).  This
+    picks the deepest-nested body that directly issues collectives (ties
+    broken toward more collectives — the Arnoldi body; deeper helper loops
+    carry none) and returns ``(name, ops)``; ``(None, [])`` when the
+    program has no loop collectives.
+    """
+    comps = split_computations(hlo_text)
+    bodies = set(re.findall(r"body=%?([\w.\-]+)", hlo_text))
+    children = {b: set(re.findall(r"body=%?([\w.\-]+)", comps.get(b, "")))
+                for b in bodies}
+
+    def depth(b, seen=frozenset()):
+        if b in seen:
+            return 0
+        parents = [p for p, cs in children.items() if b in cs]
+        return 1 + max((depth(p, seen | {b}) for p in parents), default=0)
+
+    best = (0, 0)
+    best_name, best_ops = None, []
+    for name in bodies:
+        body = comps.get(name)
+        if body is None:
+            continue
+        ops = _collect(body.splitlines())
+        n = sum(o.count for o in ops)
+        if n and (depth(name), n) > best:
+            best = (depth(name), n)
+            best_name, best_ops = name, ops
+    return best_name, best_ops
 
 
 @dataclasses.dataclass

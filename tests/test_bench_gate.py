@@ -1,0 +1,108 @@
+"""tools/bench_gate.py — the CI perf gate over kernel_bench JSON."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import bench_gate  # noqa: E402
+
+
+def _payload(rows):
+    return {"suite": "kernel_bench", "rows": rows}
+
+
+GOOD_HLO_ROW = {
+    "name": "pipelined_hlo_p4_poisson32x32_m20",
+    "us": 0.0,
+    "loop_coll_ops_split": 4, "loop_coll_ops_pipelined": 2,
+    "loop_psums_split": 3, "loop_psums_pipelined": 1,
+    "restarts_split": 3, "restarts_pipelined": 3,
+    "loop_coll_ratio": 2.0,
+    "derived": "x", "mode": "modeled",
+}
+
+
+def test_clean_run_passes():
+    cur = _payload([
+        {"name": "a", "us": 1.0, "derived": "", "mode": "modeled",
+         "traffic_ratio": 0.4, "hbm_bytes_x": 1, "hbm_bytes_y": 2},
+        dict(GOOD_HLO_ROW),
+    ])
+    base = _payload([
+        {"name": "a", "us": 1.0, "derived": "", "mode": "modeled",
+         "traffic_ratio": 0.4, "hbm_bytes_x": 1, "hbm_bytes_y": 2},
+    ])
+    assert bench_gate.check(cur, base, tol=0.05, min_pipeline_ratio=2.0) == []
+
+
+def test_traffic_ratio_regression_fails():
+    cur = _payload([{"name": "a", "us": 1.0, "derived": "",
+                     "traffic_ratio": 0.5}])
+    base = _payload([{"name": "a", "us": 1.0, "derived": "",
+                      "traffic_ratio": 0.4}])
+    fails = bench_gate.check(cur, base, tol=0.05, min_pipeline_ratio=2.0)
+    assert len(fails) == 1 and "traffic_ratio" in fails[0]
+
+
+def test_traffic_ratio_within_tol_passes():
+    cur = _payload([{"name": "a", "us": 1.0, "derived": "",
+                     "traffic_ratio": 0.41}])
+    base = _payload([{"name": "a", "us": 1.0, "derived": "",
+                      "traffic_ratio": 0.40}])
+    assert bench_gate.check(cur, base, tol=0.05,
+                            min_pipeline_ratio=2.0) == []
+
+
+def test_pipeline_ratio_below_floor_fails():
+    row = dict(GOOD_HLO_ROW, loop_coll_ops_pipelined=3,
+               loop_coll_ratio=4 / 3)
+    fails = bench_gate.check(_payload([row]), None, tol=0.05,
+                             min_pipeline_ratio=2.0)
+    assert any("collective ratio" in f for f in fails)
+
+
+def test_restart_parity_broken_fails():
+    row = dict(GOOD_HLO_ROW, restarts_pipelined=6)
+    fails = bench_gate.check(_payload([row]), None, tol=0.05,
+                             min_pipeline_ratio=2.0)
+    assert any("parity" in f for f in fails)
+
+
+def test_collective_count_growth_vs_baseline_fails():
+    cur = _payload([dict(GOOD_HLO_ROW, loop_coll_ops_pipelined=2)])
+    base = _payload([dict(GOOD_HLO_ROW, loop_coll_ops_pipelined=1)])
+    fails = bench_gate.check(cur, base, tol=0.05, min_pipeline_ratio=2.0)
+    assert any("loop_coll_ops_pipelined" in f for f in fails)
+
+
+def test_psum_schedule_must_stay_single():
+    row = {"name": "pipelined_schedule_m20_n16384", "us": 1.0,
+           "derived": "", "psums_per_step_split": 3,
+           "psums_per_step_pipelined": 2}
+    fails = bench_gate.check(_payload([row]), None, tol=0.05,
+                             min_pipeline_ratio=2.0)
+    assert any("psum once" in f for f in fails)
+
+
+def test_main_exit_codes(tmp_path):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(_payload([dict(GOOD_HLO_ROW)])))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(_payload(
+        [dict(GOOD_HLO_ROW, restarts_pipelined=9)])))
+    missing_base = str(tmp_path / "nope.json")
+    assert bench_gate.main([str(good), "--baseline", missing_base]) == 0
+    assert bench_gate.main([str(bad), "--baseline", missing_base]) == 1
+
+
+def test_smoke_subset_skips_unmatched_rows():
+    """Smoke rows use smaller cases; names absent from baseline are only
+    checked against absolute invariants, not diffed."""
+    cur = _payload([{"name": "only_in_smoke", "us": 1.0, "derived": "",
+                     "traffic_ratio": 0.9}])
+    base = _payload([{"name": "full_run_row", "us": 1.0, "derived": "",
+                      "traffic_ratio": 0.1}])
+    assert bench_gate.check(cur, base, tol=0.05,
+                            min_pipeline_ratio=2.0) == []

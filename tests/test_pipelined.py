@@ -1,0 +1,325 @@
+"""Pipelined single-reduce GMRES: one fused psum per Arnoldi step.
+
+Four contracts:
+
+  1. parity: ``gs="cgs2_pipelined"`` matches the split-phase/fused CGS2
+     solvers on dense / banded / ELL operators, locally and under
+     ``gmres_sharded`` (including 4 REAL fake devices in a subprocess);
+  2. stability: the delayed-reorthogonalization basis stays as orthogonal
+     as CGS2 promises (bounded by MGS loss, not merely finite), and the
+     scheme is scale-invariant at c in {1e-6, 1e6} (PR 3 contract);
+  3. dispatch: the payload kernel engages under the standard policy, and
+     a forced VMEM-overflow verdict degrades to the psum-safe jnp
+     reference with the same answer;
+  4. the s-step single-reduce block pass (one stacked psum per GS pass)
+     matches the split-phase s-step solver and rejects unknown schemes.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import make_mesh
+from repro.core import (arnoldi, gmres, gmres_sharded, gmres_sstep,
+                        gmres_sstep_sharded, operators, stencils)
+from repro.kernels import tuning
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SHARDS = [p for p in (1, 2, 4) if p <= jax.device_count()]
+
+
+def _mesh(p):
+    return make_mesh((p,), ("rows",))
+
+
+def _system(fmt, nx, key):
+    n = nx * nx
+    if fmt == "dense":
+        a = operators.random_diagdom(jax.random.PRNGKey(key), n)
+        op = operators.DenseOperator(a, backend="pallas")
+    elif fmt == "banded":
+        op = stencils.poisson_2d(nx, nx, backend="pallas")
+    elif fmt == "ell":
+        op = stencils.poisson_2d(nx, nx, backend="pallas").to_ell()
+    else:
+        raise ValueError(fmt)
+    b = jax.random.normal(jax.random.PRNGKey(key + 1), (n,))
+    return op, b
+
+
+def _rel_err(x, ref):
+    return (float(jnp.linalg.norm(x - ref))
+            / max(float(jnp.linalg.norm(ref)), 1e-30))
+
+
+# --------------------------------------------------------------------------
+# 1. parity vs the established CGS2 solvers
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", ["dense", "banded", "ell"])
+def test_pipelined_matches_cgs2_fused(fmt):
+    op, b = _system(fmt, 8, key=0)
+    ref = gmres(op, b, m=16, tol=1e-5, max_restarts=100, gs="cgs2_fused")
+    pipe = gmres(op, b, m=16, tol=1e-5, max_restarts=100,
+                 gs="cgs2_pipelined")
+    assert bool(pipe.converged)
+    a_dense = op.a if fmt == "dense" else op.todense()
+    rel = (float(jnp.linalg.norm(a_dense @ pipe.x - b))
+           / float(jnp.linalg.norm(b)))
+    assert rel < 5e-5, rel
+    assert _rel_err(pipe.x, ref.x) < 2e-3
+    # residual parity: the schemes may stop +-1 restart apart, no worse
+    assert abs(int(pipe.restarts) - int(ref.restarts)) <= 1
+
+
+@pytest.mark.parametrize("p", SHARDS)
+def test_pipelined_sharded_matches_single(p):
+    op, b = _system("banded", 8, key=2)
+    ref = gmres(op, b, m=16, tol=1e-5, max_restarts=100, gs="cgs2")
+    pipe = gmres_sharded(_mesh(p), "rows", op, b, m=16, tol=1e-5,
+                         max_restarts=100, gs="cgs2_pipelined")
+    assert bool(pipe.converged)
+    assert _rel_err(pipe.x, ref.x) < 2e-3
+
+
+def test_pipelined_batched_degrades_to_cgs2():
+    """gmres_batched has no whole-cycle pipelining; the scheme fallback
+    must quietly run cgs2 rather than crash."""
+    from repro.core.gmres import gmres_batched
+
+    n = 64
+    a = operators.random_diagdom(jax.random.PRNGKey(0), n)
+    bb = jax.random.normal(jax.random.PRNGKey(1), (3, n))
+    res = gmres_batched(a, bb, m=12, tol=1e-5, max_restarts=50,
+                        gs="cgs2_pipelined")
+    assert bool(res.converged.all())
+
+
+# --------------------------------------------------------------------------
+# 2. stability: orthogonality loss + scale invariance
+# --------------------------------------------------------------------------
+def _pipelined_basis(a, b, m):
+    """Drive the single-reduce recurrence directly; return the basis."""
+    n = b.shape[0]
+    v = jnp.zeros((m + 1, n))
+    v = v.at[0].set(b / jnp.linalg.norm(b))
+    gram = jnp.eye(m + 1)
+    hraw = jnp.zeros((m + 1, m))
+    z = a @ v[0]
+    for j in range(m):
+        payload = arnoldi.sr_payload_ref(v, z, j)
+        h_tot, s_norm, _, gram = arnoldi.sr_recover(payload, gram, j)
+        u = a @ z
+        w2 = z - h_tot @ v
+        v = v.at[j + 1].set(w2 / s_norm)
+        lt = (jnp.arange(m) < j).astype(z.dtype)
+        c_vec = hraw @ (h_tot[:m] * lt)
+        z = (u - c_vec @ v - h_tot[j] * z) / s_norm
+        hraw = hraw.at[:, j].set(h_tot.at[j + 1].set(s_norm))
+    return v
+
+
+def _mgs_basis(a, b, m):
+    n = b.shape[0]
+    v = jnp.zeros((m + 1, n))
+    v = v.at[0].set(b / jnp.linalg.norm(b))
+    for j in range(m):
+        w = a @ v[j]
+        for i in range(j + 1):
+            w = w - jnp.vdot(v[i], w) * v[i]
+        v = v.at[j + 1].set(w / jnp.linalg.norm(w))
+    return v
+
+
+def test_pipelined_orthogonality_loss_bounded_vs_mgs():
+    """CGS2-class orthogonality: ||I - V V^T|| stays within a small factor
+    of the MGS loss (MGS loses O(eps * kappa); CGS2 O(eps))."""
+    n, m = 96, 20
+    a = operators.random_diagdom(jax.random.PRNGKey(5), n, dominance=1.5)
+    b = jax.random.normal(jax.random.PRNGKey(6), (n,))
+    vp = _pipelined_basis(a, b, m)
+    vm = _mgs_basis(a, b, m)
+    eye = jnp.eye(m + 1)
+    loss_pipe = float(jnp.linalg.norm(eye - vp @ vp.T))
+    loss_mgs = float(jnp.linalg.norm(eye - vm @ vm.T))
+    eps = float(jnp.finfo(jnp.float32).eps)
+    assert loss_pipe <= max(10.0 * loss_mgs, 100 * eps * (m + 1)), \
+        (loss_pipe, loss_mgs)
+
+
+@pytest.mark.parametrize("c", [1e-6, 1e6])
+def test_pipelined_scale_invariant(c):
+    """The scale-relative guards must survive extreme system scales."""
+    n = 100
+    a = operators.random_diagdom(jax.random.PRNGKey(7), n)
+    b = jax.random.normal(jax.random.PRNGKey(8), (n,))
+    ref = gmres(a, b, m=16, tol=1e-5, max_restarts=100, gs="cgs2_pipelined")
+    scaled = gmres(a * c, b * c, m=16, tol=1e-5, max_restarts=100,
+                   gs="cgs2_pipelined")
+    assert bool(jnp.isfinite(scaled.x).all()), f"non-finite x at c={c}"
+    assert bool(scaled.converged)
+    assert _rel_err(scaled.x, ref.x) < 1e-3
+    assert int(scaled.restarts) == int(ref.restarts)
+
+
+# --------------------------------------------------------------------------
+# 3. dispatch: kernel engages; forced overflow degrades safely
+# --------------------------------------------------------------------------
+def _spy(monkeypatch, mod, name, calls):
+    orig = getattr(mod, name)
+
+    def wrapper(*args, **kw):
+        calls[name] = calls.get(name, 0) + 1
+        return orig(*args, **kw)
+
+    monkeypatch.setattr(mod, name, wrapper)
+
+
+def test_pipelined_dispatch_hits_payload_kernel(monkeypatch):
+    import repro.kernels.cgs2 as cgs2_mod
+
+    calls = {}
+    _spy(monkeypatch, cgs2_mod, "gs_project_norm_partial", calls)
+    _spy(monkeypatch, cgs2_mod, "gs_update", calls)
+    op, b = _system("dense", 8, key=10)
+    res = gmres(op, b, m=12, tol=1e-5, max_restarts=100,
+                gs="cgs2_pipelined")
+    assert bool(res.converged)
+    assert calls.get("gs_project_norm_partial", 0) > 0, \
+        "fused payload kernel never engaged"
+    assert calls.get("gs_update", 0) > 0, "update kernel never engaged"
+
+
+def test_pipelined_forced_overflow_falls_back(monkeypatch):
+    """gs_payload_fits forced False: the jnp reference must carry the solve
+    with the same answer, and the payload kernel must never run."""
+    op, b = _system("dense", 8, key=12)
+    res_kernel = gmres(op, b, m=12, tol=1e-5, max_restarts=100,
+                       gs="cgs2_pipelined")
+
+    import repro.kernels.cgs2 as cgs2_mod
+
+    def boom(*a, **k):
+        raise AssertionError("payload kernel ran despite forced overflow")
+
+    monkeypatch.setattr(tuning, "gs_payload_fits", lambda *a, **k: False)
+    monkeypatch.setattr(cgs2_mod, "gs_project_norm_partial", boom)
+    res_ref = gmres(op, b, m=12, tol=1e-5, max_restarts=100,
+                    gs="cgs2_pipelined")
+    assert bool(res_ref.converged)
+    np.testing.assert_allclose(np.asarray(res_ref.x),
+                               np.asarray(res_kernel.x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_step_rejects_pipelined_scheme():
+    """arnoldi.step is a per-step API; the whole-cycle scheme must raise."""
+    with pytest.raises(ValueError, match="cgs2_pipelined"):
+        arnoldi.step("cgs2_pipelined")
+
+
+# --------------------------------------------------------------------------
+# 4. s-step single-reduce block pass
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", ["dense", "banded"])
+def test_sstep_single_reduce_matches_split(fmt):
+    op, b = _system(fmt, 8, key=14)
+    ref = gmres_sstep(op, b, s=4, blocks=4, tol=1e-5, max_restarts=60,
+                      gs="cgs2")
+    sr = gmres_sstep(op, b, s=4, blocks=4, tol=1e-5, max_restarts=60,
+                     gs="cgs2_pipelined")
+    assert bool(sr.converged)
+    assert _rel_err(sr.x, ref.x) < 2e-3
+    assert abs(int(sr.restarts) - int(ref.restarts)) <= 1
+
+
+@pytest.mark.parametrize("p", SHARDS)
+def test_sstep_single_reduce_sharded(p):
+    op, b = _system("banded", 10, key=16)
+    ref = gmres_sstep(op, b, s=4, blocks=5, tol=1e-5, max_restarts=60)
+    sr = gmres_sstep_sharded(_mesh(p), "rows", op, b, s=4, blocks=5,
+                             tol=1e-5, max_restarts=60, gs="cgs2_pipelined")
+    assert bool(sr.converged)
+    assert _rel_err(sr.x, ref.x) < 2e-3
+
+
+def test_sstep_single_reduce_dispatch(monkeypatch):
+    import repro.kernels.block_gs as bg_mod
+
+    calls = {}
+    _spy(monkeypatch, bg_mod, "block_gs_pass_single_reduce", calls)
+    op, b = _system("banded", 8, key=18)
+    res = gmres_sstep(op, b, s=2, blocks=4, tol=1e-5, max_restarts=40,
+                      gs="cgs2_pipelined")
+    assert bool(res.converged)
+    assert calls.get("block_gs_pass_single_reduce", 0) > 0, \
+        "single-reduce block pass never engaged"
+
+
+def test_sstep_rejects_unknown_gs():
+    op, b = _system("banded", 8, key=19)
+    with pytest.raises(ValueError, match="unknown gs"):
+        gmres_sstep(op, b, s=2, blocks=2, gs="mgs")
+
+
+# --------------------------------------------------------------------------
+# multi-shard for real: 4 fake host devices in a subprocess
+# --------------------------------------------------------------------------
+def test_pipelined_parity_4dev_subprocess():
+    code = textwrap.dedent("""
+        import json, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
+        from repro.core import (gmres, gmres_sharded, gmres_sstep,
+                                gmres_sstep_sharded, operators, stencils)
+        mesh = make_mesh((4,), ('rows',))
+        out = {}
+        b = jax.random.normal(jax.random.PRNGKey(1), (144,))
+        banded = stencils.poisson_2d(12, 12, backend='pallas')
+        cases = {
+            'dense': operators.DenseOperator(
+                operators.random_diagdom(jax.random.PRNGKey(0), 144),
+                backend='pallas'),
+            'banded': banded,
+            'ell': banded.to_ell(),
+        }
+        for fmt, op in cases.items():
+            ref = gmres(op, b, m=16, tol=1e-5, max_restarts=150)
+            sh = gmres_sharded(mesh, 'rows', op, b, m=16, tol=1e-5,
+                               max_restarts=150, gs='cgs2_pipelined')
+            out[fmt] = {
+                'conv': bool(sh.converged),
+                'restarts_ref': int(ref.restarts),
+                'restarts_pipe': int(sh.restarts),
+                'err': float(jnp.linalg.norm(sh.x - ref.x)
+                             / jnp.linalg.norm(ref.x)),
+            }
+        ref = gmres_sstep(banded, b, s=4, blocks=5, tol=1e-5,
+                          max_restarts=60)
+        sh = gmres_sstep_sharded(mesh, 'rows', banded, b, s=4, blocks=5,
+                                 tol=1e-5, max_restarts=60,
+                                 gs='cgs2_pipelined')
+        out['sstep_banded'] = {
+            'conv': bool(sh.converged),
+            'restarts_ref': int(ref.restarts),
+            'restarts_pipe': int(sh.restarts),
+            'err': float(jnp.linalg.norm(sh.x - ref.x)
+                         / jnp.linalg.norm(ref.x)),
+        }
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-3000:]
+    out = json.loads(res.stdout.strip().splitlines()[-1])
+    for fmt, r in out.items():
+        assert r["conv"], (fmt, r)
+        assert r["err"] < 2e-3, (fmt, r)

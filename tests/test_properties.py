@@ -200,3 +200,30 @@ def test_gmres_scale_invariance(seed, scale):
     r2 = gmres(a * scale, b * scale, m=16, tol=1e-5)
     np.testing.assert_allclose(np.asarray(r1.x), np.asarray(r2.x),
                                rtol=5e-3, atol=5e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), nx=st.sampled_from([6, 8, 10]),
+       fmt=st.sampled_from(["dense", "banded"]),
+       m=st.sampled_from([8, 16]))
+def test_pipelined_solve_matches_cgs2(seed, nx, fmt, m):
+    """gs='cgs2_pipelined' (single-reduce, depth-1 pipelined) solves any
+    system the split-phase CGS2 solver does, to the same solution, with
+    restart counts within +-1 (the residual-parity contract)."""
+    n = nx * nx
+    if fmt == "dense":
+        from repro.core.operators import DenseOperator
+        op = DenseOperator(random_diagdom(jax.random.PRNGKey(seed), n),
+                           backend="pallas")
+    else:
+        op = stencils.poisson_2d(nx, nx, backend="pallas")
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (n,))
+    ref = gmres(op, b, m=m, tol=1e-5, max_restarts=150, gs="cgs2")
+    pipe = gmres(op, b, m=m, tol=1e-5, max_restarts=150,
+                 gs="cgs2_pipelined")
+    assert bool(pipe.converged) == bool(ref.converged)
+    if bool(ref.converged):
+        err = (float(jnp.linalg.norm(pipe.x - ref.x))
+               / max(float(jnp.linalg.norm(ref.x)), 1e-30))
+        assert err < 2e-3, err
+        assert abs(int(pipe.restarts) - int(ref.restarts)) <= 1

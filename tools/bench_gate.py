@@ -1,0 +1,119 @@
+"""CI perf gate over kernel_bench output.
+
+Diffs a freshly produced kernel_bench JSON (``--smoke`` in CI, the full
+suite locally) against the committed ``BENCH_kernels.json`` baseline and
+fails on perf-model regressions:
+
+  1. modeled HBM traffic_ratio regressions — the structural ratios are
+     deterministic functions of (shape, schedule), so any drift beyond
+     ``--tol`` means a kernel's traffic model got worse (or someone edited
+     the model without re-baselining);
+  2. collective-schedule regressions — per-step psum counts and the
+     pipelined inner-loop collective counts must not grow vs baseline;
+  3. absolute invariants on the pipelined rows, baseline or not: the
+     innermost-loop collective count of the single-reduce pipelined scheme
+     must stay >= --min-pipeline-ratio below the split-phase path, at
+     residual parity (restarts within +/-1).
+
+Rows are matched by name; rows present only on one side are skipped for
+diff checks (the smoke subset uses smaller cases than the full run) but
+absolute invariants (rule 3) apply to every row that carries the fields.
+
+Exit 0 clean, 1 on any violation (each printed as ``GATE FAIL: ...``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rows_by_name(payload):
+    return {r["name"]: r for r in payload.get("rows", [])}
+
+
+def check(current: dict, baseline: dict | None, *, tol: float,
+          min_pipeline_ratio: float) -> list[str]:
+    fails = []
+    cur = _rows_by_name(current)
+    base = _rows_by_name(baseline) if baseline else {}
+
+    for name, r in cur.items():
+        b = base.get(name)
+        if b is not None:
+            # 1. modeled traffic ratios are deterministic: drift = regression
+            if "traffic_ratio" in r and "traffic_ratio" in b:
+                if r["traffic_ratio"] > b["traffic_ratio"] * (1 + tol):
+                    fails.append(
+                        f"{name}: traffic_ratio {r['traffic_ratio']:.4f} > "
+                        f"baseline {b['traffic_ratio']:.4f} (tol {tol:.0%})")
+            # 2. collective schedules must not grow
+            for key in ("psums_per_step_pipelined", "loop_coll_ops_pipelined",
+                        "loop_psums_pipelined"):
+                if key in r and key in b and r[key] > b[key]:
+                    fails.append(f"{name}: {key} {r[key]} > baseline {b[key]}")
+
+        # 3. absolute invariants — the PR's acceptance metric
+        if "loop_coll_ratio" in r:
+            if r["loop_coll_ratio"] < min_pipeline_ratio:
+                fails.append(
+                    f"{name}: loop collective ratio "
+                    f"{r['loop_coll_ratio']:.2f}x < required "
+                    f"{min_pipeline_ratio:.1f}x "
+                    f"(split {r['loop_coll_ops_split']} vs pipelined "
+                    f"{r['loop_coll_ops_pipelined']})")
+            if abs(r["restarts_split"] - r["restarts_pipelined"]) > 1:
+                fails.append(
+                    f"{name}: residual parity broken — restarts "
+                    f"{r['restarts_split']} (split) vs "
+                    f"{r['restarts_pipelined']} (pipelined), must be +/-1")
+        if "psums_per_step_pipelined" in r:
+            if r["psums_per_step_pipelined"] != 1:
+                fails.append(f"{name}: single-reduce scheme must psum once "
+                             f"per step, row says "
+                             f"{r['psums_per_step_pipelined']}")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh kernel_bench JSON to gate")
+    ap.add_argument("--baseline",
+                    default=os.path.join(REPO, "BENCH_kernels.json"),
+                    help="committed baseline (default: repo "
+                         "BENCH_kernels.json)")
+    ap.add_argument("--tol", type=float, default=0.05,
+                    help="relative slack on modeled traffic ratios")
+    ap.add_argument("--min-pipeline-ratio", type=float, default=2.0,
+                    help="required split/pipelined inner-loop collective "
+                         "ratio")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    baseline = None
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    else:
+        print(f"# no baseline at {args.baseline}; absolute checks only")
+
+    fails = check(current, baseline, tol=args.tol,
+                  min_pipeline_ratio=args.min_pipeline_ratio)
+    n = len(current.get("rows", []))
+    nb = len(baseline.get("rows", [])) if baseline else 0
+    matched = len(set(_rows_by_name(current)) & set(_rows_by_name(baseline))
+                  if baseline else ())
+    print(f"# bench_gate: {n} rows vs {nb} baseline ({matched} matched)")
+    for msg in fails:
+        print(f"GATE FAIL: {msg}")
+    if not fails:
+        print("# bench_gate: clean")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
