@@ -706,6 +706,87 @@ def attention_rows(cases=((1, 8, 8, 1024, 128), (1, 8, 2, 2048, 128))):
     return rows
 
 
+def solver_serve_rows(cases=((160, 8, 10, 32), (160, 4, 10, 16),
+                             (64, 4, 8, 8))):
+    """Continuous-batching server rows: the lanes x early-retirement claim.
+
+    Each case serves ``nreq`` heterogeneous solves (mixed tolerances,
+    tightest submitted first — longest-processing-time packing) of one
+    convection-diffusion system through ``repro.serve.SolverServer`` and
+    counts actual lockstep cycles (``cycles_packed``) against two
+    baselines derived from the SAME run's per-request restart counts:
+
+      cycles_sequential   sum_i restarts_i — one solve at a time,
+      cycles_ideal        max(ceil(sum_i restarts_i / k), max_i
+                          restarts_i) — the lanes x early-retirement
+                          model's floor (perfect packing, no tail).
+
+    The acceptance contract (tools/bench_gate.py): packed completes in
+    fewer cycles than sequential AND within 1.1x of ideal.  The HBM
+    story is the same ratio in bytes: every cycle streams A once per
+    Arnoldi step for ALL resident lanes, so packed A-traffic is
+    cycles_packed/cycles_sequential of the one-lane-at-a-time stream.
+
+    Under the default (modeled) mode the server runs the pure-jnp ref
+    dispatch — these rows measure SCHEDULING, not kernels; ``--measure``
+    lets the handle's normal dispatch pick interpret/compiled cycles.
+    """
+    import math
+
+    from repro.core import operators
+    from repro.serve import SolverServer
+
+    forced = os.environ.get("REPRO_KERNELS")
+    if MODE == "modeled":
+        os.environ["REPRO_KERNELS"] = "ref"
+    try:
+        rows = []
+        for n, k, m, nreq in cases:
+            op = operators.DenseOperator(
+                operators.convection_diffusion(n, beta=0.4))
+            rng = np.random.default_rng(0)
+            tols = [1e-5, 1e-4, 1e-3, 1e-2]
+            work = sorted(tols[i % len(tols)] for i in range(nreq))
+            srv = SolverServer(op, m=m, k=k, max_pending=2 * nreq)
+            t0 = time.perf_counter()
+            rids = [srv.submit(rng.standard_normal(n), tol=t,
+                               max_restarts=100) for t in work]
+            packed = srv.run()
+            wall = time.perf_counter() - t0
+            outs = [srv.results[r] for r in rids]
+            assert all(o.status == "done" for o in outs), \
+                f"serve bench solve failed: {[o.status for o in outs]}"
+            restarts = [o.restarts for o in outs]
+            seq = sum(restarts)
+            ideal = max(math.ceil(seq / k), max(restarts))
+            met = srv.metrics()
+            a_step = 4 * n * n                   # one A stream per step
+            rows.append({
+                "name": f"solver_serve_n{n}_k{k}_req{nreq}",
+                "us": wall * 1e6 / nreq,
+                "cycles_packed": packed,
+                "cycles_sequential": seq,
+                "cycles_ideal": ideal,
+                "hbm_bytes_packed_A": packed * m * a_step,
+                "hbm_bytes_sequential_A": seq * m * a_step,
+                "traffic_ratio": packed / seq,
+                "derived": (f"packed/sequential_cycles={packed / seq:.3f} "
+                            f"packed/ideal={packed / ideal:.3f} "
+                            f"occupancy={met['occupancy']:.2f} "
+                            f"retired_done={met['retired_done']} "
+                            f"retired_failed={met['retired_failed']} "
+                            f"retirement_rate={met['retirement_rate']:.2f} "
+                            f"handle_lru_misses="
+                            f"{met['handle_cache']['misses']}"),
+            })
+        return _tag(rows)
+    finally:
+        if forced is None:
+            os.environ.pop("REPRO_KERNELS", None)
+        else:
+            os.environ["REPRO_KERNELS"] = forced
+
+
 def _validate_rows(rows):
     """Schema guard (what the CI smoke run asserts): every row carries the
     universal keys, names are unique, traffic rows have both byte counts,
@@ -743,12 +824,14 @@ def main(json_path: str = "BENCH_kernels.json", smoke: bool = False,
                 + pipelined_rows(cases=((10, 4096),), hlo_case=(16, 8))
                 + precision_restart_rows(grids=((16, 16),), dense_ns=(),
                                          tol=1e-3)
+                + solver_serve_rows(cases=((64, 4, 8, 8),))
                 + attention_rows(cases=((1, 2, 2, 256, 64),)))
     else:
         rows = (matvec_rows() + gs_rows() + fused_step_rows()
                 + block_matvec_rows() + spmv_rows() + sstep_powers_rows()
                 + block_gs_rows() + sharded_rows() + pipelined_rows()
-                + precision_restart_rows() + attention_rows())
+                + precision_restart_rows() + solver_serve_rows()
+                + attention_rows())
     for r in rows:
         r.setdefault("mode", MODE)
     _validate_rows(rows)

@@ -96,7 +96,8 @@ def _run_sharded(mesh: Mesh, axis: str, op, b, x0, caller: str, body):
             return res._replace(x=x_full)
 
     out_specs = GmresResult(
-        x=P(), residual=P(), restarts=P(), converged=P(), inner_steps=P()
+        x=P(), residual=P(), restarts=P(), converged=P(), inner_steps=P(),
+        done=P(),
     )
     fn = compat.shard_map(
         solve_local,

@@ -51,6 +51,11 @@ class GmresResult(NamedTuple):
     restarts: jax.Array      # number of restart cycles executed
     converged: jax.Array     # bool
     inner_steps: jax.Array   # total Arnoldi steps actually active
+    # converged OR restart budget exhausted.  Scalar for ``gmres``; per-lane
+    # for ``gmres_batched``, where a True/False split reads as
+    # retired-converged vs retired-FAILED — the distinction the serving
+    # layer (repro/serve) keys lane retirement on.
+    done: jax.Array = None
 
 
 class _CycleState(NamedTuple):
@@ -417,8 +422,10 @@ def gmres(
     x, r, beta, k, steps = lax.while_loop(
         cond, body, (x0, r0, beta0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
     )
+    converged = beta <= tol_abs
     return GmresResult(
-        x=x, residual=beta, restarts=k, converged=beta <= tol_abs, inner_steps=steps
+        x=x, residual=beta, restarts=k, converged=converged, inner_steps=steps,
+        done=converged | (k >= max_restarts),
     )
 
 
@@ -529,8 +536,73 @@ def _block_cycle(blockmv, vprecond, batched_gs, x0, r0, beta, m, tol_abs,
     return x, steps
 
 
-def gmres_batched(a, b: jax.Array, *, m: int = 30, tol: float = 1e-5,
-                  max_restarts: int = 50, gs: str = "cgs2",
+def _block_matvec(op) -> Callable:
+    """(k, n) -> (k, n) block mat-vec: ONE matrix stream for all k lanes.
+
+    Explicit-storage operators accept an (n, k) operand natively, so the
+    k current Krylov vectors hit the matrix as a single GEMM / block SpMV;
+    matrix-free operators vmap (nothing to share).
+    """
+    if isinstance(op, EXPLICIT_OPERATORS):
+        return lambda xs: op(xs.T).T
+    return jax.vmap(op)
+
+
+def gmres_batched_cycle(a, b: jax.Array, x: jax.Array, *, m: int = 30,
+                        tol_abs=None, active=None, gs: str = "cgs2",
+                        precond: Optional[Callable] = None,
+                        compute_dtype=None):
+    """ONE lockstep restart cycle over k lanes — the serving primitive.
+
+    ``gmres_batched`` drives this same block cycle inside a while_loop
+    until every lane is done; the solver server (``repro/serve``) instead
+    calls it once per scheduler tick so converged lanes can be RETIRED at
+    the restart boundary and refilled with queued requests — the
+    decode-loop trick applied to Krylov lanes.  Lane contents are
+    mathematically independent (the only shared operand is the one A
+    stream of the block mat-vec), so a refilled lane's trajectory is
+    exactly a standalone ``gmres`` solve of its system.
+
+    Args:
+      a: shared operator (anything ``gmres`` accepts).
+      b: (k, n) per-lane right-hand sides (retired lanes may carry zeros).
+      x: (k, n) current iterates (fresh lanes start at zero).
+      m: restart length (static — part of the compiled cycle's identity).
+      tol_abs: (k,) ABSOLUTE per-lane residual targets (callers own the
+        tol * ||b|| scaling; zeros default, i.e. never converged).
+      active: (k,) bool lane mask; inactive lanes pass through untouched
+        and contribute only masked no-op arithmetic to the block GEMM.
+      gs / precond / compute_dtype: as in ``gmres_batched``.
+
+    Returns ``(x', beta', inner_steps)``: updated iterates, the TRUE
+    per-lane residual norms ``||b - A x'||`` recomputed after the cycle
+    (also fresh for just-refilled lanes — this is what retirement
+    decisions read), and the per-lane Arnoldi steps taken.
+    """
+    op = as_operator(a)
+    if precond is None:
+        precond = lambda v: v
+    vprecond = jax.vmap(precond)
+    basis_dtype = b.dtype if compute_dtype is None else compute_dtype
+    batched_gs = _make_batched_gs(gs, m, b.shape[1], basis_dtype)
+    blockmv = _block_matvec(op)
+    if tol_abs is None:
+        tol_abs = jnp.zeros(b.shape[:1], b.dtype)
+    if active is None:
+        active = jnp.ones(b.shape[:1], bool)
+
+    r = b - blockmv(x)
+    beta = jnp.linalg.norm(r, axis=1)
+    act = active & (beta > tol_abs)
+    x2, inner = _block_cycle(blockmv, vprecond, batched_gs, x, r, beta,
+                             m, tol_abs, act, basis_dtype)
+    x = jnp.where(act[:, None], x2, x)
+    beta = jnp.linalg.norm(b - blockmv(x), axis=1)
+    return x, beta, inner
+
+
+def gmres_batched(a, b: jax.Array, *, m: int = 30, tol=1e-5,
+                  max_restarts=50, gs: str = "cgs2",
                   precond: Optional[Callable] = None,
                   compute_dtype=None) -> GmresResult:
     """Batch of right-hand sides, shape (batch, n), shared A — solved BLOCKED.
@@ -557,6 +629,16 @@ def gmres_batched(a, b: jax.Array, *, m: int = 30, tol: float = 1e-5,
     ``BandedOperator``) rides the block path: their ``__call__`` accepts an
     (n, k) operand natively, so one stream of the matrix (dense tiles, ELL
     values/cols, or stencil bands) feeds all k lanes.
+
+    PER-LANE stopping: ``tol`` and ``max_restarts`` may be scalars (every
+    lane alike) or (batch,)-shaped arrays — heterogeneous solves packed
+    into one block.  Each lane latches its own convergence against its own
+    ``tol * ||b_lane||`` target and its own restart budget; a lane that
+    exhausts its budget is retired as FAILED (``done`` True, ``converged``
+    False) WITHOUT stalling the cohort — the remaining lanes keep cycling
+    and the failed lane rides along as masked no-ops.  The serving layer
+    (``repro/serve``) goes one step further and swaps retired lanes for
+    queued requests between cycles via ``gmres_batched_cycle``.
     """
     op = as_operator(a)
     if precond is None:
@@ -564,14 +646,13 @@ def gmres_batched(a, b: jax.Array, *, m: int = 30, tol: float = 1e-5,
     vprecond = jax.vmap(precond)
     basis_dtype = b.dtype if compute_dtype is None else compute_dtype
     batched_gs = _make_batched_gs(gs, m, b.shape[1], basis_dtype)
-
-    if isinstance(op, EXPLICIT_OPERATORS):
-        blockmv = lambda xs: op(xs.T).T    # (k, n) -> ONE (n, k) block SpMV/GEMM
-    else:
-        blockmv = jax.vmap(op)
+    blockmv = _block_matvec(op)
 
     bnorm = jnp.linalg.norm(b, axis=1)
-    tol_abs = jnp.maximum(tol * bnorm, jnp.asarray(0.0, b.dtype))
+    # tol / max_restarts broadcast: scalar or per-lane (batch,) arrays.
+    tol_abs = jnp.maximum(jnp.asarray(tol, b.dtype) * bnorm,
+                          jnp.asarray(0.0, b.dtype))
+    max_restarts = jnp.asarray(max_restarts, jnp.int32)
 
     def resid_of(x):
         r = b - blockmv(x)
@@ -597,8 +678,10 @@ def gmres_batched(a, b: jax.Array, *, m: int = 30, tol: float = 1e-5,
     x, r, beta, kk, steps = lax.while_loop(
         cond, body, (x0, r0, beta0, k0, jnp.zeros(b.shape[:1], jnp.int32))
     )
-    return GmresResult(x=x, residual=beta, restarts=kk,
-                       converged=beta <= tol_abs, inner_steps=steps)
+    converged = beta <= tol_abs
+    return GmresResult(x=x, residual=beta, restarts=kk, converged=converged,
+                       inner_steps=steps,
+                       done=converged | (kk >= max_restarts))
 
 
 @functools.partial(jax.jit,

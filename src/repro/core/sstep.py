@@ -403,5 +403,7 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
     beta0 = arnoldi.norm(b - matvec(x0), axis_name)
     x, beta, it = lax.while_loop(
         cond, body, (x0, beta0, jnp.zeros((), jnp.int32)))
-    return GmresResult(x=x, residual=beta, restarts=it,
-                       converged=beta <= tol_abs, inner_steps=it * m)
+    converged = beta <= tol_abs
+    return GmresResult(x=x, residual=beta, restarts=it, converged=converged,
+                       inner_steps=it * m,
+                       done=converged | (it >= max_restarts))

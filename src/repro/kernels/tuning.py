@@ -214,6 +214,57 @@ def persistent_choice(fn):
     return wrapper
 
 
+class LruCache:
+    """Bounded LRU with hit/miss/eviction counters.
+
+    ``persistent_choice`` above persists tile CHOICES (cheap arithmetic,
+    keyed for restarts); this holds things that cannot go to disk —
+    pre-lowered solver handles, jitted callables — and therefore needs an
+    eviction bound and observable stats (the serve layer reports them as
+    ``solver_serve_*`` metrics).  Not thread-safe by design: the serving
+    scheduler is a single tick loop, and dict/OrderedDict mutation under
+    the GIL covers the host-ingress read path.
+    """
+
+    def __init__(self, maxsize: int = 8):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        from collections import OrderedDict
+        self.maxsize = int(maxsize)
+        self._d = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+    def get_or_create(self, key, factory):
+        """Return the cached value, building (and possibly evicting) on miss."""
+        if key in self._d:
+            self.hits += 1
+            self._d.move_to_end(key)
+            return self._d[key]
+        self.misses += 1
+        val = factory()
+        self._d[key] = val
+        if len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+            self.evictions += 1
+        return val
+
+    def stats(self) -> dict:
+        return {"size": len(self._d), "maxsize": self.maxsize,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+    def clear(self) -> None:
+        self._d.clear()
+
+
 def clear_tune_cache(disk: bool = False) -> None:
     """Drop the in-memory tuning caches (and the disk file when ``disk``)."""
     global _DISK_CACHE

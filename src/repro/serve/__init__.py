@@ -1,0 +1,24 @@
+"""GMRES-as-a-service: continuous batching over the block solver's lanes.
+
+``gmres_batched`` runs k right-hand sides in lockstep off ONE A stream;
+this package turns that engine into a server: a backpressured request
+queue, a pure tick-driven scheduler that packs heterogeneous (b, tol,
+budget) solves into lanes and retires/refills them at restart
+boundaries, and an LRU of pre-lowered solver handles so admission never
+compiles.  See docs/serving.md for the state machine.
+"""
+from repro.serve.handles import (HandleCache, HandleKey, SolverHandle,
+                                 operator_fmt)
+from repro.serve.queue import BackpressuredQueue
+from repro.serve.request import (DONE, FAILED, PENDING, REJECTED, RUNNING,
+                                 AdmissionError, SolveOutcome, SolveRequest,
+                                 validate_b)
+from repro.serve.server import SolverServer
+from repro.serve import scheduler
+
+__all__ = [
+    "AdmissionError", "BackpressuredQueue", "DONE", "FAILED", "HandleCache",
+    "HandleKey", "PENDING", "REJECTED", "RUNNING", "SolveOutcome",
+    "SolveRequest", "SolverHandle", "SolverServer", "operator_fmt",
+    "scheduler", "validate_b",
+]

@@ -1,0 +1,147 @@
+"""Solver handles: pre-lowered batched cycles behind an LRU.
+
+Admission must never pay a compile.  A :class:`SolverHandle` wraps ONE
+jitted ``gmres_batched_cycle`` for a fixed ``(n, operator fmt, m, k,
+dtype)`` bucket; jax compiles it on the handle's FIRST cycle and every
+later request in the bucket reuses the executable.  The
+:class:`HandleCache` is a bounded LRU (kernels/tuning.LruCache) over
+those buckets — the compiled-executable complement of the on-disk
+``persistent_choice`` cache, which already makes the tile choices INSIDE
+the lowering restart-stable.
+
+The handle's kernel dispatch is the solver core's, untouched: CGS2-family
+schemes go through the batched block-GS kernel when ``tuning.kernel_mode``
+and ``tuning.block_gs_fits`` allow, and degrade to the vmapped jnp
+reference otherwise — which is exactly the VMEM-overflow fallback the
+fault-injection tests force.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gmres import gmres_batched_cycle
+from repro.kernels.tuning import LruCache
+
+
+def operator_fmt(op) -> str:
+    """Stable format tag for handle keys ('dense', 'sparse', 'banded'...)."""
+    name = type(op).__name__
+    if name.endswith("Operator"):
+        return name[:-len("Operator")].lower()
+    if hasattr(op, "ndim"):          # raw dense array
+        return "dense"
+    return "function"
+
+
+def operator_dim(op) -> int:
+    shape = getattr(op, "shape", None)
+    if shape is None:
+        raise ValueError(
+            "operator has no .shape; wrap it in a FunctionOperator so the "
+            "server can size its lanes")
+    return int(shape[0])
+
+
+class HandleKey(NamedTuple):
+    """LRU key: everything that changes the lowered cycle."""
+
+    n: int
+    fmt: str
+    m: int
+    k: int
+    dtype: str
+
+
+class SolverHandle:
+    """One operator bucket's jitted lockstep cycle.
+
+    ``jax.jit`` is lazy, so constructing a handle is cheap; the compile
+    lands on the first ``cycle`` call and is keyed by the (k, n) block
+    shapes, which the handle pins.  The operator itself is a static
+    closure — one handle per A, which is the batched engine's contract
+    (ONE A stream shared by all k lanes).
+    """
+
+    def __init__(self, op, *, m: int = 30, k: int = 8,
+                 dtype=jnp.float32, gs: str = "cgs2",
+                 precond=None):
+        self.op = op
+        self.key = HandleKey(n=operator_dim(op), fmt=operator_fmt(op),
+                             m=int(m), k=int(k),
+                             dtype=jnp.dtype(dtype).name)
+        self.gs = gs
+        self._cycle = jax.jit(functools.partial(
+            gmres_batched_cycle, op, m=int(m), gs=gs, precond=precond,
+            compute_dtype=dtype))
+        self.cycles_run = 0
+
+    @property
+    def n(self) -> int:
+        return self.key.n
+
+    @property
+    def k(self) -> int:
+        return self.key.k
+
+    @property
+    def m(self) -> int:
+        return self.key.m
+
+    def block_shape(self) -> Tuple[int, int]:
+        return (self.key.k, self.key.n)
+
+    def cycle(self, b, x, tol_abs, active):
+        """One lockstep restart cycle; returns ``(x', beta', inner_steps)``.
+
+        All arguments are full (k, n) / (k,) blocks — idle lanes ride
+        along masked out (their x passes through untouched), which keeps
+        one executable valid for every occupancy level.
+        """
+        dt = jnp.dtype(self.key.dtype)
+        b = jnp.asarray(b, dt)
+        x = jnp.asarray(x, dt)
+        if b.shape != self.block_shape() or x.shape != self.block_shape():
+            raise ValueError(
+                f"handle {self.key} expects {self.block_shape()} blocks, "
+                f"got b{b.shape} x{x.shape}")
+        out = self._cycle(b, x, tol_abs=jnp.asarray(tol_abs, dt),
+                          active=jnp.asarray(active, bool))
+        self.cycles_run += 1
+        return out
+
+
+class HandleCache:
+    """LRU of :class:`SolverHandle`, keyed by ``(n, fmt, m, k, dtype)``.
+
+    ``get`` is the only entry point: hit moves the handle to the front,
+    miss builds one (cheap — lowering is lazy) and may evict the coldest
+    bucket, dropping its compiled executable with it.  Stats surface as
+    ``solver_serve_*`` metrics so cache thrash is visible in the bench.
+    """
+
+    def __init__(self, maxsize: int = 8):
+        self._lru = LruCache(maxsize=maxsize)
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def __contains__(self, key) -> bool:
+        return key in self._lru
+
+    def get(self, op, *, m: int = 30, k: int = 8, dtype=jnp.float32,
+            gs: str = "cgs2", precond=None) -> SolverHandle:
+        key = HandleKey(n=operator_dim(op), fmt=operator_fmt(op),
+                        m=int(m), k=int(k), dtype=jnp.dtype(dtype).name)
+        return self._lru.get_or_create(
+            key, lambda: SolverHandle(op, m=m, k=k, dtype=dtype, gs=gs,
+                                      precond=precond))
+
+    def stats(self) -> dict:
+        return self._lru.stats()
+
+    def clear(self) -> None:
+        self._lru.clear()

@@ -1,0 +1,101 @@
+"""Bounded admission queue with backpressure.
+
+The idiom is ray-ng's ``backpressured_push``/``wait_queue`` pair
+(SNIPPETS.md Snippet 2): a producer never lets its in-flight queue grow
+past ``max_depth`` — it either polls the queue down before pushing, or
+the push is refused outright and the caller sees the backpressure.
+
+Two admission modes map onto that:
+
+* ``push``          — non-blocking; full queue => refused (``False``).
+                      This is the PURE path the scheduler/test harness
+                      drive: backpressure is a return value, not a wait.
+* ``backpressured_push`` — blocking; spins ``wait_queue`` until depth
+                      drops or ``max_wait`` elapses.  Clock and sleep are
+                      INJECTED so the deterministic harness can script
+                      time; the host loop passes the real ones.
+
+The queue itself is deliberately dumb — a FIFO of opaque items with a
+depth bound and counters.  Ordering is the packing contract: lanes are
+refilled strictly in admission order.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Optional
+
+
+class BackpressuredQueue:
+    """Bounded FIFO; refusal-on-full is the backpressure signal."""
+
+    def __init__(self, max_depth: int = 64):
+        if max_depth < 1:
+            raise ValueError(f"max_depth must be >= 1, got {max_depth}")
+        self.max_depth = int(max_depth)
+        self._q: deque = deque()
+        # Counters survive pops: they are the serve metrics' raw material.
+        self.pushed = 0
+        self.refused = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def full(self) -> bool:
+        return len(self._q) >= self.max_depth
+
+    def push(self, item) -> bool:
+        """Non-blocking admit; ``False`` = backpressure refusal."""
+        if self.full:
+            self.refused += 1
+            return False
+        self._q.append(item)
+        self.pushed += 1
+        return True
+
+    def pop(self):
+        """FIFO pop; ``None`` when empty (scheduler's drain probe)."""
+        return self._q.popleft() if self._q else None
+
+    def peek(self):
+        return self._q[0] if self._q else None
+
+    def wait_queue(self, max_depth: int, *, clock: Callable[[], float],
+                   sleep: Callable[[float], None], poll: float = 0.01,
+                   max_wait: float = 1.0) -> bool:
+        """Block until depth <= ``max_depth`` or ``max_wait`` elapses.
+
+        The Snippet-2 shape: re-check, sleep a poll interval, give up
+        after a deadline.  Depth only drops when someone else pops —
+        in the server that is the scheduler thread/loop; in tests the
+        scripted ``sleep`` hook pops items itself, which is exactly why
+        the hooks are injected rather than hard-wired to ``time``.
+        """
+        deadline = clock() + max_wait
+        while len(self._q) > max_depth:
+            if clock() >= deadline:
+                return False
+            sleep(poll)
+        return True
+
+    def backpressured_push(self, item, *, clock: Callable[[], float],
+                           sleep: Callable[[float], None],
+                           poll: float = 0.01,
+                           max_wait: float = 1.0) -> bool:
+        """Blocking admit: wait for headroom, then push.
+
+        Returns ``False`` only if the queue stayed full past
+        ``max_wait`` — the caller converts that into a REJECTED outcome
+        (or retries; the server's choice, not the queue's).
+        """
+        if self.wait_queue(self.max_depth - 1, clock=clock, sleep=sleep,
+                           poll=poll, max_wait=max_wait):
+            return self.push(item)
+        self.refused += 1
+        return False
+
+    def drain(self) -> list:
+        """Pop everything (shutdown path); returns the evicted items."""
+        items = list(self._q)
+        self._q.clear()
+        return items

@@ -1,0 +1,84 @@
+"""Solve requests and outcomes: the server's wire types.
+
+A request is one right-hand side plus its OWN stopping contract —
+``tol`` (relative) and ``max_restarts`` (budget).  Heterogeneous
+contracts are the whole point of the serving layer: the batched engine
+runs k lanes in lockstep off ONE A stream, and per-lane stopping
+(core/gmres.py) lets a loose-tolerance request retire after one restart
+while a tight one keeps its lane.
+
+Validation happens HERE, at admission, not in the solver: a NaN/Inf b
+poisons every reduction it is batched with (one bad lane's mat-vec is
+still one column of the shared block GEMM), so it must never reach a
+lane.  Rejected requests get a terminal ``REJECTED`` outcome and never
+enter the queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# Terminal / lifecycle states.  Strings, not an Enum: outcomes cross the
+# host boundary (JSON metrics, logs) and tests script them literally.
+PENDING = "pending"      # admitted, waiting in the queue
+RUNNING = "running"      # packed into a lane
+DONE = "done"            # converged within its own tol
+FAILED = "failed"        # restart budget exhausted before convergence
+REJECTED = "rejected"    # refused at admission (invalid b or backpressure)
+
+TERMINAL = frozenset({DONE, FAILED, REJECTED})
+
+
+class AdmissionError(ValueError):
+    """Request refused at admission; ``.reason`` says why."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+def validate_b(b, n: Optional[int] = None) -> np.ndarray:
+    """Admission gate for a right-hand side.
+
+    Raises :class:`AdmissionError` on non-finite entries or a shape that
+    cannot occupy a lane of the server's (k, n) block.  Returns the
+    validated vector as a host ndarray (the queue is host-side; device
+    transfer happens at pack time, once, for the whole lane block).
+    """
+    arr = np.asarray(b)
+    if arr.ndim != 1:
+        raise AdmissionError(f"b must be 1-D, got shape {arr.shape}")
+    if n is not None and arr.shape[0] != n:
+        raise AdmissionError(f"b has n={arr.shape[0]}, server lane n={n}")
+    if not np.all(np.isfinite(arr)):
+        raise AdmissionError("b contains NaN/Inf")
+    return arr
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    """One admitted solve: rhs + its own stopping contract."""
+
+    rid: int
+    b: np.ndarray                 # validated, host-side (n,)
+    tol: float = 1e-5             # relative: stop at ||r|| <= tol*||b||
+    max_restarts: int = 50        # restart budget before FAILED retirement
+
+    @property
+    def tol_abs(self) -> float:
+        return float(self.tol) * float(np.linalg.norm(self.b))
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveOutcome:
+    """Terminal record handed back to the submitter."""
+
+    rid: int
+    status: str                   # DONE / FAILED / REJECTED
+    x: Optional[np.ndarray] = None
+    residual: float = float("inf")
+    restarts: int = 0
+    inner_steps: int = 0
+    reason: str = ""              # REJECTED: why admission refused it

@@ -1,0 +1,199 @@
+"""Pure, tick-driven lane scheduler: admit -> pack -> cycle -> retire.
+
+This is the continuous-batching state machine, written with NO I/O, no
+clock, no jax — every transition is a pure function from an immutable
+:class:`SchedulerState` (plus explicit inputs) to a new state.  The host
+loop (server.py) owns the device and the wall clock; the deterministic
+test harness (tests/test_serve.py) drives the same functions with
+scripted residuals and never touches a device at all.
+
+One tick of the server is:
+
+    admit   requests move from the ingress queue into ``pending``
+            until the pending bound pushes back (rejection is a
+            RETURN VALUE here; the blocking wait lives in queue.py);
+    pack    idle lanes are filled from ``pending`` in strict FIFO
+            admission order — the packing contract tests pin down;
+    cycle   the host runs ONE lockstep restart cycle over the k lanes
+            (gmres_batched_cycle: one A stream for all of them) and
+            comes back with per-lane residuals;
+    retire  each occupied lane is charged one restart; a lane at or
+            under its own tol retires DONE, a lane out of budget
+            retires FAILED — and either way frees the lane NOW, at the
+            restart boundary, not when the slowest lane finishes;
+    refill  is just the next tick's pack: a freed lane picks up the
+            next pending request mid-solve of its cohort (the decode-
+            loop trick applied to Krylov lanes).
+
+Because retirement frees lanes every tick, total device work is
+``sum_i restarts_i`` spread over ``~ceil(sum_i restarts_i / k)`` cycles
+instead of ``sum_i restarts_i`` sequential cycles — throughput = lanes x
+early retirement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.serve.request import DONE, FAILED, SolveRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class Lane:
+    """One of the k lockstep lanes; ``req is None`` means idle."""
+
+    req: Optional[SolveRequest] = None
+    restarts: int = 0            # cycles charged to the current occupant
+
+    @property
+    def idle(self) -> bool:
+        return self.req is None
+
+
+@dataclasses.dataclass(frozen=True)
+class Retirement:
+    """A lane freed this tick: who, why, and with what residual."""
+
+    lane: int
+    req: SolveRequest
+    status: str                  # DONE or FAILED
+    residual: float
+    restarts: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerState:
+    """Immutable snapshot of lanes + pending backlog + counters."""
+
+    lanes: Tuple[Lane, ...]
+    pending: Tuple[SolveRequest, ...] = ()
+    max_pending: int = 64
+    tick: int = 0                # completed cycle count
+    # Counters (the solver_serve_* metrics' raw material):
+    admitted: int = 0
+    rejected: int = 0
+    retired_done: int = 0
+    retired_failed: int = 0
+    lane_cycles: int = 0         # sum of active lanes over all ticks
+
+    @property
+    def k(self) -> int:
+        return len(self.lanes)
+
+    @property
+    def active(self) -> int:
+        return sum(not ln.idle for ln in self.lanes)
+
+    @property
+    def idle_lanes(self) -> Tuple[int, ...]:
+        return tuple(i for i, ln in enumerate(self.lanes) if ln.idle)
+
+    @property
+    def busy(self) -> bool:
+        return self.active > 0 or bool(self.pending)
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of lanes doing useful work per cycle run."""
+        if self.tick == 0:
+            return 0.0
+        return self.lane_cycles / (self.tick * self.k)
+
+
+def init(k: int, max_pending: int = 64) -> SchedulerState:
+    if k < 1:
+        raise ValueError(f"need at least one lane, got k={k}")
+    return SchedulerState(lanes=tuple(Lane() for _ in range(k)),
+                          max_pending=int(max_pending))
+
+
+def admit(state: SchedulerState,
+          req: SolveRequest) -> Tuple[SchedulerState, bool]:
+    """Admit one request into ``pending``; full backlog => refusal.
+
+    Pure backpressure: the bool IS the signal.  Blocking/retry policy
+    belongs to the host ingress (queue.BackpressuredQueue), never here.
+    """
+    if len(state.pending) >= state.max_pending:
+        return dataclasses.replace(state, rejected=state.rejected + 1), False
+    return dataclasses.replace(state, pending=state.pending + (req,),
+                               admitted=state.admitted + 1), True
+
+
+def pack(state: SchedulerState) -> Tuple[SchedulerState,
+                                         List[Tuple[int, SolveRequest]]]:
+    """Fill idle lanes from ``pending`` in FIFO admission order.
+
+    Returns the placements ``(lane_index, request)`` made this tick so
+    the host can load exactly those lanes' b into the device block —
+    running lanes are never repacked (their x is mid-solve).
+    """
+    lanes = list(state.lanes)
+    backlog = list(state.pending)
+    placed: List[Tuple[int, SolveRequest]] = []
+    for i, ln in enumerate(lanes):
+        if not backlog:
+            break
+        if ln.idle:
+            req = backlog.pop(0)
+            lanes[i] = Lane(req=req, restarts=0)
+            placed.append((i, req))
+    if not placed:
+        return state, []
+    return dataclasses.replace(state, lanes=tuple(lanes),
+                               pending=tuple(backlog)), placed
+
+
+def retire(state: SchedulerState,
+           residuals) -> Tuple[SchedulerState, List[Retirement]]:
+    """Charge one restart to every occupied lane, free the finished ones.
+
+    ``residuals[i]`` is lane i's post-cycle ||b - A x|| (ignored for
+    idle lanes).  A lane retires DONE at or under its own ``tol_abs``,
+    FAILED when its budget is spent — the failed lane frees JUST like a
+    converged one, so one hopeless request can never stall its cohort.
+    """
+    if len(residuals) != state.k:
+        raise ValueError(
+            f"got {len(residuals)} residuals for {state.k} lanes")
+    lanes = list(state.lanes)
+    retired: List[Retirement] = []
+    active = 0
+    for i, ln in enumerate(lanes):
+        if ln.idle:
+            continue
+        active += 1
+        used = ln.restarts + 1
+        beta = float(residuals[i])
+        if beta <= ln.req.tol_abs:
+            status = DONE
+        elif used >= ln.req.max_restarts:
+            status = FAILED
+        else:
+            lanes[i] = Lane(req=ln.req, restarts=used)
+            continue
+        retired.append(Retirement(lane=i, req=ln.req, status=status,
+                                  residual=beta, restarts=used))
+        lanes[i] = Lane()
+    ndone = sum(r.status == DONE for r in retired)
+    return dataclasses.replace(
+        state, lanes=tuple(lanes), tick=state.tick + 1,
+        lane_cycles=state.lane_cycles + active,
+        retired_done=state.retired_done + ndone,
+        retired_failed=state.retired_failed + (len(retired) - ndone),
+    ), retired
+
+
+def metrics(state: SchedulerState) -> dict:
+    """Counters in the shape kernel_bench's solver_serve_* rows consume."""
+    return {
+        "tick": state.tick,
+        "queue_depth": len(state.pending),
+        "active_lanes": state.active,
+        "occupancy": state.occupancy,
+        "admitted": state.admitted,
+        "rejected": state.rejected,
+        "retired_done": state.retired_done,
+        "retired_failed": state.retired_failed,
+        "lane_cycles": state.lane_cycles,
+    }

@@ -1,0 +1,192 @@
+"""Host I/O loop: the impure shell around the pure scheduler.
+
+Layering (each piece is separately testable, which is the point):
+
+    queue.BackpressuredQueue   host ingress — bounded, blocking option
+    scheduler.*                pure tick machine (admit/pack/retire)
+    handles.SolverHandle       the jitted device cycle
+    SolverServer               glues them: moves requests queue->lanes,
+                               runs cycles, collects outcomes, keeps
+                               metrics.  The ONLY code here that touches
+                               a device is ``handle.cycle``.
+
+One server serves ONE operator (the batched engine shares a single A
+stream across its k lanes); the handle comes from a shared
+:class:`~repro.serve.handles.HandleCache` so several servers over
+different (n, fmt) buckets reuse compiled cycles instead of recompiling.
+
+Device-side lane state is a (k, n) x block plus a (k, n) b block; a
+refill overwrites ONE row of each and zeroes the lane's x — host work
+linear in n, not in k·restarts.  Convergence checks read back only the
+(k,) residual vector per tick.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.serve import scheduler as sched
+from repro.serve.handles import HandleCache, SolverHandle
+from repro.serve.queue import BackpressuredQueue
+from repro.serve.request import (AdmissionError, REJECTED, SolveOutcome,
+                                 SolveRequest, validate_b)
+
+
+class SolverServer:
+    """Continuous-batching GMRES server over one operator.
+
+    >>> srv = SolverServer(op, m=16, k=8)
+    >>> rid = srv.submit(b, tol=1e-5, max_restarts=40)
+    >>> srv.run()                        # drain queue + lanes
+    >>> out = srv.results[rid]           # SolveOutcome(status='done', ...)
+    """
+
+    def __init__(self, op, *, m: int = 30, k: int = 8,
+                 dtype=jnp.float32, gs: str = "cgs2", precond=None,
+                 max_pending: int = 64, queue_depth: Optional[int] = None,
+                 handle_cache: Optional[HandleCache] = None,
+                 clock=time.monotonic, sleep=time.sleep):
+        cache = handle_cache if handle_cache is not None else HandleCache()
+        self.handle: SolverHandle = cache.get(op, m=m, k=k, dtype=dtype,
+                                              gs=gs, precond=precond)
+        self.handle_cache = cache
+        self.state = sched.init(k, max_pending=max_pending)
+        self.ingress = BackpressuredQueue(
+            max_depth=queue_depth if queue_depth is not None else max_pending)
+        self.results: Dict[int, SolveOutcome] = {}
+        self._clock = clock
+        self._sleep = sleep
+        self._next_rid = 0
+        self._t0: Optional[float] = None
+        self._wall: float = 0.0
+        # Device-side lane blocks (jnp so cycles never re-upload idle rows).
+        kk, n = self.handle.block_shape()
+        dt = jnp.dtype(self.handle.key.dtype)
+        self._b = jnp.zeros((kk, n), dt)
+        self._x = jnp.zeros((kk, n), dt)
+        self._tol_abs = np.zeros(kk, np.float64)
+
+    # ------------------------------------------------------------------
+    # Admission (host ingress)
+    # ------------------------------------------------------------------
+    def submit(self, b, *, tol: float = 1e-5, max_restarts: int = 50,
+               wait: bool = False, max_wait: float = 1.0) -> int:
+        """Admit one solve; returns its rid.
+
+        Invalid b (NaN/Inf, wrong n) is REJECTED here — it never enters
+        the queue, so it can never poison a lane block.  A full queue
+        refuses non-blocking submits the same way; ``wait=True`` uses
+        the backpressured push (bounded by ``max_wait``) instead.
+        """
+        rid = self._next_rid
+        self._next_rid += 1
+        try:
+            arr = validate_b(b, n=self.handle.n)
+        except AdmissionError as e:
+            self.results[rid] = SolveOutcome(rid=rid, status=REJECTED,
+                                             reason=e.reason)
+            return rid
+        req = SolveRequest(rid=rid, b=arr, tol=float(tol),
+                           max_restarts=int(max_restarts))
+        if wait:
+            ok = self.ingress.backpressured_push(
+                req, clock=self._clock, sleep=self._sleep, max_wait=max_wait)
+        else:
+            ok = self.ingress.push(req)
+        if not ok:
+            self.results[rid] = SolveOutcome(
+                rid=rid, status=REJECTED,
+                reason=f"backpressure: queue depth {len(self.ingress)} "
+                       f">= {self.ingress.max_depth}")
+        return rid
+
+    # ------------------------------------------------------------------
+    # The tick loop
+    # ------------------------------------------------------------------
+    def _admit_from_ingress(self) -> None:
+        while self.ingress.peek() is not None:
+            st, ok = sched.admit(self.state, self.ingress.peek())
+            if not ok:
+                break                    # pending full: leave it queued
+            self.state = st
+            self.ingress.pop()
+
+    def _pack(self) -> None:
+        self.state, placed = sched.pack(self.state)
+        if not placed:
+            return
+        b_host = np.array(self._b)     # np.array, not asarray: device
+        x_host = np.array(self._x)     # buffers give read-only views
+        for lane, req in placed:
+            b_host[lane] = req.b
+            x_host[lane] = 0.0
+            self._tol_abs[lane] = req.tol_abs
+        dt = self._b.dtype
+        self._b = jnp.asarray(b_host, dt)
+        self._x = jnp.asarray(x_host, dt)
+
+    def step(self) -> List[sched.Retirement]:
+        """ONE scheduler tick: admit, pack, cycle, retire.  Returns the
+        retirements so callers (and tests) can watch lanes free up."""
+        if self._t0 is None:
+            self._t0 = self._clock()
+        self._admit_from_ingress()
+        self._pack()
+        active = np.array([not ln.idle for ln in self.state.lanes])
+        if not active.any():
+            return []
+        x, beta, _inner = self.handle.cycle(
+            self._b, self._x, np.where(active, self._tol_abs, 0.0), active)
+        self._x = x
+        self.state, retired = sched.retire(self.state, np.asarray(beta))
+        if retired:
+            x_host = np.asarray(self._x)
+            for r in retired:
+                status = r.status
+                self.results[r.req.rid] = SolveOutcome(
+                    rid=r.req.rid, status=status,
+                    x=x_host[r.lane].copy(), residual=r.residual,
+                    restarts=r.restarts,
+                    inner_steps=r.restarts * self.handle.m)
+        self._wall = self._clock() - self._t0
+        return retired
+
+    def run(self, max_ticks: int = 10_000) -> int:
+        """Tick until queue, backlog and lanes are all drained.
+
+        Returns the number of ticks run.  ``max_ticks`` is a safety
+        bound, not a policy: per-lane budgets guarantee every occupant
+        retires in at most its own ``max_restarts`` ticks.
+        """
+        ticks = 0
+        while (self.state.busy or self.ingress.peek() is not None):
+            if ticks >= max_ticks:
+                raise RuntimeError(
+                    f"server did not drain in {max_ticks} ticks "
+                    f"({sched.metrics(self.state)})")
+            self.step()
+            ticks += 1
+        return ticks
+
+    # ------------------------------------------------------------------
+    # Observability
+    # ------------------------------------------------------------------
+    def metrics(self) -> dict:
+        """Scheduler counters + ingress + handle-cache + throughput."""
+        m = sched.metrics(self.state)
+        m.update({
+            "ingress_depth": len(self.ingress),
+            "ingress_refused": self.ingress.refused,
+            "handle_cache": self.handle_cache.stats(),
+            "cycles_run": self.handle.cycles_run,
+            "wall_s": self._wall,
+            "solves_per_s": ((m["retired_done"] + m["retired_failed"])
+                             / self._wall if self._wall > 0 else 0.0),
+            "retirement_rate": ((m["retired_done"] + m["retired_failed"])
+                                / m["tick"] if m["tick"] else 0.0),
+        })
+        return m

@@ -106,3 +106,56 @@ def test_smoke_subset_skips_unmatched_rows():
                       "traffic_ratio": 0.1}])
     assert bench_gate.check(cur, base, tol=0.05,
                             min_pipeline_ratio=2.0) == []
+
+
+GOOD_SERVE_ROW = {
+    "name": "solver_serve_n160_k8_req32",
+    "us": 100.0,
+    "cycles_packed": 127, "cycles_sequential": 946, "cycles_ideal": 119,
+    "hbm_bytes_packed_A": 127, "hbm_bytes_sequential_A": 946,
+    "traffic_ratio": 127 / 946,
+    "derived": "x", "mode": "modeled",
+}
+
+
+def test_serve_row_clean_passes():
+    assert bench_gate.check(_payload([dict(GOOD_SERVE_ROW)]), None,
+                            tol=0.05, min_pipeline_ratio=2.0) == []
+
+
+def test_serve_packed_no_better_than_sequential_fails():
+    row = dict(GOOD_SERVE_ROW, cycles_packed=946,
+               traffic_ratio=1.0)
+    fails = bench_gate.check(_payload([row]), None, tol=0.05,
+                             min_pipeline_ratio=2.0)
+    assert any("no better" in f for f in fails)
+
+
+def test_serve_packed_beyond_ideal_slack_fails():
+    row = dict(GOOD_SERVE_ROW, cycles_packed=140, traffic_ratio=140 / 946)
+    fails = bench_gate.check(_payload([row]), None, tol=0.05,
+                             min_pipeline_ratio=2.0, serve_ideal_slack=1.1)
+    assert any("ideal" in f for f in fails)
+
+
+def test_serve_ideal_slack_is_configurable():
+    row = dict(GOOD_SERVE_ROW, cycles_packed=140, traffic_ratio=140 / 946)
+    assert bench_gate.check(_payload([row]), None, tol=0.05,
+                            min_pipeline_ratio=2.0,
+                            serve_ideal_slack=1.25) == []
+
+
+def test_serve_broken_ideal_model_fails():
+    row = dict(GOOD_SERVE_ROW, cycles_ideal=2000)
+    fails = bench_gate.check(_payload([row]), None, tol=0.05,
+                             min_pipeline_ratio=2.0)
+    assert any("model arithmetic" in f for f in fails)
+
+
+def test_serve_traffic_ratio_diffed_like_any_other():
+    cur = _payload([dict(GOOD_SERVE_ROW, cycles_packed=140,
+                         traffic_ratio=140 / 946)])
+    base = _payload([dict(GOOD_SERVE_ROW)])
+    fails = bench_gate.check(cur, base, tol=0.05, min_pipeline_ratio=2.0,
+                             serve_ideal_slack=1.25)
+    assert any("traffic_ratio" in f for f in fails)

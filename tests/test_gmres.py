@@ -96,6 +96,51 @@ def test_batched_rhs():
         assert relres(a, res.x[i], bs[i]) < 5e-5
 
 
+def test_batched_mixed_tolerance_parity():
+    """Per-lane tol/budget arrays: every lane must stop on ITS OWN
+    contract — same restarts and solution as a standalone gmres with that
+    tol — and a loose lane must burn fewer cycles than a tight one."""
+    # Convection-diffusion needs tens of restarts at m=10, so the four
+    # tolerances land on genuinely different restart counts (~20/33/49/24).
+    a, _ = _system(kind="convdiff")
+    n = a.shape[0]
+    bs = jax.random.normal(jax.random.PRNGKey(11), (4, n))
+    tols = jnp.array([1e-2, 1e-4, 1e-6, 1e-3])
+    budgets = jnp.array([80, 80, 80, 80])
+    res = gmres_batched(a, bs, m=10, tol=tols, max_restarts=budgets)
+    assert bool(res.converged.all()) and bool(res.done.all())
+    for i in range(4):
+        tol = float(tols[i])
+        ref = gmres(a, bs[i], m=10, tol=tol, max_restarts=80)
+        # +-1: block and scalar cycles round differently at fp32, the
+        # same residual-parity contract the pipelined scheme tests use.
+        assert abs(int(res.restarts[i]) - int(ref.restarts)) <= 1, i
+        # The solver's own residual meets the lane tol exactly; the
+        # independent recomputation here gets fp32 matmul slack.
+        bnorm = float(jnp.linalg.norm(bs[i]))
+        assert float(res.residual[i]) <= tol * bnorm * (1 + 1e-6)
+        assert relres(a, res.x[i], bs[i]) <= 2 * tol
+        np.testing.assert_allclose(np.asarray(res.x[i]), np.asarray(ref.x),
+                                   rtol=5e-2, atol=5e-3)
+    # The mixed block really is heterogeneous: loose < tight lane cost.
+    assert int(res.restarts[0]) < int(res.restarts[2])
+    assert int(res.inner_steps[0]) < int(res.inner_steps[2])
+
+
+def test_batched_per_lane_budget_failed_lane_flagged():
+    """A lane out of budget reports done=True / converged=False (the
+    FAILED retirement signal) without disturbing its cohort."""
+    a, _ = _system()
+    bs = jax.random.normal(jax.random.PRNGKey(12), (3, a.shape[0]))
+    res = gmres_batched(a, bs, m=4, tol=jnp.array([1e-5, 1e-14, 1e-5]),
+                        max_restarts=jnp.array([50, 2, 50]))
+    assert bool(res.done.all())
+    assert bool(res.converged[0]) and bool(res.converged[2])
+    assert not bool(res.converged[1]) and int(res.restarts[1]) == 2
+    for i in (0, 2):
+        assert relres(a, res.x[i], bs[i]) < 5e-5
+
+
 @pytest.mark.parametrize("precond", ["jacobi", "neumann", "block_jacobi"])
 def test_preconditioners_cut_iterations(precond):
     a, b = _system(n=128, kind="diagdom")

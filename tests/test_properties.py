@@ -227,3 +227,39 @@ def test_pipelined_solve_matches_cgs2(seed, nx, fmt, m):
                / max(float(jnp.linalg.norm(ref.x)), 1e-30))
         assert err < 2e-3, err
         assert abs(int(pipe.restarts) - int(ref.restarts)) <= 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), k=st.sampled_from([2, 3, 4]),
+       order=st.permutations(list(range(6))),
+       tols=st.lists(st.sampled_from([1e-2, 1e-3, 1e-4, 1e-5]),
+                     min_size=6, max_size=6),
+       buckets=st.lists(st.sampled_from([32, 48]), min_size=6, max_size=6))
+def test_serve_no_cross_lane_contamination(seed, k, order, tols, buckets):
+    """Serving invariant: whatever the arrival order, lane count, and
+    (n-bucket, tol) mix, every request's residual meets ITS OWN tol and
+    its solution matches a standalone gmres of the same system — packing,
+    early retirement and mid-solve refill never leak between lanes."""
+    from repro.serve import HandleCache, SolverServer
+    ops = {n: random_diagdom(jax.random.PRNGKey(n), n) for n in set(buckets)}
+    cache = HandleCache()
+    servers = {n: SolverServer(ops[n], m=8, k=k, handle_cache=cache)
+               for n in set(buckets)}
+    placed = []   # (server, rid, n, b, tol)
+    for i in order:
+        n, tol = buckets[i], tols[i]
+        b = np.asarray(jax.random.normal(
+            jax.random.PRNGKey(seed * 100 + i), (n,)))
+        rid = servers[n].submit(b, tol=tol, max_restarts=60)
+        placed.append((servers[n], rid, n, b, tol))
+    for srv in servers.values():
+        srv.run()
+    for srv, rid, n, b, tol in placed:
+        out = srv.results[rid]
+        assert out.status == "done", (rid, out.status, out.residual)
+        assert out.residual <= tol * np.linalg.norm(b) * (1 + 1e-6)
+        ref = gmres(ops[n], jnp.asarray(b, jnp.float32), m=8, tol=tol,
+                    max_restarts=60)
+        err = (np.linalg.norm(out.x - np.asarray(ref.x))
+               / max(np.linalg.norm(np.asarray(ref.x)), 1e-30))
+        assert err < 5e-3, (rid, err)

@@ -13,7 +13,11 @@ fails on perf-model regressions:
   3. absolute invariants on the pipelined rows, baseline or not: the
      innermost-loop collective count of the single-reduce pipelined scheme
      must stay >= --min-pipeline-ratio below the split-phase path, at
-     residual parity (restarts within +/-1).
+     residual parity (restarts within +/-1);
+  4. absolute invariants on the solver_serve_* rows: the continuous-
+     batching server must finish its workload in fewer lockstep cycles
+     than the sequential baseline AND within --serve-ideal-slack of the
+     lanes x early-retirement ideal (max(ceil(sum r_i / k), max r_i)).
 
 Rows are matched by name; rows present only on one side are skipped for
 diff checks (the smoke subset uses smaller cases than the full run) but
@@ -36,7 +40,8 @@ def _rows_by_name(payload):
 
 
 def check(current: dict, baseline: dict | None, *, tol: float,
-          min_pipeline_ratio: float) -> list[str]:
+          min_pipeline_ratio: float,
+          serve_ideal_slack: float = 1.1) -> list[str]:
     fails = []
     cur = _rows_by_name(current)
     base = _rows_by_name(baseline) if baseline else {}
@@ -75,6 +80,24 @@ def check(current: dict, baseline: dict | None, *, tol: float,
                 fails.append(f"{name}: single-reduce scheme must psum once "
                              f"per step, row says "
                              f"{r['psums_per_step_pipelined']}")
+        # 4. serving throughput: packed cycles beat sequential, near ideal
+        if "cycles_packed" in r:
+            packed = r["cycles_packed"]
+            seq = r["cycles_sequential"]
+            ideal = r["cycles_ideal"]
+            if packed >= seq:
+                fails.append(
+                    f"{name}: packed server used {packed} cycles, no better "
+                    f"than {seq} sequential — continuous batching is off")
+            if packed > ideal * serve_ideal_slack:
+                fails.append(
+                    f"{name}: packed {packed} cycles > "
+                    f"{serve_ideal_slack:.2f}x ideal {ideal} — lane "
+                    f"packing/retirement is leaving cycles on the table")
+            if ideal > seq:
+                fails.append(f"{name}: cycles_ideal {ideal} > "
+                             f"cycles_sequential {seq} — model arithmetic "
+                             f"broken")
     return fails
 
 
@@ -90,6 +113,9 @@ def main(argv=None) -> int:
     ap.add_argument("--min-pipeline-ratio", type=float, default=2.0,
                     help="required split/pipelined inner-loop collective "
                          "ratio")
+    ap.add_argument("--serve-ideal-slack", type=float, default=1.1,
+                    help="allowed packed/ideal cycle ratio on "
+                         "solver_serve_* rows")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -102,7 +128,8 @@ def main(argv=None) -> int:
         print(f"# no baseline at {args.baseline}; absolute checks only")
 
     fails = check(current, baseline, tol=args.tol,
-                  min_pipeline_ratio=args.min_pipeline_ratio)
+                  min_pipeline_ratio=args.min_pipeline_ratio,
+                  serve_ideal_slack=args.serve_ideal_slack)
     n = len(current.get("rows", []))
     nb = len(baseline.get("rows", [])) if baseline else 0
     matched = len(set(_rows_by_name(current)) & set(_rows_by_name(baseline))
