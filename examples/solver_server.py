@@ -24,8 +24,7 @@ def main():
 
     # -- 1. the server: one operator, k lanes, handle compiled lazily -----
     srv = SolverServer(op, m=m, k=k, max_pending=64)
-    print(f"[1] server up: handle key {tuple(srv.handle.key)} "
-          f"(n, fmt, m, k, dtype)")
+    print(f"[1] server up: handle key {srv.handle.key!r}")
 
     # -- 2. a heterogeneous burst ------------------------------------------
     # Tight tolerances first (longest-processing-time packing), a lane-

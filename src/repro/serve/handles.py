@@ -9,6 +9,16 @@ those buckets — the compiled-executable complement of the on-disk
 ``persistent_choice`` cache, which already makes the tile choices INSIDE
 the lowering restart-stable.
 
+The handle jit-closes over the CONCRETE operator (and gs scheme and
+preconditioner), not just its shape — so the cache key must too.
+:class:`HandleKey` therefore carries identity tokens for the operator
+and preconditioner alongside the shape bucket: two servers sharing one
+cache over same-shaped but different operators get two handles, never
+each other's system.  The tokens are ``id()``s, which is sound here
+because the cached handle holds strong references to both objects — a
+token can only collide with a DEAD operator, and a dead operator cannot
+be passed to ``get``.
+
 The handle's kernel dispatch is the solver core's, untouched: CGS2-family
 schemes go through the batched block-GS kernel when ``tuning.kernel_mode``
 and ``tuning.block_gs_fits`` allow, and degrade to the vmapped jnp
@@ -47,13 +57,30 @@ def operator_dim(op) -> int:
 
 
 class HandleKey(NamedTuple):
-    """LRU key: everything that changes the lowered cycle."""
+    """LRU key: everything that changes the lowered cycle.
+
+    The shape bucket ``(n, fmt, m, k, dtype)`` sizes the executable; the
+    identity fields pin WHICH system it solves — the handle closes over
+    the operator, gs scheme, and preconditioner, so a key that ignored
+    them would hand a same-shaped server the wrong compiled solve.
+    """
 
     n: int
     fmt: str
     m: int
     k: int
     dtype: str
+    gs: str
+    op_token: int                # id(op): live while the handle is cached
+    precond_token: int           # id(precond), 0 for None
+
+
+def _handle_key(op, *, m: int, k: int, dtype, gs: str,
+                precond) -> HandleKey:
+    return HandleKey(n=operator_dim(op), fmt=operator_fmt(op),
+                     m=int(m), k=int(k), dtype=jnp.dtype(dtype).name,
+                     gs=str(gs), op_token=id(op),
+                     precond_token=0 if precond is None else id(precond))
 
 
 class SolverHandle:
@@ -70,9 +97,9 @@ class SolverHandle:
                  dtype=jnp.float32, gs: str = "cgs2",
                  precond=None):
         self.op = op
-        self.key = HandleKey(n=operator_dim(op), fmt=operator_fmt(op),
-                             m=int(m), k=int(k),
-                             dtype=jnp.dtype(dtype).name)
+        self.precond = precond   # strong ref: keeps the key token valid
+        self.key = _handle_key(op, m=m, k=k, dtype=dtype, gs=gs,
+                               precond=precond)
         self.gs = gs
         self._cycle = jax.jit(functools.partial(
             gmres_batched_cycle, op, m=int(m), gs=gs, precond=precond,
@@ -115,12 +142,17 @@ class SolverHandle:
 
 
 class HandleCache:
-    """LRU of :class:`SolverHandle`, keyed by ``(n, fmt, m, k, dtype)``.
+    """LRU of :class:`SolverHandle`, keyed by :class:`HandleKey`.
 
     ``get`` is the only entry point: hit moves the handle to the front,
     miss builds one (cheap — lowering is lazy) and may evict the coldest
     bucket, dropping its compiled executable with it.  Stats surface as
     ``solver_serve_*`` metrics so cache thrash is visible in the bench.
+
+    Sharing one cache across servers (``SolverServer(handle_cache=...)``)
+    is safe because the key carries operator/gs/precond identity, not
+    just the shape bucket; a hit is additionally asserted to resolve to
+    the SAME operator object before the handle is handed out.
     """
 
     def __init__(self, maxsize: int = 8):
@@ -134,11 +166,15 @@ class HandleCache:
 
     def get(self, op, *, m: int = 30, k: int = 8, dtype=jnp.float32,
             gs: str = "cgs2", precond=None) -> SolverHandle:
-        key = HandleKey(n=operator_dim(op), fmt=operator_fmt(op),
-                        m=int(m), k=int(k), dtype=jnp.dtype(dtype).name)
-        return self._lru.get_or_create(
+        key = _handle_key(op, m=m, k=k, dtype=dtype, gs=gs,
+                          precond=precond)
+        handle = self._lru.get_or_create(
             key, lambda: SolverHandle(op, m=m, k=k, dtype=dtype, gs=gs,
                                       precond=precond))
+        assert handle.op is op and handle.gs == gs, (
+            f"handle cache integrity: key {key} resolved to a different "
+            f"operator/scheme")
+        return handle
 
     def stats(self) -> dict:
         return self._lru.stats()

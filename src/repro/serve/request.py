@@ -65,9 +65,18 @@ class SolveRequest:
     b: np.ndarray                 # validated, host-side (n,)
     tol: float = 1e-5             # relative: stop at ||r|| <= tol*||b||
     max_restarts: int = 50        # restart budget before FAILED retirement
+    # Retirement threshold quantized to the serving handle's compute
+    # dtype (server.submit sets it).  Host retirement and the compiled
+    # cycle's lane masking MUST compare against the SAME number: a raw
+    # float64 tol_abs that rounds differently under the device's float32
+    # cast leaves a converged-on-device lane spinning unretired on the
+    # host until its budget expires.
+    tol_abs_override: Optional[float] = None
 
     @property
     def tol_abs(self) -> float:
+        if self.tol_abs_override is not None:
+            return self.tol_abs_override
         return float(self.tol) * float(np.linalg.norm(self.b))
 
 

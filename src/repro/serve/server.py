@@ -16,9 +16,10 @@ stream across its k lanes); the handle comes from a shared
 different (n, fmt) buckets reuse compiled cycles instead of recompiling.
 
 Device-side lane state is a (k, n) x block plus a (k, n) b block; a
-refill overwrites ONE row of each and zeroes the lane's x — host work
-linear in n, not in k·restarts.  Convergence checks read back only the
-(k,) residual vector per tick.
+refill overwrites ONE row of each in place (``.at[lane].set``) and
+zeroes the lane's x — host work linear in n, not in k·restarts, and no
+full-block device round-trip per tick.  Convergence checks read back
+only the (k,) residual and inner-step vectors per tick.
 """
 from __future__ import annotations
 
@@ -69,6 +70,7 @@ class SolverServer:
         self._b = jnp.zeros((kk, n), dt)
         self._x = jnp.zeros((kk, n), dt)
         self._tol_abs = np.zeros(kk, np.float64)
+        self._inner = np.zeros(kk, np.int64)   # Arnoldi steps per occupant
 
     # ------------------------------------------------------------------
     # Admission (host ingress)
@@ -79,8 +81,11 @@ class SolverServer:
 
         Invalid b (NaN/Inf, wrong n) is REJECTED here — it never enters
         the queue, so it can never poison a lane block.  A full queue
-        refuses non-blocking submits the same way; ``wait=True`` uses
-        the backpressured push (bounded by ``max_wait``) instead.
+        refuses non-blocking submits the same way; ``wait=True`` instead
+        drains the backlog by ticking the scheduler (bounded by
+        ``max_wait``): the server is single-threaded, so the submitter
+        IS the consumer — sleeping for someone else to pop the ingress
+        would wait forever.
         """
         rid = self._next_rid
         self._next_rid += 1
@@ -90,11 +95,26 @@ class SolverServer:
             self.results[rid] = SolveOutcome(rid=rid, status=REJECTED,
                                              reason=e.reason)
             return rid
+        # Quantize the retirement threshold to the handle's compute
+        # dtype: the compiled cycle masks lanes with the downcast
+        # tol_abs, and host retirement must agree on "converged" or a
+        # lane can wedge between the two thresholds (device says done,
+        # host keeps charging restarts until the budget fails it).
+        dt = np.dtype(self.handle.key.dtype)
+        tol_abs = float(np.asarray(float(tol) * np.linalg.norm(arr), dt))
         req = SolveRequest(rid=rid, b=arr, tol=float(tol),
-                           max_restarts=int(max_restarts))
+                           max_restarts=int(max_restarts),
+                           tol_abs_override=tol_abs)
         if wait:
-            ok = self.ingress.backpressured_push(
-                req, clock=self._clock, sleep=self._sleep, max_wait=max_wait)
+            deadline = self._clock() + max_wait
+            while self.ingress.full and self._clock() < deadline:
+                depth = len(self.ingress)
+                self.step()              # we are our own consumer
+                if len(self.ingress) >= depth:
+                    # Tick freed no headroom (lanes mid-solve, backlog
+                    # full): yield real time toward the deadline.
+                    self._sleep(0.01)
+            ok = self.ingress.push(req)
         else:
             ok = self.ingress.push(req)
         if not ok:
@@ -119,15 +139,14 @@ class SolverServer:
         self.state, placed = sched.pack(self.state)
         if not placed:
             return
-        b_host = np.array(self._b)     # np.array, not asarray: device
-        x_host = np.array(self._x)     # buffers give read-only views
-        for lane, req in placed:
-            b_host[lane] = req.b
-            x_host[lane] = 0.0
-            self._tol_abs[lane] = req.tol_abs
+        # Row-wise device updates: only the refilled lanes move — the
+        # resident lanes' b/x never round-trip through the host.
         dt = self._b.dtype
-        self._b = jnp.asarray(b_host, dt)
-        self._x = jnp.asarray(x_host, dt)
+        for lane, req in placed:
+            self._b = self._b.at[lane].set(jnp.asarray(req.b, dt))
+            self._x = self._x.at[lane].set(0.0)
+            self._tol_abs[lane] = req.tol_abs
+            self._inner[lane] = 0
 
     def step(self) -> List[sched.Retirement]:
         """ONE scheduler tick: admit, pack, cycle, retire.  Returns the
@@ -139,9 +158,10 @@ class SolverServer:
         active = np.array([not ln.idle for ln in self.state.lanes])
         if not active.any():
             return []
-        x, beta, _inner = self.handle.cycle(
+        x, beta, inner = self.handle.cycle(
             self._b, self._x, np.where(active, self._tol_abs, 0.0), active)
         self._x = x
+        self._inner += np.where(active, np.asarray(inner), 0)
         self.state, retired = sched.retire(self.state, np.asarray(beta))
         if retired:
             x_host = np.asarray(self._x)
@@ -151,7 +171,7 @@ class SolverServer:
                     rid=r.req.rid, status=status,
                     x=x_host[r.lane].copy(), residual=r.residual,
                     restarts=r.restarts,
-                    inner_steps=r.restarts * self.handle.m)
+                    inner_steps=int(self._inner[r.lane]))
         self._wall = self._clock() - self._t0
         return retired
 

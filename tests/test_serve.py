@@ -387,7 +387,60 @@ def test_handle_key_fields():
     op = _dense_op(n=24)
     assert operator_fmt(op) == "dense"
     h = HandleCache().get(op, m=8, k=3, dtype=jnp.float32)
-    assert h.key == (24, "dense", 8, 3, "float32")
+    assert (h.key.n, h.key.fmt, h.key.m, h.key.k, h.key.dtype) == (
+        24, "dense", 8, 3, "float32")
+    # Identity half of the key: which system this compiled cycle solves.
+    assert h.key.gs == "cgs2"
+    assert h.key.op_token == id(op) and h.key.precond_token == 0
+
+
+def test_handle_cache_never_crosses_operators():
+    """Two same-shaped operators through ONE shared cache must get two
+    handles — the handle jit-closes over the concrete A, so a shape-only
+    key would silently solve the first server's system for the second."""
+    from repro.serve import HandleCache
+    cache = HandleCache(maxsize=4)
+    op1, op2 = _dense_op(n=32, seed=0), _dense_op(n=32, seed=1)
+    h1 = cache.get(op1, m=8, k=2)
+    h2 = cache.get(op2, m=8, k=2)         # same (n, fmt, m, k, dtype)
+    assert h1 is not h2 and h1.op is op1 and h2.op is op2
+    assert cache.get(op1, m=8, k=2) is h1  # identity hit still works
+    assert cache.stats()["misses"] == 2 and cache.stats()["hits"] == 1
+
+
+def test_handle_cache_keyed_by_gs_and_precond():
+    from repro.serve import HandleCache
+    cache = HandleCache(maxsize=8)
+    op = _dense_op(n=32)
+    h1 = cache.get(op, m=8, k=2, gs="cgs2")
+    h2 = cache.get(op, m=8, k=2, gs="mgs")
+    jacobi = lambda v: v * 0.5
+    h3 = cache.get(op, m=8, k=2, gs="cgs2", precond=jacobi)
+    assert len({id(h1), id(h2), id(h3)}) == 3
+    assert h3.precond is jacobi           # strong ref keeps token valid
+
+
+def test_shared_cache_servers_solve_their_own_systems():
+    """The review scenario end-to-end: two servers over same-shaped but
+    DIFFERENT operators sharing one HandleCache; each result must match
+    a standalone solve of its own system."""
+    import jax.numpy as jnp
+    from repro.core.gmres import gmres
+    from repro.serve import HandleCache, SolverServer
+    cache = HandleCache(maxsize=4)
+    n = 48
+    op1, op2 = _dense_op(n=n, seed=3), _dense_op(n=n, seed=4)
+    s1 = SolverServer(op1, m=12, k=2, handle_cache=cache)
+    s2 = SolverServer(op2, m=12, k=2, handle_cache=cache)
+    assert s1.handle is not s2.handle
+    b = _rhs(n, 11)
+    r1, r2 = s1.submit(b, tol=1e-6), s2.submit(b, tol=1e-6)
+    s1.run(), s2.run()
+    for srv, rid, op in ((s1, r1, op1), (s2, r2, op2)):
+        ref = gmres(op, jnp.asarray(b, jnp.float32), m=12, tol=1e-6,
+                    max_restarts=50)
+        err = np.linalg.norm(srv.results[rid].x - np.asarray(ref.x))
+        assert err / np.linalg.norm(np.asarray(ref.x)) < 1e-3
 
 
 def test_handle_block_shape_validated():
@@ -518,6 +571,78 @@ def test_server_blocking_submit_waits_for_drain():
     srv.run()
     assert srv.results[r1].status == DONE
     assert srv.results[r2].status == DONE
+
+
+def test_server_blocking_submit_self_drains_single_threaded():
+    """wait=True with the REAL clock and no helper hooks: the server is
+    single-threaded, so the wait loop itself must tick the scheduler to
+    free queue depth — nothing else ever pops the ingress.  (A plain
+    blocking push would burn the whole max_wait and reject.)"""
+    import time
+    n = 48
+    op, srv = _server(n=n, k=2, queue_depth=1)
+    r1 = srv.submit(_rhs(n, 0), tol=1e-2)
+    t0 = time.monotonic()
+    r2 = srv.submit(_rhs(n, 1), tol=1e-2, wait=True, max_wait=30.0)
+    assert srv.results.get(r2) is None     # admitted, not rejected
+    assert time.monotonic() - t0 < 25.0    # did not just sleep out max_wait
+    srv.run()
+    assert srv.results[r1].status == DONE
+    assert srv.results[r2].status == DONE
+
+
+def test_submit_quantizes_tol_abs_to_handle_dtype():
+    """Host retirement and the compiled (float32) cycle must agree on
+    'converged': the admitted request carries tol_abs rounded to the
+    handle's compute dtype, not the raw float64 product."""
+    n = 48
+    op, srv = _server(n=n, k=2)
+    b = _rhs(n, 5)
+    srv.submit(b, tol=1e-3)
+    raw = 1e-3 * np.linalg.norm(b)                  # float64 threshold
+    req = srv.ingress.peek()
+    assert req.tol_abs == float(np.float32(raw))
+    assert req.tol_abs != raw                       # quantization happened
+
+
+def test_inner_steps_reports_actual_arnoldi_work():
+    """A loose-tolerance solve converges mid-cycle: the outcome must
+    carry the per-lane Arnoldi count from the cycle, not restarts*m
+    (which overstates the work of every early-stopping lane)."""
+    n, m = 48, 12
+    op, srv = _server(n=n, k=2, m=m)
+    rid = srv.submit(_rhs(n, 3), tol=1e-1, max_restarts=40)
+    srv.run()
+    out = srv.results[rid]
+    assert out.status == DONE
+    assert 1 <= out.inner_steps <= out.restarts * m
+    assert out.inner_steps < out.restarts * m       # stopped mid-cycle
+
+
+def test_pack_loads_only_refilled_rows():
+    """_pack writes the placed lanes' rows in place (b set, x zeroed,
+    inner counter reset) and leaves resident rows untouched on device."""
+    n = 48
+    op, srv = _server(n=n, k=3)
+    marker = np.full(n, 7.0)
+    srv._x = srv._x.at[2].set(99.0)        # pretend lane 2 is mid-solve
+    srv._b = srv._b.at[2].set(marker)
+    srv._inner[2] = 5
+    st, _ = sched.admit(srv.state, _req(0, n=n))
+    srv.state, _ = sched.admit(st, _req(1, n=n))
+    # Occupy lane 2 first so pack only places lanes 0 and 1.
+    lanes = list(srv.state.lanes)
+    lanes[2] = sched.Lane(req=_req(9, n=n), restarts=1)
+    import dataclasses as dc
+    srv.state = dc.replace(srv.state, lanes=tuple(lanes))
+    srv._pack()
+    b_host, x_host = np.asarray(srv._b), np.asarray(srv._x)
+    np.testing.assert_allclose(b_host[0], np.ones(n), rtol=1e-6)
+    np.testing.assert_allclose(x_host[:2], 0.0)
+    assert srv._inner[0] == 0 and srv._inner[1] == 0
+    np.testing.assert_allclose(b_host[2], marker)   # resident lane kept
+    np.testing.assert_allclose(x_host[2], 99.0)
+    assert srv._inner[2] == 5
 
 
 def test_server_empty_run_is_noop():
