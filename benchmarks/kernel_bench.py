@@ -787,6 +787,104 @@ def solver_serve_rows(cases=((160, 8, 10, 32), (160, 4, 10, 16),
             os.environ["REPRO_KERNELS"] = forced
 
 
+def recovery_rows(cases=((96, 4), (256, 8))):
+    """Self-healing solver rows: fault-free overhead + recovery parity.
+
+    Each case solves one convection-diffusion system four ways and
+    reports DETERMINISTIC cycle counts (never wall time — the gate must
+    not flake in CI):
+
+      restarts_plain        plain fused ``gmres`` — the baseline,
+      cycles_fault_free     ``gmres_self_healing`` with nothing armed —
+                            must take the fused fast path, so its
+                            committed-cycle count IS the baseline's,
+      cycles_stepped        an armed-but-never-firing schedule forces the
+                            cycle-stepped loop; it commits exactly the
+                            cycles the fused while_loop would,
+      restarts_recovered    a NaN injected into the first cycle: the
+                            ladder discards it, re-runs one rung down,
+                            and the recovered solve's restart count must
+                            stay within +1 of fault-free.
+
+    The acceptance contract (tools/bench_gate.py rule 5): both overhead
+    ratios <= 1.02 and ``recovery_extra_restarts`` <= 1.  ``us`` times
+    the fault-free self-healing call; ``us_plain`` the plain solve —
+    informational, the gate only reads the cycle counts.
+    """
+    from repro.core import operators
+    from repro.core.gmres import gmres
+    from repro.core.recovery import gmres_self_healing
+    from repro.runtime import faultinject
+
+    forced = os.environ.get("REPRO_KERNELS")
+    if MODE == "modeled":
+        os.environ["REPRO_KERNELS"] = "ref"
+    try:
+        rows = []
+        for n, m in cases:
+            op = operators.DenseOperator(
+                operators.convection_diffusion(n, beta=0.4))
+            rng = np.random.default_rng(0)
+            b = jnp.asarray(rng.standard_normal(n), jnp.float32)
+            tol = 1e-5
+
+            plain = lambda: np.asarray(gmres(
+                op, b, m=m, tol=tol, max_restarts=100,
+                gs="cgs2_pipelined").x)
+            t_plain = _time(plain, repeats=2)
+            ref_res = gmres(op, b, m=m, tol=tol, max_restarts=100,
+                            gs="cgs2_pipelined")
+            assert bool(ref_res.converged), f"recovery bench case n={n} " \
+                                            f"m={m} did not converge"
+            r0 = int(ref_res.restarts)
+
+            heal = lambda: np.asarray(gmres_self_healing(
+                op, b, m=m, tol=tol, max_restarts=100)[0].x)
+            t_heal = _time(heal, repeats=2)
+            res_ff, rep_ff = gmres_self_healing(op, b, m=m, tol=tol,
+                                                max_restarts=100)
+            assert rep_ff.fast_path, "fault-free solve left the fast path"
+            c_ff = rep_ff.cycles
+
+            with faultinject.inject("core.cycle", at=10 ** 9):
+                res_st, rep_st = gmres_self_healing(op, b, m=m, tol=tol,
+                                                    max_restarts=100)
+            c_st = rep_st.cycles
+
+            with faultinject.inject("core.cycle_nan", at=0):
+                res_rec, rep_rec = gmres_self_healing(op, b, m=m, tol=tol,
+                                                      max_restarts=100)
+            assert bool(res_rec.converged), "injected solve did not recover"
+            r2 = int(res_rec.restarts)
+
+            rows.append({
+                "name": f"recovery_selfheal_n{n}_m{m}",
+                "us": t_heal * 1e6,
+                "us_plain": t_plain * 1e6,
+                "restarts_plain": r0,
+                "cycles_fault_free": c_ff,
+                "cycles_stepped": c_st,
+                "overhead_ratio": c_ff / r0,
+                "stepped_overhead_ratio": c_st / r0,
+                "restarts_recovered": r2,
+                "recovery_extra_restarts": r2 - r0,
+                "stepdowns_recovered": rep_rec.stepdowns,
+                "derived": (f"fastpath_cycles={c_ff}=={r0}plain "
+                            f"stepped_cycles={c_st} "
+                            f"recovered_restarts={r2} ({r2 - r0:+d}) "
+                            f"stepdowns={rep_rec.stepdowns} "
+                            f"selfheal/plain_wall="
+                            f"{t_heal / max(t_plain, 1e-12):.2f}"),
+            })
+        return _tag(rows)
+    finally:
+        faultinject.reset()
+        if forced is None:
+            os.environ.pop("REPRO_KERNELS", None)
+        else:
+            os.environ["REPRO_KERNELS"] = forced
+
+
 def _validate_rows(rows):
     """Schema guard (what the CI smoke run asserts): every row carries the
     universal keys, names are unique, traffic rows have both byte counts,
@@ -825,13 +923,14 @@ def main(json_path: str = "BENCH_kernels.json", smoke: bool = False,
                 + precision_restart_rows(grids=((16, 16),), dense_ns=(),
                                          tol=1e-3)
                 + solver_serve_rows(cases=((64, 4, 8, 8),))
+                + recovery_rows(cases=((96, 4),))
                 + attention_rows(cases=((1, 2, 2, 256, 64),)))
     else:
         rows = (matvec_rows() + gs_rows() + fused_step_rows()
                 + block_matvec_rows() + spmv_rows() + sstep_powers_rows()
                 + block_gs_rows() + sharded_rows() + pipelined_rows()
                 + precision_restart_rows() + solver_serve_rows()
-                + attention_rows())
+                + recovery_rows() + attention_rows())
     for r in rows:
         r.setdefault("mode", MODE)
     _validate_rows(rows)

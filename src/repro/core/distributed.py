@@ -36,7 +36,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.core import operators as op_mod
-from repro.core.gmres import gmres, GmresResult
+from repro.core.gmres import Diagnostics, gmres, GmresResult
 from repro.core.sstep import gmres_sstep
 from repro.kernels import tuning
 
@@ -95,9 +95,15 @@ def _run_sharded(mesh: Mesh, axis: str, op, b, x0, caller: str, body):
             x_full = lax.all_gather(res.x, axis, tiled=True)
             return res._replace(x=x_full)
 
+    # Mirrors GmresResult's pytree EXACTLY (including Diagnostics): a new
+    # result field needs a replicated spec here or shard_map rejects the
+    # body's output.  Everything but x is replicated scalars/rings — the
+    # psum-completed betas are identical on every shard.
     out_specs = GmresResult(
         x=P(), residual=P(), restarts=P(), converged=P(), inner_steps=P(),
         done=P(),
+        diagnostics=Diagnostics(status=P(), residual_history=P(),
+                                history_len=P()),
     )
     fn = compat.shard_map(
         solve_local,

@@ -45,6 +45,63 @@ from repro.core.operators import (EXPLICIT_OPERATORS, DenseOperator,
                                   as_operator)
 
 
+# --------------------------------------------------------------------------
+# Cycle-level health taxonomy (the detection layer of core/recovery.py's
+# degradation ladder; see docs/robustness.md).  Codes are int32 so the
+# classification runs inside jit and crosses shard_map as a replicated
+# scalar.
+# --------------------------------------------------------------------------
+HEALTHY = 0     # converging (or already converged)
+NAN_INF = 1     # residual left the reals — poisoned arithmetic
+STAGNATED = 2   # no meaningful decrease across the history window
+BREAKDOWN = 3   # residual GREW across a cycle (orthogonalization collapse)
+STATUS_NAMES = ("HEALTHY", "NAN_INF", "STAGNATED", "BREAKDOWN")
+
+# Scale-relative thresholds, matching the repo's invariance contract
+# (c·A, c·b must classify identically to A, b — both are pure ratios).
+BREAKDOWN_GROWTH = 10.0    # beta_k > 10 * beta_{k-1}  ->  BREAKDOWN
+STAGNATION_RTOL = 0.99     # beta_k >= 0.99 * beta_{k-window}  ->  STAGNATED
+
+
+class Diagnostics(NamedTuple):
+    """Post-solve health report attached to ``GmresResult.diagnostics``.
+
+    ``residual_history`` is a bounded ring of TRUE per-cycle residual norms
+    in chronological order — oldest first, current residual last, ``inf``
+    padding on the left until the window fills.  Entry 0 of a full window is
+    the residual ``window - 1`` cycles ago; the seed entry is ``||b - A
+    x0||`` so examples get a convergence trace without re-solving.
+    """
+    status: jax.Array            # int32: HEALTHY / NAN_INF / ...
+    residual_history: jax.Array  # (window,) chronological, inf-padded
+    history_len: jax.Array       # int32: valid trailing entries
+
+
+def classify_residuals(history, *, converged) -> jax.Array:
+    """Classify a residual-history ring into a health status code.
+
+    Pure and jit-safe; ``history`` is the chronological inf-padded ring
+    described on ``Diagnostics`` (last entry = current residual).  The
+    priority order NAN_INF > BREAKDOWN > STAGNATED matters: a NaN residual
+    also fails the growth compare, and a breakdown window is trivially
+    stagnant.  A converged solve is HEALTHY regardless of its path.
+    """
+    history = jnp.asarray(history)
+    last = history[-1]
+    prev = history[-2] if history.shape[0] > 1 else last
+    oldest = history[0]
+    nan_inf = jnp.logical_not(jnp.isfinite(last))
+    breakdown = (jnp.isfinite(prev) & (last > BREAKDOWN_GROWTH * prev)
+                 & jnp.logical_not(converged))
+    stagnated = (jnp.isfinite(oldest) & (last >= STAGNATION_RTOL * oldest)
+                 & jnp.logical_not(converged))
+    code = jnp.where(
+        nan_inf, NAN_INF,
+        jnp.where(breakdown, BREAKDOWN,
+                  jnp.where(stagnated, STAGNATED, HEALTHY)))
+    return code.astype(jnp.int32)
+
+
 class GmresResult(NamedTuple):
     x: jax.Array
     residual: jax.Array      # final true residual norm ||b - A x||
@@ -56,6 +113,16 @@ class GmresResult(NamedTuple):
     # retired-converged vs retired-FAILED — the distinction the serving
     # layer (repro/serve) keys lane retirement on.
     done: jax.Array = None
+    # Cycle-level health report (``Diagnostics``) for the scalar solvers
+    # (``gmres`` / ``gmres_sstep``); None on the batched path, where the
+    # serving layer owns per-lane health.
+    diagnostics: Optional[Diagnostics] = None
+
+    @property
+    def residual_history(self):
+        """Convergence trace shortcut: ``diagnostics.residual_history``."""
+        return None if self.diagnostics is None \
+            else self.diagnostics.residual_history
 
 
 class _CycleState(NamedTuple):
@@ -333,6 +400,7 @@ def gmres(
     precond: Optional[Callable] = None,
     axis_name: Optional[str] = None,
     compute_dtype=None,
+    history: int = 8,
 ) -> GmresResult:
     """Right-preconditioned restarted GMRES(m).
 
@@ -372,8 +440,13 @@ def gmres(
         On the ``gs="fused"`` path a compute dtype narrower than A's
         storage also downcasts the A STREAM (tiles enter the kernel at the
         narrow width, accumulate f32 in-register).
+      history: length of the bounded per-cycle residual-history ring kept
+        on ``result.diagnostics`` (static).  Doubles as the stagnation
+        window: STAGNATED means the residual failed to drop by at least
+        ``1 - STAGNATION_RTOL`` across the last ``history`` cycles.
 
-    Returns GmresResult; residual is the TRUE residual recomputed from x.
+    Returns GmresResult; residual is the TRUE residual recomputed from x,
+    ``diagnostics`` the cycle-level health report (see ``Diagnostics``).
     """
     matvec = as_operator(a)
     if x0 is None:
@@ -401,13 +474,16 @@ def gmres(
         return r, arnoldi.norm(r, axis_name)
 
     r0, beta0 = resid_of(x0)
+    # Bounded residual-history ring, chronological with inf padding on the
+    # left; seeded with ||b - A x0|| so the trace starts at cycle 0.
+    hist0 = jnp.full((history,), jnp.inf, beta0.dtype).at[-1].set(beta0)
 
     def cond(carry):
-        _, _, beta, k, _ = carry
+        _, _, beta, k, _, _ = carry
         return (beta > tol_abs) & (k < max_restarts)
 
     def body(carry):
-        x, r, beta, k, steps = carry
+        x, r, beta, k, steps, hist = carry
         if pipelined:
             x, inner = _gmres_cycle_pipelined(
                 op_fn, update_fn, x, r, beta, m, tol_abs, precond,
@@ -417,15 +493,23 @@ def gmres(
                 step_fn, x, r, beta, m, tol_abs, precond, basis_dtype
             )
         r, beta = resid_of(x)
-        return x, r, beta, k + 1, steps + inner
+        hist = jnp.roll(hist, -1).at[-1].set(beta)
+        return x, r, beta, k + 1, steps + inner, hist
 
-    x, r, beta, k, steps = lax.while_loop(
-        cond, body, (x0, r0, beta0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    x, r, beta, k, steps, hist = lax.while_loop(
+        cond, body,
+        (x0, r0, beta0, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+         hist0),
     )
     converged = beta <= tol_abs
+    diags = Diagnostics(
+        status=classify_residuals(hist, converged=converged),
+        residual_history=hist,
+        history_len=jnp.minimum(k + 1, history).astype(jnp.int32),
+    )
     return GmresResult(
         x=x, residual=beta, restarts=k, converged=converged, inner_steps=steps,
-        done=converged | (k >= max_restarts),
+        done=converged | (k >= max_restarts), diagnostics=diags,
     )
 
 

@@ -80,7 +80,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import arnoldi, givens
-from repro.core.gmres import GmresResult
+from repro.core.gmres import Diagnostics, GmresResult, classify_residuals
 from repro.core.operators import BandedOperator, DenseOperator, as_operator
 
 
@@ -320,7 +320,7 @@ def _block_step(powers_fn, gs_pass, v_basis, h, k_start: int, s: int, eps,
 def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
                 tol: float = 1e-5, max_restarts: int = 30,
                 axis_name: Optional[str] = None,
-                gs: str = "cgs2") -> GmresResult:
+                gs: str = "cgs2", history: int = 8) -> GmresResult:
     """Restarted s-step GMRES(m = s * blocks).
 
     ``a`` may be any operator ``gmres`` accepts; ``BandedOperator`` /
@@ -391,19 +391,29 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
         return x + y @ v[:m, :n]
 
     def cond(carry):
-        _, beta, it = carry
+        _, beta, it, _ = carry
         return (beta > tol_abs) & (it < max_restarts)
 
     def body(carry):
-        x, _, it = carry
+        x, _, it, hist = carry
         x = cycle(x)
         beta = arnoldi.norm(b - matvec(x), axis_name)
-        return x, beta, it + 1
+        hist = jnp.roll(hist, -1).at[-1].set(beta)
+        return x, beta, it + 1, hist
 
     beta0 = arnoldi.norm(b - matvec(x0), axis_name)
-    x, beta, it = lax.while_loop(
-        cond, body, (x0, beta0, jnp.zeros((), jnp.int32)))
+    # Same bounded residual ring as ``gmres`` (see core/gmres.Diagnostics):
+    # chronological, inf left-padding, seeded with the entry residual.
+    hist0 = jnp.full((history,), jnp.inf, beta0.dtype).at[-1].set(beta0)
+    x, beta, it, hist = lax.while_loop(
+        cond, body, (x0, beta0, jnp.zeros((), jnp.int32), hist0))
     converged = beta <= tol_abs
+    diags = Diagnostics(
+        status=classify_residuals(hist, converged=converged),
+        residual_history=hist,
+        history_len=jnp.minimum(it + 1, history).astype(jnp.int32),
+    )
     return GmresResult(x=x, residual=beta, restarts=it, converged=converged,
                        inner_steps=it * m,
-                       done=converged | (it >= max_restarts))
+                       done=converged | (it >= max_restarts),
+                       diagnostics=diags)

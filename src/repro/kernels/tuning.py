@@ -60,14 +60,47 @@ def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
+# Kernel execution modes, fastest first.  ``KERNEL_MODE_LADDER`` is the
+# degradation order the recovery layer (core/recovery.py) steps down when a
+# kernel-backed cycle faults: compiled Pallas -> the (slow, bit-accurate)
+# interpreter -> the pure-jnp reference.
+KERNEL_MODE_LADDER = ("compiled", "interpret", "ref")
+
+_FORCED_MODE: list = []   # stack; trace-time static, like shard_context
+
+
+@contextlib.contextmanager
+def force_kernel_mode(mode: str):
+    """Pin ``kernel_mode()`` for code traced inside (trace-time static).
+
+    This is the recovery ladder's kernel-stack rung control: re-tracing a
+    cycle under ``force_kernel_mode("interpret")`` / ``("ref")`` steps the
+    solve down to a slower-but-safer execution mode WITHOUT touching the
+    ``REPRO_KERNELS`` environment (which stays the process-wide default).
+    Takes precedence over the env override; nests like ``shard_context``.
+    """
+    if mode not in KERNEL_MODE_LADDER:
+        raise ValueError(f"unknown kernel mode {mode!r}; "
+                         f"options: {list(KERNEL_MODE_LADDER)}")
+    _FORCED_MODE.append(mode)
+    try:
+        yield
+    finally:
+        _FORCED_MODE.pop()
+
+
 def kernel_mode() -> str:
     """Execution mode for kernel-backed solver paths (trace-time static).
 
     Shard-agnostic on purpose: a row-sharded trace keeps its "compiled" /
     "interpret" mode and dispatch sites consult ``shard_axis()`` to pick
     the per-shard (split-phase / halo) kernel variants — sharding changes
-    WHICH kernel runs, not WHETHER kernels run.
+    WHICH kernel runs, not WHETHER kernels run.  An ambient
+    ``force_kernel_mode`` context (the recovery ladder) outranks the
+    ``REPRO_KERNELS`` env override.
     """
+    if _FORCED_MODE:
+        return _FORCED_MODE[-1]
     forced = os.environ.get("REPRO_KERNELS")
     if forced in ("ref", "interpret", "compiled"):
         return forced

@@ -1,0 +1,174 @@
+"""Deterministic fault injection for the recovery stack.
+
+PR 7 proved faults could be *injected* ad hoc (dispatch spies, NaN
+admission, booby-trapped kernels); this module generalizes that into one
+site-keyed, replayable schedule so every recovery path — the degradation
+ladder in ``core/recovery.py``, lane quarantine and the circuit breaker in
+``serve/server.py`` — is driven by scripted faults in tests, benches and
+CI.
+
+A *site* is a string naming an instrumented point in the stack; the code
+at that point calls ``fire(site, index)`` (or ``check``, the raising
+variant) with a deterministic index — the scheduler tick or the restart
+cycle count.  A fault fires when an active schedule entry matches the
+site and index; entries are consumed (``times`` firings, default 1), so a
+retry of the same tick/cycle succeeds — exactly the transient-fault shape
+the ladder's bounded-retry path is built for.
+
+Two ways to schedule faults, composable:
+
+  env         ``REPRO_FAULT="serve.cycle:3,core.cycle_nan:1:2"`` —
+              ``site:index[:times]``; ``index='*'`` matches any index,
+              ``times='*'`` never exhausts.  Parsed lazily once per
+              process; ``reset()`` re-arms it (tests).
+  context     ``with faultinject.inject("core.cycle", at=2): ...`` —
+              scoped, stacked, independent of the env schedule.
+
+The registry below names every instrumented site; ``tools/faultinject.py``
+is the CLI shim that validates a schedule and execs a command under it.
+Everything here is host-side Python — no jax dependency, importable
+anywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Dict, List, Optional
+
+# Registered injection sites -> where the index comes from.  Sites live at
+# HOST-side seams (around jitted calls, never inside a trace) so firing is
+# deterministic and replayable regardless of backend.
+SITES = {
+    "serve.cycle": "raise in SolverServer.step before the block cycle "
+                   "(index = scheduler tick)",
+    "serve.lane_nan": "poison the lowest-indexed active lane's iterate "
+                      "after the block cycle (index = scheduler tick)",
+    "core.cycle": "raise before a self-healing solve's restart cycle "
+                  "(index = committed cycle count)",
+    "core.cycle_nan": "poison a self-healing solve's cycle output with NaN "
+                      "(index = committed cycle count)",
+}
+
+
+class InjectedFault(RuntimeError):
+    """The scripted failure raised at raising sites (serve.cycle, ...)."""
+
+    def __init__(self, site: str, index: Optional[int] = None):
+        self.site = site
+        self.index = index
+        super().__init__(f"injected fault at {site}"
+                         + ("" if index is None else f" (index {index})"))
+
+
+# A schedule entry is a mutable [index_or_None, remaining_or_None] pair:
+# index None matches any index, remaining None never exhausts.
+_Entry = List[Optional[int]]
+
+_env_schedule: Optional[Dict[str, List[_Entry]]] = None   # lazy REPRO_FAULT
+_ctx_schedule: List[tuple] = []                           # (site, entry) stack
+fired: Dict[str, int] = {}                                # site -> count
+
+
+def parse_schedule(spec: str) -> Dict[str, List[_Entry]]:
+    """Parse ``site:index[:times],...`` into a schedule dict (validated)."""
+    sched: Dict[str, List[_Entry]] = {}
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        fields = part.split(":")
+        if len(fields) not in (2, 3):
+            raise ValueError(f"bad REPRO_FAULT entry {part!r}; expected "
+                             f"site:index[:times]")
+        site, idx = fields[0], fields[1]
+        if site not in SITES:
+            raise ValueError(f"unknown fault site {site!r}; options: "
+                             f"{sorted(SITES)}")
+        index = None if idx == "*" else int(idx)
+        times: Optional[int] = 1
+        if len(fields) == 3:
+            times = None if fields[2] == "*" else int(fields[2])
+        sched.setdefault(site, []).append([index, times])
+    return sched
+
+
+def _env() -> Dict[str, List[_Entry]]:
+    global _env_schedule
+    if _env_schedule is None:
+        spec = os.environ.get("REPRO_FAULT", "")
+        _env_schedule = parse_schedule(spec) if spec else {}
+    return _env_schedule
+
+
+def reset() -> None:
+    """Drop all consumed state and re-arm the env schedule (test hook)."""
+    global _env_schedule
+    _env_schedule = None
+    _ctx_schedule.clear()
+    fired.clear()
+
+
+def _try(entries: List[_Entry], index: Optional[int]) -> bool:
+    for entry in entries:
+        want, remaining = entry
+        if remaining is not None and remaining <= 0:
+            continue
+        if want is not None and index is not None and want != index:
+            continue
+        if remaining is not None:
+            entry[1] = remaining - 1
+        return True
+    return False
+
+
+def fire(site: str, index: Optional[int] = None) -> bool:
+    """True if a scheduled fault fires at (site, index); consumes the entry.
+
+    Context-manager schedules are consulted innermost-first, then the env
+    schedule — so a test's scoped injection wins over an ambient CI
+    schedule without disturbing it.
+    """
+    for ctx_site, entry in reversed(_ctx_schedule):
+        if ctx_site == site and _try([entry], index):
+            fired[site] = fired.get(site, 0) + 1
+            return True
+    if _try(_env().get(site, []), index):
+        fired[site] = fired.get(site, 0) + 1
+        return True
+    return False
+
+
+def armed(*sites: str) -> bool:
+    """True if any unexhausted schedule entry targets one of ``sites``.
+
+    Non-consuming.  The self-healing solver's fused fast path checks this:
+    a fast-path solve never visits the per-cycle sites, so an armed
+    schedule forces the cycle-stepped loop — otherwise
+    ``REPRO_FAULT=core.cycle:2`` would silently inject nothing.
+    """
+    live = lambda e: e[1] is None or e[1] > 0
+    for ctx_site, entry in _ctx_schedule:
+        if ctx_site in sites and live(entry):
+            return True
+    return any(live(e) for s in sites for e in _env().get(s, []))
+
+
+def check(site: str, index: Optional[int] = None) -> None:
+    """Raising variant of ``fire`` for sites that model a crashed call."""
+    if fire(site, index):
+        raise InjectedFault(site, index)
+
+
+@contextlib.contextmanager
+def inject(site: str, at: Optional[int] = None, times: Optional[int] = 1):
+    """Scoped schedule entry: fire at ``(site, at)`` up to ``times`` times.
+
+    ``at=None`` matches any index; ``times=None`` never exhausts.  Yields
+    the live entry so callers can inspect how much of it was consumed.
+    """
+    if site not in SITES:
+        raise ValueError(f"unknown fault site {site!r}; options: "
+                         f"{sorted(SITES)}")
+    entry: _Entry = [at, times]
+    _ctx_schedule.append((site, entry))
+    try:
+        yield entry
+    finally:
+        _ctx_schedule.remove((site, entry))

@@ -11,14 +11,15 @@ from repro.serve.handles import (HandleCache, HandleKey, SolverHandle,
                                  operator_fmt)
 from repro.serve.queue import BackpressuredQueue
 from repro.serve.request import (DONE, FAILED, PENDING, REJECTED, RUNNING,
-                                 AdmissionError, SolveOutcome, SolveRequest,
-                                 validate_b)
+                                 TERMINAL, TIMEOUT, AdmissionError,
+                                 SolveOutcome, SolveRequest, validate_b,
+                                 validate_params)
 from repro.serve.server import SolverServer
 from repro.serve import scheduler
 
 __all__ = [
     "AdmissionError", "BackpressuredQueue", "DONE", "FAILED", "HandleCache",
     "HandleKey", "PENDING", "REJECTED", "RUNNING", "SolveOutcome",
-    "SolveRequest", "SolverHandle", "SolverServer", "operator_fmt",
-    "scheduler", "validate_b",
+    "SolveRequest", "SolverHandle", "SolverServer", "TERMINAL", "TIMEOUT",
+    "operator_fmt", "scheduler", "validate_b", "validate_params",
 ]

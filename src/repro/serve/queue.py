@@ -60,6 +60,11 @@ class BackpressuredQueue:
     def peek(self):
         return self._q[0] if self._q else None
 
+    @property
+    def items(self) -> tuple:
+        """Non-destructive FIFO-order snapshot (checkpointing)."""
+        return tuple(self._q)
+
     def wait_queue(self, max_depth: int, *, clock: Callable[[], float],
                    sleep: Callable[[float], None], poll: float = 0.01,
                    max_wait: float = 1.0) -> bool:

@@ -27,8 +27,9 @@ RUNNING = "running"      # packed into a lane
 DONE = "done"            # converged within its own tol
 FAILED = "failed"        # restart budget exhausted before convergence
 REJECTED = "rejected"    # refused at admission (invalid b or backpressure)
+TIMEOUT = "timeout"      # deadline_ticks expired before convergence
 
-TERMINAL = frozenset({DONE, FAILED, REJECTED})
+TERMINAL = frozenset({DONE, FAILED, REJECTED, TIMEOUT})
 
 
 class AdmissionError(ValueError):
@@ -39,15 +40,27 @@ class AdmissionError(ValueError):
         self.reason = reason
 
 
-def validate_b(b, n: Optional[int] = None) -> np.ndarray:
+def validate_b(b, n: Optional[int] = None, dtype=None) -> np.ndarray:
     """Admission gate for a right-hand side.
 
-    Raises :class:`AdmissionError` on non-finite entries or a shape that
-    cannot occupy a lane of the server's (k, n) block.  Returns the
-    validated vector as a host ndarray (the queue is host-side; device
-    transfer happens at pack time, once, for the whole lane block).
+    Raises :class:`AdmissionError` on non-finite entries, a shape that
+    cannot occupy a lane of the server's (k, n) block, or a dtype that
+    cannot represent a real right-hand side of the lane block (complex,
+    strings, objects — anything outside real floats/ints; the silent
+    jnp cast at pack time would truncate imaginary parts or crash the
+    tick loop).  Returns the validated vector as a host ndarray (the
+    queue is host-side; device transfer happens at pack time, once, for
+    the whole lane block).
     """
-    arr = np.asarray(b)
+    try:
+        arr = np.asarray(b)
+    except (ValueError, TypeError) as e:
+        raise AdmissionError(f"b is not array-like: {e}")
+    if not (np.issubdtype(arr.dtype, np.floating)
+            or np.issubdtype(arr.dtype, np.integer)):
+        raise AdmissionError(
+            f"b dtype {arr.dtype} cannot occupy a "
+            f"{np.dtype(dtype).name if dtype is not None else 'real'} lane")
     if arr.ndim != 1:
         raise AdmissionError(f"b must be 1-D, got shape {arr.shape}")
     if n is not None and arr.shape[0] != n:
@@ -55,6 +68,27 @@ def validate_b(b, n: Optional[int] = None) -> np.ndarray:
     if not np.all(np.isfinite(arr)):
         raise AdmissionError("b contains NaN/Inf")
     return arr
+
+
+def validate_params(tol: float, max_restarts: int,
+                    deadline_ticks: Optional[int] = None) -> None:
+    """Admission gate for the stopping contract itself.
+
+    A non-finite or non-positive ``tol`` can never be met (or is met
+    vacuously by garbage), a non-positive ``max_restarts`` lane would
+    retire FAILED before its first cycle, and a non-positive deadline
+    would TIMEOUT at admission — all of these used to poison a lane or
+    wedge the tick loop; now they are REJECTED before touching the queue.
+    """
+    tol = float(tol)
+    if not np.isfinite(tol) or tol <= 0.0:
+        raise AdmissionError(f"tol must be finite and > 0, got {tol}")
+    if int(max_restarts) < 1:
+        raise AdmissionError(
+            f"max_restarts must be >= 1, got {max_restarts}")
+    if deadline_ticks is not None and int(deadline_ticks) < 1:
+        raise AdmissionError(
+            f"deadline_ticks must be >= 1 (or None), got {deadline_ticks}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +99,13 @@ class SolveRequest:
     b: np.ndarray                 # validated, host-side (n,)
     tol: float = 1e-5             # relative: stop at ||r|| <= tol*||b||
     max_restarts: int = 50        # restart budget before FAILED retirement
+    # Wall-tick budget: TIMEOUT retirement after this many scheduler
+    # ticks IN A LANE (None = no deadline).  Counted per occupancy, so a
+    # retry-on-fresh-lane gets a fresh deadline like it gets a fresh x.
+    deadline_ticks: Optional[int] = None
+    # Times this request was requeued after a lane fault (quarantine
+    # path); bounded by the server's ``fault_retries``.
+    retries: int = 0
     # Retirement threshold quantized to the serving handle's compute
     # dtype (server.submit sets it).  Host retirement and the compiled
     # cycle's lane masking MUST compare against the SAME number: a raw
@@ -85,7 +126,7 @@ class SolveOutcome:
     """Terminal record handed back to the submitter."""
 
     rid: int
-    status: str                   # DONE / FAILED / REJECTED
+    status: str                   # DONE / FAILED / REJECTED / TIMEOUT
     x: Optional[np.ndarray] = None
     residual: float = float("inf")
     restarts: int = 0

@@ -35,7 +35,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple
 
-from repro.serve.request import DONE, FAILED, SolveRequest
+from repro.serve.request import DONE, FAILED, TIMEOUT, SolveRequest
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,9 +56,10 @@ class Retirement:
 
     lane: int
     req: SolveRequest
-    status: str                  # DONE or FAILED
+    status: str                  # DONE / FAILED / TIMEOUT
     residual: float
     restarts: int
+    reason: str = ""             # FAILED detail ("budget" / "lane fault" / ...)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,11 +70,19 @@ class SchedulerState:
     pending: Tuple[SolveRequest, ...] = ()
     max_pending: int = 64
     tick: int = 0                # completed cycle count
+    # Per-lane quarantine: a faulted lane sits out this many ticks before
+    # pack may refill it (its device rows may be poisoned; the host zeroes
+    # them, quarantine adds scheduling distance).  Empty tuple == no
+    # quarantine anywhere (init sizes it to k).
+    quarantine: Tuple[int, ...] = ()
     # Counters (the solver_serve_* metrics' raw material):
     admitted: int = 0
     rejected: int = 0
     retired_done: int = 0
     retired_failed: int = 0
+    retired_timeout: int = 0
+    lane_faults: int = 0         # lanes evicted by fault()
+    requeued: int = 0            # faulted occupants sent back to pending
     lane_cycles: int = 0         # sum of active lanes over all ticks
 
     @property
@@ -87,6 +96,9 @@ class SchedulerState:
     @property
     def idle_lanes(self) -> Tuple[int, ...]:
         return tuple(i for i, ln in enumerate(self.lanes) if ln.idle)
+
+    def quarantined(self, i: int) -> bool:
+        return bool(self.quarantine) and self.quarantine[i] > 0
 
     @property
     def busy(self) -> bool:
@@ -104,6 +116,7 @@ def init(k: int, max_pending: int = 64) -> SchedulerState:
     if k < 1:
         raise ValueError(f"need at least one lane, got k={k}")
     return SchedulerState(lanes=tuple(Lane() for _ in range(k)),
+                          quarantine=(0,) * k,
                           max_pending=int(max_pending))
 
 
@@ -134,7 +147,7 @@ def pack(state: SchedulerState) -> Tuple[SchedulerState,
     for i, ln in enumerate(lanes):
         if not backlog:
             break
-        if ln.idle:
+        if ln.idle and not state.quarantined(i):
             req = backlog.pop(0)
             lanes[i] = Lane(req=req, restarts=0)
             placed.append((i, req))
@@ -150,8 +163,12 @@ def retire(state: SchedulerState,
 
     ``residuals[i]`` is lane i's post-cycle ||b - A x|| (ignored for
     idle lanes).  A lane retires DONE at or under its own ``tol_abs``,
-    FAILED when its budget is spent — the failed lane frees JUST like a
-    converged one, so one hopeless request can never stall its cohort.
+    TIMEOUT when its ``deadline_ticks`` lane-tick budget expired (DONE
+    wins a tie: a request that converges ON its deadline tick converged),
+    FAILED when its restart budget is spent — any retirement frees the
+    lane NOW, so one hopeless or deadline-bound request can never stall
+    its cohort.  Quarantine countdowns decrement here too: one tick of
+    sit-out per cycle run.
     """
     if len(residuals) != state.k:
         raise ValueError(
@@ -165,23 +182,81 @@ def retire(state: SchedulerState,
         active += 1
         used = ln.restarts + 1
         beta = float(residuals[i])
+        reason = ""
         if beta <= ln.req.tol_abs:
             status = DONE
+        elif (ln.req.deadline_ticks is not None
+                and used >= ln.req.deadline_ticks):
+            status = TIMEOUT
+            reason = f"deadline: {used} >= {ln.req.deadline_ticks} ticks"
         elif used >= ln.req.max_restarts:
             status = FAILED
+            reason = "budget"
         else:
             lanes[i] = Lane(req=ln.req, restarts=used)
             continue
         retired.append(Retirement(lane=i, req=ln.req, status=status,
-                                  residual=beta, restarts=used))
+                                  residual=beta, restarts=used,
+                                  reason=reason))
         lanes[i] = Lane()
     ndone = sum(r.status == DONE for r in retired)
+    ntimeout = sum(r.status == TIMEOUT for r in retired)
+    quarantine = tuple(max(0, q - 1) for q in state.quarantine)
     return dataclasses.replace(
         state, lanes=tuple(lanes), tick=state.tick + 1,
+        quarantine=quarantine,
         lane_cycles=state.lane_cycles + active,
         retired_done=state.retired_done + ndone,
-        retired_failed=state.retired_failed + (len(retired) - ndone),
+        retired_timeout=state.retired_timeout + ntimeout,
+        retired_failed=state.retired_failed + (len(retired) - ndone
+                                               - ntimeout),
     ), retired
+
+
+def fault(state: SchedulerState, lane_indices,
+          *, quarantine_ticks: int = 2,
+          max_retries: int = 1) -> Tuple[SchedulerState,
+                                         List[SolveRequest],
+                                         List[Retirement]]:
+    """Evict faulted lanes: quarantine the lane, retry-or-fail the occupant.
+
+    ``lane_indices`` are lanes whose post-cycle state is poisoned (NaN/Inf
+    residual, injected corruption) as detected by the HOST — this is a
+    fault in the lane's execution, not a property of the request, so the
+    occupant deserves a retry on a FRESH lane: it goes back to the FRONT
+    of ``pending`` (it has waited longest) with ``retries + 1``, starting
+    over from x = 0.  An occupant already retried ``max_retries`` times
+    retires FAILED instead (reason "lane fault").  The lane itself sits
+    out ``quarantine_ticks`` retire-decrements before pack may reuse it.
+
+    Faulted lanes are freed BEFORE retire() runs this tick, so they are
+    charged no restart for the poisoned cycle.
+    """
+    lanes = list(state.lanes)
+    quarantine = list(state.quarantine or (0,) * state.k)
+    requeue: List[SolveRequest] = []
+    failed: List[Retirement] = []
+    for i in sorted(set(int(j) for j in lane_indices)):
+        ln = lanes[i]
+        quarantine[i] = max(quarantine[i], int(quarantine_ticks))
+        if ln.idle:
+            continue
+        lanes[i] = Lane()
+        req = ln.req
+        if req.retries < max_retries:
+            requeue.append(dataclasses.replace(req, retries=req.retries + 1))
+        else:
+            failed.append(Retirement(
+                lane=i, req=req, status=FAILED, residual=float("inf"),
+                restarts=ln.restarts,
+                reason=f"lane fault after {req.retries} retries"))
+    return dataclasses.replace(
+        state, lanes=tuple(lanes), quarantine=tuple(quarantine),
+        pending=tuple(requeue) + state.pending,
+        lane_faults=state.lane_faults + len(requeue) + len(failed),
+        requeued=state.requeued + len(requeue),
+        retired_failed=state.retired_failed + len(failed),
+    ), requeue, failed
 
 
 def metrics(state: SchedulerState) -> dict:
@@ -195,5 +270,9 @@ def metrics(state: SchedulerState) -> dict:
         "rejected": state.rejected,
         "retired_done": state.retired_done,
         "retired_failed": state.retired_failed,
+        "retired_timeout": state.retired_timeout,
+        "lane_faults": state.lane_faults,
+        "requeued": state.requeued,
+        "quarantined_lanes": sum(q > 0 for q in state.quarantine),
         "lane_cycles": state.lane_cycles,
     }

@@ -159,3 +159,59 @@ def test_serve_traffic_ratio_diffed_like_any_other():
     fails = bench_gate.check(cur, base, tol=0.05, min_pipeline_ratio=2.0,
                              serve_ideal_slack=1.25)
     assert any("traffic_ratio" in f for f in fails)
+
+
+GOOD_RECOVERY_ROW = {
+    "name": "recovery_selfheal_n96_m4",
+    "us": 100.0,
+    "restarts_plain": 45, "cycles_fault_free": 45, "cycles_stepped": 45,
+    "overhead_ratio": 1.0, "stepped_overhead_ratio": 1.0,
+    "restarts_recovered": 46, "recovery_extra_restarts": 1,
+    "stepdowns_recovered": 1,
+    "derived": "x", "mode": "modeled",
+}
+
+
+def test_recovery_row_clean_passes():
+    assert bench_gate.check(_payload([dict(GOOD_RECOVERY_ROW)]), None,
+                            tol=0.05, min_pipeline_ratio=2.0) == []
+
+
+def test_recovery_fault_free_overhead_fails():
+    row = dict(GOOD_RECOVERY_ROW, cycles_fault_free=47,
+               overhead_ratio=47 / 45)
+    fails = bench_gate.check(_payload([row]), None, tol=0.05,
+                             min_pipeline_ratio=2.0)
+    assert any("fault-free" in f and "overhead_ratio" in f for f in fails)
+
+
+def test_recovery_stepped_overhead_fails_independently():
+    row = dict(GOOD_RECOVERY_ROW, cycles_stepped=47,
+               stepped_overhead_ratio=47 / 45)
+    fails = bench_gate.check(_payload([row]), None, tol=0.05,
+                             min_pipeline_ratio=2.0)
+    assert any("stepped_overhead_ratio" in f for f in fails)
+
+
+def test_recovery_extra_restarts_beyond_one_fails():
+    row = dict(GOOD_RECOVERY_ROW, restarts_recovered=47,
+               recovery_extra_restarts=2)
+    fails = bench_gate.check(_payload([row]), None, tol=0.05,
+                             min_pipeline_ratio=2.0)
+    assert any("extra restarts" in f for f in fails)
+
+
+def test_recovery_fewer_restarts_than_plain_passes():
+    """A lower ladder rung may converge FASTER; negative deltas are fine."""
+    row = dict(GOOD_RECOVERY_ROW, restarts_recovered=43,
+               recovery_extra_restarts=-2)
+    assert bench_gate.check(_payload([row]), None, tol=0.05,
+                            min_pipeline_ratio=2.0) == []
+
+
+def test_recovery_overhead_slack_is_configurable():
+    row = dict(GOOD_RECOVERY_ROW, cycles_fault_free=47,
+               overhead_ratio=47 / 45)
+    assert bench_gate.check(_payload([row]), None, tol=0.05,
+                            min_pipeline_ratio=2.0,
+                            recovery_overhead_slack=1.05) == []

@@ -10,17 +10,32 @@ style of test_pipelined.py.
 import numpy as np
 import pytest
 
+from repro.runtime import faultinject
 from repro.serve import scheduler as sched
 from repro.serve.queue import BackpressuredQueue
-from repro.serve.request import (DONE, FAILED, REJECTED, AdmissionError,
-                                 SolveRequest, validate_b)
+from repro.serve.request import (DONE, FAILED, REJECTED, TIMEOUT,
+                                 AdmissionError, SolveRequest, validate_b,
+                                 validate_params)
 
 
-def _req(rid, n=4, tol=0.5, max_restarts=10, scale=1.0):
+@pytest.fixture(autouse=True)
+def _isolated_fault_schedule(monkeypatch):
+    """These tests assert exact counters, so an ambient REPRO_FAULT (the
+    CI injection leg) must not leak in; scoped injections via the context
+    manager are unaffected."""
+    monkeypatch.delenv("REPRO_FAULT", raising=False)
+    faultinject.reset()
+    yield
+    faultinject.reset()
+
+
+def _req(rid, n=4, tol=0.5, max_restarts=10, scale=1.0, deadline=None,
+         retries=0):
     """A tiny host-side request; tol_abs = tol * scale * 2 (||ones*scale||₂
     of n=4 is 2*scale) keeps scripted-residual arithmetic readable."""
     return SolveRequest(rid=rid, b=np.full(n, scale), tol=tol,
-                        max_restarts=max_restarts)
+                        max_restarts=max_restarts, deadline_ticks=deadline,
+                        retries=retries)
 
 
 # =====================================================================
@@ -203,6 +218,151 @@ def test_metrics_shape():
     assert m["occupancy"] == pytest.approx(0.5)
     assert set(m) >= {"admitted", "rejected", "retired_failed",
                       "lane_cycles"}
+
+
+# =====================================================================
+# Pure scheduler: deadlines, lane faults, quarantine (still no jax)
+# =====================================================================
+
+def test_retire_timeout_at_deadline():
+    st = sched.init(1)
+    st, _ = sched.admit(st, _req(0, tol=1e-9, max_restarts=10, deadline=3))
+    st, _ = sched.pack(st)
+    for _ in range(2):
+        st, retired = sched.retire(st, [9.0])
+        assert retired == []
+    st, retired = sched.retire(st, [9.0])
+    r = retired[0]
+    assert r.status == TIMEOUT and r.restarts == 3
+    assert "deadline" in r.reason
+    assert st.retired_timeout == 1 and st.retired_failed == 0
+
+
+def test_retire_done_wins_deadline_tie():
+    """A request that converges ON its deadline tick converged."""
+    st = sched.init(1)
+    st, _ = sched.admit(st, _req(0, tol=0.5, deadline=1))  # tol_abs = 1.0
+    st, _ = sched.pack(st)
+    st, retired = sched.retire(st, [0.5])
+    assert retired[0].status == DONE
+    assert st.retired_timeout == 0
+
+
+def test_timeout_deadline_before_budget():
+    """Deadline tighter than the restart budget: TIMEOUT, not FAILED."""
+    st = sched.init(1)
+    st, _ = sched.admit(st, _req(0, tol=1e-9, max_restarts=2, deadline=2))
+    st, _ = sched.pack(st)
+    st, _ = sched.retire(st, [9.0])
+    st, retired = sched.retire(st, [9.0])
+    assert retired[0].status == TIMEOUT    # deadline checked before budget
+
+
+def test_timeout_does_not_stall_cohort():
+    st = sched.init(2)
+    st, _ = sched.admit(st, _req(0, tol=1e-9, deadline=1))   # doomed
+    st, _ = sched.admit(st, _req(1))
+    st, _ = sched.admit(st, _req(2))
+    st, _ = sched.pack(st)
+    st, retired = sched.retire(st, [9.0, 9.0])
+    assert [(r.req.rid, r.status) for r in retired] == [(0, TIMEOUT)]
+    st, placed = sched.pack(st)            # the freed lane refills NOW
+    assert [(i, r.rid) for i, r in placed] == [(0, 2)]
+
+
+def test_fault_requeues_occupant_at_front_with_retry():
+    st = sched.init(2, max_pending=8)
+    st, _ = sched.admit(st, _req(0))
+    st, _ = sched.admit(st, _req(1))
+    st, _ = sched.admit(st, _req(2))       # waits in pending
+    st, _ = sched.pack(st)
+    st, requeued, failed = sched.fault(st, [1], quarantine_ticks=2,
+                                       max_retries=1)
+    assert failed == [] and [r.rid for r in requeued] == [1]
+    # Front of the queue (it has waited longest), retry count bumped.
+    assert [r.rid for r in st.pending] == [1, 2]
+    assert st.pending[0].retries == 1
+    assert st.lanes[1].idle and st.quarantine[1] == 2
+    assert st.lane_faults == 1 and st.requeued == 1
+
+
+def test_fault_exhausted_retries_fails():
+    st = sched.init(1)
+    st, _ = sched.admit(st, _req(0, retries=1))
+    st, _ = sched.pack(st)
+    st, requeued, failed = sched.fault(st, [0], max_retries=1)
+    assert requeued == []
+    assert failed[0].status == FAILED and "lane fault" in failed[0].reason
+    assert st.retired_failed == 1 and st.pending == ()
+
+
+def test_fault_quarantine_blocks_pack_then_decays():
+    st = sched.init(1, max_pending=8)
+    st, _ = sched.admit(st, _req(0))
+    st, _ = sched.pack(st)
+    st, requeued, _ = sched.fault(st, [0], quarantine_ticks=2)
+    st, placed = sched.pack(st)
+    assert placed == []                    # quarantined: sit out
+    st, _ = sched.retire(st, [9.0])        # decrement 2 -> 1
+    st, placed = sched.pack(st)
+    assert placed == []
+    st, _ = sched.retire(st, [9.0])        # 1 -> 0
+    st, placed = sched.pack(st)
+    assert [r.rid for _, r in placed] == [0]   # retry lands at last
+
+
+def test_fault_idle_lane_only_quarantines():
+    st = sched.init(2)
+    st, requeued, failed = sched.fault(st, [0])
+    assert requeued == [] and failed == []
+    assert st.quarantine[0] == 2 and st.lane_faults == 0
+
+
+def test_faulted_lane_not_charged_a_restart():
+    """fault() frees the lane BEFORE retire: the poisoned cycle costs the
+    occupant no budget, and its retry starts with restarts=0."""
+    st = sched.init(1)
+    st, _ = sched.admit(st, _req(0, max_restarts=3))
+    st, _ = sched.pack(st)
+    st, _ = sched.retire(st, [9.0])
+    assert st.lanes[0].restarts == 1
+    st, requeued, _ = sched.fault(st, [0])
+    assert requeued[0].retries == 1
+    # Requeued request's budget is untouched -- it restarts from x = 0.
+    assert requeued[0].max_restarts == 3
+
+
+# =====================================================================
+# Admission: solver-parameter validation
+# =====================================================================
+
+@pytest.mark.parametrize("tol", [0.0, -1.0, float("nan"), float("inf")])
+def test_validate_params_rejects_bad_tol(tol):
+    with pytest.raises(AdmissionError, match="tol"):
+        validate_params(tol, 10)
+
+
+@pytest.mark.parametrize("mr", [0, -3])
+def test_validate_params_rejects_bad_budget(mr):
+    with pytest.raises(AdmissionError, match="max_restarts"):
+        validate_params(1e-5, mr)
+
+
+def test_validate_params_rejects_bad_deadline():
+    with pytest.raises(AdmissionError, match="deadline"):
+        validate_params(1e-5, 10, deadline_ticks=0)
+    validate_params(1e-5, 10, deadline_ticks=None)   # None = no deadline
+    validate_params(1e-5, 10, deadline_ticks=1)
+
+
+def test_validate_b_rejects_non_real_dtypes():
+    with pytest.raises(AdmissionError, match="dtype"):
+        validate_b(np.array([1 + 2j, 3 + 4j]))
+    with pytest.raises(AdmissionError, match="dtype"):
+        validate_b(np.array(["a", "b"]))
+    with pytest.raises(AdmissionError, match="array-like"):
+        validate_b([[1.0, 2.0], [3.0]])    # ragged: not array-like
+    assert validate_b(np.array([1, 2, 3])).shape == (3,)   # ints are fine
 
 
 # =====================================================================
@@ -770,3 +930,205 @@ def test_kernel_path_used_when_it_fits(monkeypatch):
     srv.submit(_rhs(n, 0), tol=1e-3)
     srv.run()
     assert calls.get("batched_cgs2", 0) >= 1
+
+
+# =====================================================================
+# Self-healing server: deadlines, lane faults, breaker, checkpoint
+# =====================================================================
+
+def test_server_deadline_timeout_without_stalling_cohort():
+    """A hopeless-tolerance request with a 2-tick deadline retires
+    TIMEOUT at exactly that tick while its cohort converges normally."""
+    n = 48
+    op, srv = _server(n=n, k=4)
+    hard = srv.submit(_rhs(n, 0), tol=1e-14, max_restarts=50,
+                      deadline_ticks=2)
+    easy = [srv.submit(_rhs(n, i + 1), tol=1e-4, max_restarts=40)
+            for i in range(3)]
+    ticks = srv.run()
+    out = srv.results[hard]
+    assert out.status == TIMEOUT and out.restarts == 2
+    assert "deadline" in out.reason
+    assert np.isfinite(out.residual)       # carries the best-so-far x
+    for rid in easy:
+        assert srv.results[rid].status == DONE
+    assert ticks < 50                      # the doomed lane freed early
+    assert srv.metrics()["retired_timeout"] == 1
+
+
+def test_server_deadline_default_applies():
+    n = 48
+    op, srv = _server(n=n, k=2, deadline_default=1)
+    rid = srv.submit(_rhs(n, 0), tol=1e-14, max_restarts=50)
+    srv.run()
+    assert srv.results[rid].status == TIMEOUT
+
+
+def test_server_lane_nan_quarantines_and_retries():
+    """serve.lane_nan at tick 0 poisons one lane; the occupant must win
+    on a retry (fresh lane, fresh x) and every outcome still be DONE."""
+    n = 48
+    op, srv = _server(n=n, k=4, fault_retries=1, quarantine_ticks=2)
+    rids = [srv.submit(_rhs(n, i), tol=1e-4, max_restarts=40)
+            for i in range(4)]
+    with faultinject.inject("serve.lane_nan", at=0):
+        srv.run()
+    for rid in rids:
+        assert srv.results[rid].status == DONE, srv.results[rid]
+    m = srv.metrics()
+    assert m["lane_faults"] == 1 and m["requeued"] == 1
+    assert faultinject.fired.get("serve.lane_nan") == 1
+
+
+def test_server_lane_fault_exhausted_retries_fails():
+    n = 48
+    op, srv = _server(n=n, k=2, fault_retries=0)
+    rid = srv.submit(_rhs(n, 0), tol=1e-4)
+    with faultinject.inject("serve.lane_nan", times=1):
+        srv.run()
+    out = srv.results[rid]
+    assert out.status == FAILED and "lane fault" in out.reason
+
+
+def test_server_scrubs_poisoned_rows():
+    """After a lane fault the device blocks must be NaN-free: the next
+    cohort shares reductions with those rows."""
+    n = 48
+    op, srv = _server(n=n, k=2, fault_retries=1)
+    srv.submit(_rhs(n, 0), tol=1e-4)
+    with faultinject.inject("serve.lane_nan", at=0):
+        srv.step()
+    assert np.isfinite(np.asarray(srv._x)).all()
+    assert np.isfinite(np.asarray(srv._b)).all()
+    srv.run()                              # the retry still converges
+    assert srv.results[0].status == DONE
+
+
+def test_server_transient_cycle_fault_absorbed_by_retries():
+    """Two injected raises on the same tick are absorbed by in-tick
+    retries: no scheduler state is lost, the breaker stays closed."""
+    n = 48
+    op, srv = _server(n=n, k=2, cycle_retries=2)
+    rid = srv.submit(_rhs(n, 0), tol=1e-4)
+    with faultinject.inject("serve.cycle", at=0, times=2):
+        srv.run()
+    assert srv.results[rid].status == DONE
+    assert srv.cycle_faults == 2
+    assert srv.breaker.state == "closed"
+
+
+def test_server_breaker_death_fails_backlog_and_rejects():
+    """A permanent cycle fault trips the breaker to death; every queued
+    and in-flight request gets a terminal FAILED outcome (run() must NOT
+    wedge), and later submits are rejected while the handle is dead."""
+    n = 48
+    op, srv = _server(n=n, k=2, cycle_retries=0, breaker_threshold=2,
+                      breaker_cooldown=2, breaker_max_trips=1)
+    rids = [srv.submit(_rhs(n, i), tol=1e-4) for i in range(5)]
+    with faultinject.inject("serve.cycle", times=None):
+        srv.run(max_ticks=100)
+    assert srv.breaker.dead
+    for rid in rids:
+        out = srv.results[rid]
+        assert out.status == FAILED and "circuit breaker" in out.reason
+    post = srv.submit(_rhs(n, 9))
+    assert srv.results[post].status == REJECTED
+    assert "circuit breaker" in srv.results[post].reason
+    m = srv.metrics()
+    assert m["breaker_state"] == "dead" and m["breaker_skips"] >= 1
+
+
+def test_server_breaker_recovers_after_transient_outage():
+    """Fault clears before the trip budget: a half-open trial succeeds,
+    the breaker closes, and the backlog drains DONE."""
+    n = 48
+    op, srv = _server(n=n, k=2, cycle_retries=0, breaker_threshold=2,
+                      breaker_cooldown=1, breaker_max_trips=3)
+    rids = [srv.submit(_rhs(n, i), tol=1e-4) for i in range(3)]
+    with faultinject.inject("serve.cycle", times=2):
+        srv.run(max_ticks=200)
+    for rid in rids:
+        assert srv.results[rid].status == DONE
+    # A success fully resets the breaker (trips included): only opens
+    # WITHOUT an intervening success accumulate toward death.
+    assert srv.breaker.state == "closed" and srv.breaker.trips == 0
+    assert srv.cycle_faults == 2
+
+
+def test_server_straggler_ticks_exposed(monkeypatch):
+    n = 48
+    clk = _Clock()
+    op, srv = _server(n=n, k=2, clock=clk, sleep=clk.sleep,
+                      straggler_window=50)
+    assert "straggler_ticks" in srv.metrics()
+    assert srv.metrics()["straggler_ticks"] == 0
+
+
+def test_server_checkpoint_resume_bit_identical(tmp_path):
+    """Kill the server mid-drain, restore into a FRESH server over the
+    same operator: every remaining request must retire with the same
+    status/restarts and bit-identical x as the uninterrupted run."""
+    from repro.serve import SolverServer
+    n, k = 48, 3
+    op = _dense_op(n=n, seed=5)
+    work = [(_rhs(n, 20 + i), [1e-3, 1e-5, 1e-6][i % 3]) for i in range(8)]
+
+    ref = SolverServer(op, m=12, k=k)
+    for b, tol in work:
+        ref.submit(b, tol=tol, max_restarts=40)
+    ref.run()
+
+    srv = SolverServer(op, m=12, k=k)
+    for b, tol in work:
+        srv.submit(b, tol=tol, max_restarts=40)
+    srv.step(), srv.step()                 # partially drained...
+    path = srv.save_checkpoint(str(tmp_path))
+    already = dict(srv.results)            # outcomes retired pre-kill
+
+    srv2 = SolverServer(op, m=12, k=k).restore_checkpoint(str(tmp_path))
+    srv2.results.update(already)
+    srv2.run()
+
+    assert set(srv2.results) == set(ref.results)
+    for rid, a in ref.results.items():
+        b2 = srv2.results[rid]
+        assert (a.status, a.restarts) == (b2.status, b2.restarts), rid
+        assert a.residual == b2.residual
+        assert np.array_equal(a.x, b2.x)
+    assert ref.metrics()["tick"] == srv2.metrics()["tick"]
+
+
+def test_server_checkpoint_preserves_quarantine_and_queue(tmp_path):
+    """Checkpoint taken right after a lane fault: the restored server
+    must keep the quarantine countdown and the front-of-queue retry."""
+    from repro.serve import SolverServer
+    n = 48
+    op = _dense_op(n=n, seed=6)
+    srv = SolverServer(op, m=12, k=2, fault_retries=1, quarantine_ticks=3)
+    rids = [srv.submit(_rhs(n, i), tol=1e-4, max_restarts=40)
+            for i in range(2)]
+    with faultinject.inject("serve.lane_nan", at=0):
+        srv.step()
+    assert srv.metrics()["lane_faults"] == 1
+    srv.save_checkpoint(str(tmp_path))
+
+    srv2 = SolverServer(op, m=12, k=2, fault_retries=1,
+                        quarantine_ticks=3).restore_checkpoint(str(tmp_path))
+    assert srv2.state.quarantine == srv.state.quarantine
+    assert [r.rid for r in srv2.state.pending] == \
+           [r.rid for r in srv.state.pending]
+    assert srv2.state.pending[0].retries == 1
+    srv2.results.update(srv.results)
+    srv2.run()
+    for rid in rids:
+        assert srv2.results[rid].status == DONE
+
+
+def test_server_checkpoint_geometry_mismatch_raises(tmp_path):
+    from repro.serve import SolverServer
+    op = _dense_op(n=48, seed=0)
+    SolverServer(op, m=12, k=2).save_checkpoint(str(tmp_path))
+    with pytest.raises(ValueError, match="geometry"):
+        SolverServer(op, m=12, k=4).restore_checkpoint(str(tmp_path))
+    with pytest.raises(ValueError, match="geometry"):
+        SolverServer(op, m=8, k=2).restore_checkpoint(str(tmp_path))

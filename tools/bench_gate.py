@@ -17,7 +17,12 @@ fails on perf-model regressions:
   4. absolute invariants on the solver_serve_* rows: the continuous-
      batching server must finish its workload in fewer lockstep cycles
      than the sequential baseline AND within --serve-ideal-slack of the
-     lanes x early-retirement ideal (max(ceil(sum r_i / k), max r_i)).
+     lanes x early-retirement ideal (max(ceil(sum r_i / k), max r_i));
+  5. absolute invariants on the recovery_* rows: the self-healing
+     wrapper's fault-free committed-cycle count (fast path AND stepped
+     loop) must stay within 2% of the plain solver's restart count, and
+     a solve recovered from an injected NaN must converge within +1
+     restart of fault-free — detection/recovery stays off the hot path.
 
 Rows are matched by name; rows present only on one side are skipped for
 diff checks (the smoke subset uses smaller cases than the full run) but
@@ -41,7 +46,8 @@ def _rows_by_name(payload):
 
 def check(current: dict, baseline: dict | None, *, tol: float,
           min_pipeline_ratio: float,
-          serve_ideal_slack: float = 1.1) -> list[str]:
+          serve_ideal_slack: float = 1.1,
+          recovery_overhead_slack: float = 1.02) -> list[str]:
     fails = []
     cur = _rows_by_name(current)
     base = _rows_by_name(baseline) if baseline else {}
@@ -98,6 +104,21 @@ def check(current: dict, baseline: dict | None, *, tol: float,
                 fails.append(f"{name}: cycles_ideal {ideal} > "
                              f"cycles_sequential {seq} — model arithmetic "
                              f"broken")
+        # 5. self-healing: fault-free overhead <= 2%, recovery within +1
+        if "overhead_ratio" in r:
+            for key in ("overhead_ratio", "stepped_overhead_ratio"):
+                if key in r and r[key] > recovery_overhead_slack:
+                    fails.append(
+                        f"{name}: {key} {r[key]:.4f} > "
+                        f"{recovery_overhead_slack:.2f} — self-healing "
+                        f"detection is costing cycles on the fault-free "
+                        f"path")
+            if r.get("recovery_extra_restarts", 0) > 1:
+                fails.append(
+                    f"{name}: recovered solve took "
+                    f"{r['recovery_extra_restarts']} extra restarts "
+                    f"({r['restarts_plain']} plain vs "
+                    f"{r['restarts_recovered']} recovered), must be <= +1")
     return fails
 
 
@@ -116,6 +137,9 @@ def main(argv=None) -> int:
     ap.add_argument("--serve-ideal-slack", type=float, default=1.1,
                     help="allowed packed/ideal cycle ratio on "
                          "solver_serve_* rows")
+    ap.add_argument("--recovery-overhead-slack", type=float, default=1.02,
+                    help="allowed self-healing/plain cycle ratio on "
+                         "recovery_* rows (fault-free path)")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -129,7 +153,8 @@ def main(argv=None) -> int:
 
     fails = check(current, baseline, tol=args.tol,
                   min_pipeline_ratio=args.min_pipeline_ratio,
-                  serve_ideal_slack=args.serve_ideal_slack)
+                  serve_ideal_slack=args.serve_ideal_slack,
+                  recovery_overhead_slack=args.recovery_overhead_slack)
     n = len(current.get("rows", []))
     nb = len(baseline.get("rows", [])) if baseline else 0
     matched = len(set(_rows_by_name(current)) & set(_rows_by_name(baseline))

@@ -1,0 +1,65 @@
+"""CLI shim for the deterministic fault injector.
+
+Validates a ``REPRO_FAULT`` schedule against the registered sites and
+execs a command under it — the CI fault-injection matrix leg runs the
+serve/recovery suites through this so a typo'd site fails fast instead of
+silently injecting nothing:
+
+    python tools/faultinject.py "serve.cycle:1,core.cycle_nan:2" -- \
+        python -m pytest tests/test_chaos.py -q
+
+With no command it just validates and prints the parsed schedule
+(``--list`` prints the site registry).  The real injector lives at
+``src/repro/runtime/faultinject.py`` (tools/ is not importable from the
+library path); see docs/robustness.md for the site catalogue.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.runtime import faultinject  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("schedule", nargs="?", default="",
+                    help="REPRO_FAULT schedule: site:index[:times],...")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registered injection sites and exit")
+    ap.add_argument("command", nargs=argparse.REMAINDER,
+                    help="command to run under the schedule (after --)")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for site, doc in sorted(faultinject.SITES.items()):
+            print(f"{site:18s} {doc}")
+        return 0
+
+    try:
+        sched = faultinject.parse_schedule(args.schedule)
+    except ValueError as e:
+        print(f"faultinject: {e}", file=sys.stderr)
+        return 2
+    for site, entries in sorted(sched.items()):
+        for index, times in entries:
+            print(f"armed: {site} at index "
+                  f"{'*' if index is None else index} x "
+                  f"{'*' if times is None else times}")
+
+    cmd = args.command
+    if cmd and cmd[0] == "--":
+        cmd = cmd[1:]
+    if not cmd:
+        return 0
+    env = dict(os.environ, REPRO_FAULT=args.schedule)
+    return subprocess.call(cmd, env=env)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
