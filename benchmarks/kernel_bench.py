@@ -685,6 +685,163 @@ def precision_restart_rows(grids=((24, 24), (32, 32)), dense_ns=(512,),
     return rows
 
 
+_PRECOND_PIPE_CODE = textwrap.dedent("""
+    import json, sys
+    import jax, jax.numpy as jnp
+    from repro.compat import make_mesh
+    from repro.core import gmres_sharded, stencils
+    from repro.roofline import innermost_loop_collectives
+
+    # BANDED stencil: the halo-exchange mat-vec path, which is what the
+    # Chebyshev apply rides sharded (order ppermutes, zero psums) — the
+    # row proves preconditioning leaves the pipelined one-psum-per-step
+    # schedule intact.
+    nx, m = int(sys.argv[1]), int(sys.argv[2])
+    op = stencils.poisson_2d(nx, nx)
+    b = jnp.sin(jnp.arange(nx * nx) * 0.37)
+    mesh = make_mesh((4,), ('model',))
+    out = {}
+    for tag, pc in (("unprecond", None), ("cheb", "chebyshev")):
+        jsol = jax.jit(lambda bb, pc=pc: gmres_sharded(
+            mesh, 'model', op, bb, m=m, tol=1e-4, max_restarts=80,
+            gs='cgs2_pipelined', precond=pc))
+        hlo = jsol.lower(b).compile().as_text()
+        _, ops = innermost_loop_collectives(hlo)
+        out["loop_psums_" + tag] = sum(o.count for o in ops
+                                       if o.kind == "all-reduce")
+        out["loop_coll_ops_" + tag] = sum(o.count for o in ops)
+        r = jsol(b)
+        out["restarts_" + tag] = int(r.restarts)
+        out["converged_" + tag] = bool(r.converged)
+    print(json.dumps(out))
+""")
+
+
+def _precond_hlo_counts(nx: int, m: int):
+    """Lower the sharded pipelined solve with/without Chebyshev on 4 fake
+    devices; read the collective schedule off the innermost while body.
+    Subprocess so the parent keeps its 1-device view; raises on failure —
+    the row is acceptance evidence and must not degrade to a placeholder.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run(
+        [sys.executable, "-c", _PRECOND_PIPE_CODE, str(nx), str(m)],
+        env=env, capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        raise RuntimeError(f"precond HLO probe failed: {res.stderr[-500:]}")
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+def precond_rows(grids=((12, 12), (16, 16)), m: int = 16, tol: float = 1e-5,
+                 hlo_case=(16, 16)):
+    """Preconditioning rows: restart counts, modeled cost, fused traffic.
+
+    ``precond_restarts_*``: the SAME system solved at the SAME tol,
+    unpreconditioned vs Chebyshev(4) vs banded ILU(0) (vs line-Jacobi for
+    reference), through the jnp ref path pinned via ``force_kernel_mode``
+    (ref and kernel arithmetic are test-pinned identical, and restart
+    counts are what the row measures).  ``cost_adjusted_steps`` prices
+    each inner step at ``1 + matvec_equiv`` mat-vec equivalents from the
+    protocol's ``cost()`` model — the honest fewer-steps-vs-dearer-steps
+    ledger.  ``tools/bench_gate.py`` gates ``restarts_precond * factor <=
+    restarts_unprecond`` (factor 2 — the acceptance bar) on the chebyshev
+    and banded_ilu0 rows.
+
+    ``precond_cheb_fused_traffic_*``: the fused recurrence kernel
+    (``banded_cheb_apply``) streams the band stack ONCE per apply with
+    the iterate VMEM-resident, vs ``order`` full mat-vec round trips for
+    the unfused loop — the same one-HBM-pass structure as the s-step
+    matrix-powers kernel it shares plumbing with.
+
+    ``precond_pipelined_hlo_p4``: lowers the 4-shard pipelined solve
+    with and without Chebyshev and proves the preconditioned inner loop
+    keeps the one-psum-per-step schedule (``psums_per_step_pipelined``
+    picks up bench_gate's ==1 absolute check).
+    """
+    from repro.core import gmres, stencils
+    from repro.core import preconditioners as pc_mod
+    from repro.kernels import tuning
+
+    rows = []
+    systems = [("poisson2d", stencils.poisson_2d),
+               ("convdiff2d", stencils.convection_diffusion_2d)]
+    for nx, ny in grids:
+        n = nx * ny
+        for sysname, make in systems:
+            op = make(nx, ny)
+            b = jnp.sin(jnp.arange(n) * 0.37)
+            with tuning.force_kernel_mode("ref"):
+                plain = gmres(op, b, m=m, tol=tol, max_restarts=200)
+                r0, s0 = int(plain.restarts), int(plain.inner_steps)
+                for pcname, pc in (
+                        ("chebyshev4", pc_mod.chebyshev(op, order=4)),
+                        ("banded_ilu0", pc_mod.banded_ilu0(op)),
+                        ("line_jacobi", pc_mod.line_jacobi(op))):
+                    sol = jax.jit(lambda bb, pc=pc: gmres(
+                        op, bb, m=m, tol=tol, max_restarts=200, precond=pc))
+                    t = _time(sol, b)
+                    res = sol(b)
+                    rr, ss = int(res.restarts), int(res.inner_steps)
+                    mveq = 1.0 + pc.cost().matvec_equiv
+                    rows.append({
+                        "name": f"precond_restarts_{sysname}_{nx}x{ny}_"
+                                f"{pcname}",
+                        "us": t * 1e6,
+                        "restarts_unprecond": r0,
+                        "restarts_precond": rr,
+                        "matvec_equiv": round(mveq, 3),
+                        "cost_adjusted_steps": round(ss * mveq, 1),
+                        "derived": (
+                            f"restarts {r0}->{rr} steps {s0}->{ss} "
+                            f"cost/step={mveq:.2f}x "
+                            f"adj_steps={ss * mveq:.0f} vs {s0} "
+                            f"conv={int(res.converged)} "
+                            f"residual={float(res.residual):.2e}"),
+                    })
+    # Fused-recurrence HBM traffic: one band stream per apply vs order.
+    for nx, order in ((64, 4), (128, 6)):
+        n = nx * nx
+        nbands = 5
+        per_mv = 4 * (nbands * n + 2 * n)       # bands + read z + write w
+        fused = 4 * (nbands * n + 2 * n)        # ONE pass, z/v VMEM-resident
+        loop = order * per_mv
+        rows.append({
+            "name": f"precond_cheb_fused_traffic_n{n}_s{order}",
+            "us": 0.0,
+            "hbm_bytes_fused": fused,
+            "hbm_bytes_loop": loop,
+            "traffic_ratio": fused / loop,
+            "derived": (f"fused/loop_hbm={fused / loop:.2f} "
+                        f"order={order} nbands={nbands} "
+                        f"(band stack streamed once per apply)"),
+        })
+    if hlo_case is not None:
+        nx, mm = hlo_case
+        c = _precond_hlo_counts(nx, mm)
+        steps = max(c["restarts_cheb"], 1)
+        rows.append({
+            "name": "precond_pipelined_hlo_p4",
+            "us": 0.0,
+            "psums_per_step_pipelined": c["loop_psums_cheb"],
+            "loop_psums_pipelined": c["loop_psums_cheb"],
+            "loop_coll_ops_pipelined": c["loop_coll_ops_cheb"],
+            "restarts_unprecond": c["restarts_unprecond"],
+            "restarts_precond": c["restarts_cheb"],
+            "derived": (
+                f"4-shard pipelined inner loop: "
+                f"psums {c['loop_psums_unprecond']} (unprecond) -> "
+                f"{c['loop_psums_cheb']} (chebyshev) "
+                f"coll_ops {c['loop_coll_ops_unprecond']} -> "
+                f"{c['loop_coll_ops_cheb']} "
+                f"restarts {c['restarts_unprecond']} -> "
+                f"{c['restarts_cheb']} "
+                f"conv={int(c['converged_cheb'])}"),
+        })
+    return rows
+
+
 def attention_rows(cases=((1, 8, 8, 1024, 128), (1, 8, 2, 2048, 128))):
     rows = []
     attn = jax.jit(lambda q, k, v: ref.attention(q, k, v, causal=True))
@@ -922,6 +1079,7 @@ def main(json_path: str = "BENCH_kernels.json", smoke: bool = False,
                 + pipelined_rows(cases=((10, 4096),), hlo_case=(16, 8))
                 + precision_restart_rows(grids=((16, 16),), dense_ns=(),
                                          tol=1e-3)
+                + precond_rows(grids=((12, 12),), hlo_case=None)
                 + solver_serve_rows(cases=((64, 4, 8, 8),))
                 + recovery_rows(cases=((96, 4),))
                 + attention_rows(cases=((1, 2, 2, 256, 64),)))
@@ -929,8 +1087,8 @@ def main(json_path: str = "BENCH_kernels.json", smoke: bool = False,
         rows = (matvec_rows() + gs_rows() + fused_step_rows()
                 + block_matvec_rows() + spmv_rows() + sstep_powers_rows()
                 + block_gs_rows() + sharded_rows() + pipelined_rows()
-                + precision_restart_rows() + solver_serve_rows()
-                + recovery_rows() + attention_rows())
+                + precision_restart_rows() + precond_rows()
+                + solver_serve_rows() + recovery_rows() + attention_rows())
     for r in rows:
         r.setdefault("mode", MODE)
     _validate_rows(rows)

@@ -135,6 +135,60 @@ def _local_block_jacobi(a_local: jax.Array, axis: str):
     return apply
 
 
+_SHARD_PRECONDS = ("block_jacobi", "jacobi", "chebyshev",
+                   "banded_block_jacobi")
+
+
+def _resolve_shard_precond(precond, op, caller: str):
+    """Resolve ``precond=`` for the sharded wrappers, EAGERLY.
+
+    Returns ``build(op_local, axis) -> callable | None`` to run inside the
+    shard_map body.  Strings name the built-in shard-safe members: any
+    eager setup (Chebyshev interval estimation, the dense block-Jacobi
+    check) happens HERE against the global operator, and the per-shard
+    ``rebind`` swaps in local storage inside the trace.  A
+    ``Preconditioner`` instance must be ``shard_aware`` — anything else
+    raises NOW, at the call boundary, instead of failing inside shard_map
+    (or worse, silently applying a global-frame M^{-1} to local shards).
+    """
+    if precond is None:
+        return lambda op_local, axis: None
+    from repro.core import preconditioners as pc_mod
+    if isinstance(precond, str):
+        if precond not in _SHARD_PRECONDS:
+            raise ValueError(
+                f"{caller}: unknown precond {precond!r}; options: "
+                f"{[None, *_SHARD_PRECONDS]}")
+        if precond == "block_jacobi":
+            if not isinstance(op, op_mod.DenseOperator):
+                raise ValueError(
+                    f"{caller}: precond='block_jacobi' needs a dense "
+                    f"operator (it factorizes the diagonal block of A); "
+                    f"banded operators take 'banded_block_jacobi'")
+            return lambda op_local, axis: _local_block_jacobi(
+                op_local.a, axis)
+        if precond == "banded_block_jacobi":
+            if not isinstance(op, op_mod.BandedOperator):
+                raise ValueError(
+                    f"{caller}: precond='banded_block_jacobi' needs a "
+                    f"BandedOperator (its setup walks the band pattern); "
+                    f"dense operators take 'block_jacobi'")
+            pc = pc_mod.banded_block_jacobi(op)
+        elif precond == "jacobi":
+            pc = pc_mod.jacobi(op)
+        else:
+            pc = pc_mod.chebyshev(op)
+        return lambda op_local, axis: pc.rebind(op_local)
+    if getattr(precond, "shard_aware", False):
+        return lambda op_local, axis: precond.rebind(op_local)
+    raise ValueError(
+        f"{caller}: precond {getattr(precond, 'name', precond)!r} is not "
+        f"shard-aware; pass one of {list(_SHARD_PRECONDS)} or a "
+        f"Preconditioner with shard_aware=True (e.g. chebyshev, jacobi, "
+        f"banded_block_jacobi) — banded_ilu0's sweeps recur across the "
+        f"whole row range and cannot be sharded")
+
+
 def gmres_sharded(
     mesh: Mesh,
     axis: str,
@@ -146,7 +200,7 @@ def gmres_sharded(
     tol: float = 1e-5,
     max_restarts: int = 50,
     gs: str = "cgs2_fused",
-    precond: Optional[str] = None,
+    precond=None,
     compute_dtype=None,
 ) -> GmresResult:
     """Solve Ax=b with the operator row-sharded over ``axis`` of ``mesh``.
@@ -162,21 +216,24 @@ def gmres_sharded(
     The default ``gs="cgs2_fused"`` runs the split-phase CGS2 kernel pair
     per shard (project kernel, h psum, update kernel); it degrades to the
     psum-correct jnp ``cgs2`` wherever Pallas is unavailable, so the
-    default is safe on any backend.  ``precond``: None | "block_jacobi"
-    (shard-local, communication-free; dense operators only).
+    default is safe on any backend.
+
+    ``precond``: None | "block_jacobi" (dense; shard-local LU of the
+    diagonal block) | "banded_block_jacobi" (banded; shard-local ILU(0)
+    sweeps) | "jacobi" | "chebyshev" (``order`` mat-vecs through the
+    halo-exchange path — ppermutes only, ZERO extra psums, so the
+    pipelined one-psum-per-step count is preserved) | any ``shard_aware``
+    ``Preconditioner`` instance (rebound per shard).  Everything else
+    raises ``ValueError`` here, before the shard_map trace.
     """
     op = op_mod.as_operator(a)
-    if precond == "block_jacobi" and not isinstance(op, op_mod.DenseOperator):
-        raise ValueError("precond='block_jacobi' needs a dense operator "
-                         "(it factorizes the diagonal block of A)")
+    build_pc = _resolve_shard_precond(precond, op, "gmres_sharded")
 
     def body(op_local, b_local, x0_local):
-        pc = (_local_block_jacobi(op_local.a, axis)
-              if precond == "block_jacobi" else None)
         return gmres(
             op_local, b_local, x0_local, m=m, tol=tol,
             max_restarts=max_restarts, gs=gs, axis_name=axis,
-            precond=pc, compute_dtype=compute_dtype,
+            precond=build_pc(op_local, axis), compute_dtype=compute_dtype,
         )
 
     return _run_sharded(mesh, axis, op, b, x0, "gmres_sharded", body)
@@ -194,6 +251,7 @@ def gmres_sstep_sharded(
     tol: float = 1e-5,
     max_restarts: int = 30,
     gs: str = "cgs2",
+    precond=None,
 ) -> GmresResult:
     """Row-sharded s-step GMRES — the communication-avoiding wrapper.
 
@@ -205,13 +263,22 @@ def gmres_sstep_sharded(
     pays ~4 PER step.  ``gs="cgs2_pipelined"`` fuses each block-GS pass's
     C and Gram psums into ONE stacked payload reduction (6 -> 4 rounds
     per block; see ``core.sstep.gmres_sstep``).
+
+    ``precond`` accepts the same options as ``gmres_sharded`` (resolved by
+    the same ``_resolve_shard_precond``); a non-identity M^{-1} moves the
+    power block onto the psum-per-power reference over ``A M^{-1}`` (the
+    CA halo-powers kernel streams A's own bands), so preconditioning here
+    trades the 2-round block for FEWER blocks — the steps-vs-cost rows in
+    ``core/strategies.py`` quantify the trade.
     """
     op = op_mod.as_operator(a)
+    build_pc = _resolve_shard_precond(precond, op, "gmres_sstep_sharded")
 
     def body(op_local, b_local, x0_local):
         return gmres_sstep(op_local, b_local, x0_local, s=s, blocks=blocks,
                            tol=tol, max_restarts=max_restarts,
-                           axis_name=axis, gs=gs)
+                           axis_name=axis, gs=gs,
+                           precond=build_pc(op_local, axis))
 
     return _run_sharded(mesh, axis, op, b, x0, "gmres_sstep_sharded", body)
 

@@ -451,7 +451,9 @@ def gmres(
     matvec = as_operator(a)
     if x0 is None:
         x0 = jnp.zeros_like(b)
-    identity_precond = precond is None
+    check_precond(precond)
+    identity_precond = (precond is None
+                        or getattr(precond, "is_identity", False))
     if precond is None:
         precond = lambda v: v
     basis_dtype = b.dtype if compute_dtype is None else compute_dtype
@@ -632,6 +634,40 @@ def _block_matvec(op) -> Callable:
     return jax.vmap(op)
 
 
+def check_precond(precond) -> None:
+    """Reject non-callable ``precond`` EARLY with the argument named.
+
+    A registry string or a stray object would otherwise surface as a
+    TypeError deep inside a jitted cycle; every public solver calls this
+    so the contract is uniform (honor it or raise a clear ValueError).
+    Registry NAMES are a sharded-wrapper convenience only — they need an
+    operator to build against (``make_preconditioner(name, op)``).
+    """
+    if precond is not None and not callable(precond):
+        raise ValueError(
+            f"precond must be callable (a Preconditioner instance or a "
+            f"plain M^-1 apply fn), got {type(precond).__name__} "
+            f"{precond!r}; to use a registry name, build it first: "
+            f"preconditioners.make_preconditioner(name, op)")
+
+
+def _batched_precond(precond) -> Callable:
+    """(k, n) -> (k, n) lane-batched M^{-1} apply.
+
+    ``Preconditioner`` instances expose ``batched`` (one shared operator
+    stream for all lanes, e.g. the Chebyshev block recurrence); a plain
+    callable vmaps; identity short-circuits to a passthrough so the
+    unpreconditioned batched path is byte-identical to before.
+    """
+    check_precond(precond)
+    if precond is None or getattr(precond, "is_identity", False):
+        return lambda vs: vs
+    batched = getattr(precond, "batched", None)
+    if batched is not None:
+        return batched
+    return jax.vmap(precond)
+
+
 def gmres_batched_cycle(a, b: jax.Array, x: jax.Array, *, m: int = 30,
                         tol_abs=None, active=None, gs: str = "cgs2",
                         precond: Optional[Callable] = None,
@@ -664,9 +700,7 @@ def gmres_batched_cycle(a, b: jax.Array, x: jax.Array, *, m: int = 30,
     decisions read), and the per-lane Arnoldi steps taken.
     """
     op = as_operator(a)
-    if precond is None:
-        precond = lambda v: v
-    vprecond = jax.vmap(precond)
+    vprecond = _batched_precond(precond)
     basis_dtype = b.dtype if compute_dtype is None else compute_dtype
     batched_gs = _make_batched_gs(gs, m, b.shape[1], basis_dtype)
     blockmv = _block_matvec(op)
@@ -725,9 +759,7 @@ def gmres_batched(a, b: jax.Array, *, m: int = 30, tol=1e-5,
     queued requests between cycles via ``gmres_batched_cycle``.
     """
     op = as_operator(a)
-    if precond is None:
-        precond = lambda v: v
-    vprecond = jax.vmap(precond)
+    vprecond = _batched_precond(precond)
     basis_dtype = b.dtype if compute_dtype is None else compute_dtype
     batched_gs = _make_batched_gs(gs, m, b.shape[1], basis_dtype)
     blockmv = _block_matvec(op)

@@ -73,19 +73,59 @@ convergence checks are per-cycle (true residual), not per-step.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core import arnoldi, givens
-from repro.core.gmres import Diagnostics, GmresResult, classify_residuals
-from repro.core.operators import BandedOperator, DenseOperator, as_operator
+from repro.core.gmres import (Diagnostics, GmresResult, check_precond,
+                              classify_residuals)
+from repro.core.operators import (BandedOperator, DenseOperator,
+                                  SparseOperator, as_operator)
+
+
+def _leja_perm(s: int) -> tuple:
+    """Static Leja-style ordering of the s Chebyshev points.
+
+    Greedy max-product-of-distances on the REFERENCE points
+    cos((2k+1) pi / 2s) — pure Python (the point POSITIONS are static even
+    though the mapped shift values are traced), so the permutation bakes
+    into the trace.  Leja ordering keeps every Newton-basis prefix well
+    spread over the interval; consecutive nearby shifts would reintroduce
+    the monomial basis's conditioning growth.
+    """
+    import math
+    pts = [math.cos(math.pi * (2 * k + 1) / (2 * s)) for k in range(s)]
+    perm = [0]
+    remaining = set(range(1, s))
+    while remaining:
+        nxt = max(remaining, key=lambda j: (
+            math.prod(abs(pts[j] - pts[i]) for i in perm), -j))
+        perm.append(nxt)
+        remaining.discard(nxt)
+    return tuple(perm)
+
+
+def _newton_shifts(op, s: int) -> jax.Array:
+    """Newton-basis shifts: Leja-ordered Chebyshev points of A's interval.
+
+    The interval is the Gershgorin bound (one pass over the rows, traced
+    — no eigensolve); shifts at the Chebyshev points of [lo, hi] bound
+    |prod (A - shift_j)| growth the way the monomial basis (all shifts 0)
+    cannot, keeping the power block conditioned far past the kappa^s wall.
+    """
+    from repro.core.preconditioners import spectral_bounds
+    lo, hi = spectral_bounds(op)
+    k = jnp.arange(s)
+    pts = ((lo + hi) / 2
+           + (hi - lo) / 2 * jnp.cos(jnp.pi * (2 * k + 1) / (2 * s)))
+    return pts[jnp.asarray(_leja_perm(s))].astype(jnp.float32)
 
 
 def _make_block_fns(op, n: int, s: int, m1: int, dtype, axis_name,
-                    gs: str = "cgs2"):
+                    gs: str = "cgs2", precond=None, shifts=None):
     """Trace-time dispatch: (powers_fn, gs_pass_fn, basis_shape, single_reduce).
 
     Kernel paths need a kernel-capable backend (``tuning.kernel_mode()
@@ -113,22 +153,35 @@ def _make_block_fns(op, n: int, s: int, m1: int, dtype, axis_name,
     # which needs the shard count — only the ambient shard_context (set by
     # core/distributed.py) carries it.
     ctx_sharded = axis_name is not None and tuning.shard_axis() == axis_name
+    # Right preconditioning powers B = A M^{-1}: the fused kernels stream
+    # A's own storage, so a non-identity M^{-1} takes the reference powers
+    # over the composed mat-vec (M^{-1} itself may still be kernel-backed,
+    # e.g. the fused Chebyshev apply inside each power).
+    identity_pc = precond is None or getattr(precond, "is_identity", False)
 
     powers_fn = None
-    if mode != "ref" and axis_name is None:
+    if mode != "ref" and axis_name is None and identity_pc:
         if isinstance(op, BandedOperator):
             halo = max(abs(int(o)) for o in op.offsets)
             if tuning.powers_fits(n, op.bands.dtype, s,
                                   nbands=op.bands.shape[0], halo=halo):
                 powers_fn = lambda u0: matrix_powers.banded_powers(
-                    op.bands, u0, op.offsets, s, interpret=interp)
-        elif isinstance(op, DenseOperator):
+                    op.bands, u0, op.offsets, s, shifts=shifts,
+                    interpret=interp)
+        elif isinstance(op, SparseOperator):
+            width = op.values.shape[1]
+            if tuning.ell_powers_fits(n, width, op.values.dtype, s):
+                powers_fn = lambda u0: matrix_powers.ell_powers(
+                    op.values, op.cols, u0, s, shifts=shifts,
+                    interpret=interp)
+        elif isinstance(op, DenseOperator) and shifts is None:
             if tuning.powers_fits(n, op.a.dtype, s):
                 block = tuning.choose_powers_block(
                     n, jnp.dtype(op.a.dtype).name, s=s)
                 powers_fn = lambda u0: matrix_powers.dense_powers(
                     op.a, u0, s, block=block, interpret=interp)
-    elif (mode != "ref" and ctx_sharded and isinstance(op, BandedOperator)):
+    elif (mode != "ref" and ctx_sharded and isinstance(op, BandedOperator)
+          and identity_pc and shifts is None):
         halo = max(abs(int(o)) for o in op.offsets)
         nshards = tuning.shard_size()
         if (s * halo <= n
@@ -174,8 +227,9 @@ def _make_block_fns(op, n: int, s: int, m1: int, dtype, axis_name,
                 u = z / jnp.maximum(znorm, g)[:, None]
                 return u, sigma
     if powers_fn is None:
+        pmatvec = op if identity_pc else (lambda v: op(precond(v)))
         powers_fn = lambda u0: matrix_powers.matrix_powers_ref(
-            op, u0, s, guard, axis_name)
+            pmatvec, u0, s, guard, axis_name, shifts=shifts)
 
     if gs not in ("cgs2", "cgs2_pipelined"):
         raise ValueError(f"gmres_sstep: unknown gs {gs!r}; options: "
@@ -217,7 +271,7 @@ def _make_block_fns(op, n: int, s: int, m1: int, dtype, axis_name,
 
 
 def _block_step(powers_fn, gs_pass, v_basis, h, k_start: int, s: int, eps,
-                n: int, gram=None):
+                n: int, gram=None, shifts=None):
     """One s-step block at STATIC offset k_start.
 
     v_basis: (m1_pad, n_pad) basis carry — live rows/cols are (m+1, n),
@@ -305,7 +359,15 @@ def _block_step(powers_fn, gs_pass, v_basis, h, k_start: int, s: int, eps,
         xj = lax.dynamic_update_slice(xj, r_tot[:, j - 1], (k_start + 1,))
         xs.append(xj)
     s1 = jnp.stack(xs[:s], axis=1)                        # (m1, s)
-    s2 = jnp.stack([sigma[j - 1] * xs[j] for j in range(1, s + 1)], axis=1)
+    # Newton basis: A u_{j-1} = sigma_j u_j + shift_j u_{j-1}, so the
+    # shifted term rides along in S2 (monomial: shifts identically zero).
+    if shifts is None:
+        s2_cols = [sigma[j - 1] * xs[j] for j in range(1, s + 1)]
+    else:
+        sh = shifts.astype(sigma.dtype)
+        s2_cols = [sigma[j - 1] * xs[j] + sh[j - 1] * xs[j - 1]
+                   for j in range(1, s + 1)]
+    s2 = jnp.stack(s2_cols, axis=1)
 
     s1r = lax.dynamic_slice(s1, (k_start, 0), (s, s))     # invertible tri
     s1_masked = s1 * (jnp.arange(m1) < k_start)[:, None]
@@ -320,7 +382,9 @@ def _block_step(powers_fn, gs_pass, v_basis, h, k_start: int, s: int, eps,
 def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
                 tol: float = 1e-5, max_restarts: int = 30,
                 axis_name: Optional[str] = None,
-                gs: str = "cgs2", history: int = 8) -> GmresResult:
+                gs: str = "cgs2", history: int = 8,
+                precond: Optional[Callable] = None,
+                basis: str = "monomial") -> GmresResult:
     """Restarted s-step GMRES(m = s * blocks).
 
     ``a`` may be any operator ``gmres`` accepts; ``BandedOperator`` /
@@ -340,6 +404,17 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
     power basis of block k+1 starts from the LAST orthonormal vector of
     block k, a true dependency the standard cycle's depth-1 trick cannot
     break.
+
+    ``precond``: right preconditioner ``v -> M^{-1} v`` (None = identity).
+    The power block is built over ``B = A M^{-1}`` through the reference
+    powers (the apply itself may be kernel-backed, e.g. the fused
+    Chebyshev recurrence) and the cycle update un-preconditions:
+    ``x += M^{-1} (y V)``.  ``basis``: "monomial" | "newton" — Newton uses
+    Leja-ordered Chebyshev-point shifts of A's Gershgorin interval in the
+    SAME one-pass powers kernels (``shifts=``), keeping the block
+    conditioned past the monomial kappa^s wall (sharded banded solves keep
+    the monomial CA halo kernel; newton there runs the per-power psum
+    reference).
     """
     matvec = as_operator(a)
     if x0 is None:
@@ -351,8 +426,15 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
     m = s * blocks
     bnorm = arnoldi.norm(b, axis_name)
     tol_abs = tol * bnorm
+    if basis not in ("monomial", "newton"):
+        raise ValueError(f"gmres_sstep: unknown basis {basis!r}; options: "
+                         f"['monomial', 'newton']")
+    check_precond(precond)
+    shifts = _newton_shifts(matvec, s) if basis == "newton" else None
+    identity_pc = precond is None or getattr(precond, "is_identity", False)
     powers_fn, gs_pass, basis_shape, single_reduce = _make_block_fns(
-        matvec, n, s, m + 1, dtype, axis_name, gs)
+        matvec, n, s, m + 1, dtype, axis_name, gs, precond=precond,
+        shifts=shifts)
     gacc = jnp.promote_types(dtype, jnp.float32)
 
     def cycle(x):
@@ -366,7 +448,7 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
         gram = jnp.eye(basis_shape[0], dtype=gacc) if single_reduce else None
         for blk in range(blocks):                  # static offsets
             v, h, gram = _block_step(powers_fn, gs_pass, v, h, blk * s, s,
-                                     eps, n, gram)
+                                     eps, n, gram, shifts=shifts)
 
         # Fold the m Hessenberg columns through incremental Givens QR.  The
         # ``done`` latch mirrors the standard solver's cycle masking: once
@@ -388,7 +470,10 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
         giv, _ = lax.fori_loop(
             0, m, fold, (givens.init(m, beta, dtype), beta <= tol_abs))
         y = givens.solve(giv)
-        return x + y @ v[:m, :n]
+        dx = y @ v[:m, :n]
+        # Right preconditioning: the basis spans the M^{-1}-Krylov space,
+        # so the update un-preconditions (x solves A x = b, untransformed).
+        return x + (dx if identity_pc else precond(dx))
 
     def cond(carry):
         _, beta, it, _ = carry

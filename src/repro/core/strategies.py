@@ -49,6 +49,33 @@ The paper benchmarks four implementations of the SAME restarted GMRES(m):
   All are compiled on TPU, interpreted on CPU (what CI exercises), and
   degrade to the jnp reference elsewhere (kernels/tuning.kernel_mode).
 
+  Steps vs cost (core/preconditioners.py; docs/preconditioning.md): every
+  row above makes a step cheaper — a preconditioner DELETES steps, which
+  also deletes the step's collectives.  ``precond=`` composes with every
+  strategy; per-step overhead is the price of the restart-count cut:
+
+    precond=None                     baseline: restart count set purely by
+                                     κ(A); every Arnoldi step pays its
+                                     full collective round(s).
+    precond="jacobi"/"neumann"       +O(n) elementwise per step — nearly
+                                     free; helps only when the diagonal
+                                     carries the conditioning.
+    precond="chebyshev" (order s)    +s mat-vecs per step (one fused
+                                     matrix-powers-shaped kernel pass, or
+                                     s halo exchanges sharded — ZERO extra
+                                     psums); cuts Poisson/convection-
+                                     diffusion restarts >= 2x at s >= 4.
+    precond="banded_ilu0"            O(n*bands^2) one-off setup, two O(n*
+                                     bands) triangular sweeps per step
+                                     (kernels/trisolve.py); strongest
+                                     restart cut on stencils, but sweeps
+                                     recur across rows — single-device
+                                     only (shard via banded_block_jacobi).
+    precond="banded_block_jacobi"    shard-local banded ILU(0): same sweep
+                                     cost, no cross-shard recurrence, so
+                                     it composes with the halo-exchange
+                                     path and keeps one-psum-per-step.
+
 The host solver below is deliberately plain NumPy with Python loops — it is
 the measurement baseline, not a strawman: it mirrors pracma::gmres
 (MGS + dense Givens LS) operation for operation.

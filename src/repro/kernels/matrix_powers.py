@@ -94,8 +94,8 @@ def _acc_dtype(mat_dtype, x_dtype):
 # --------------------------------------------------------------------------
 # Banded / stencil matrix powers
 # --------------------------------------------------------------------------
-def _banded_powers_kernel(bands_ref, x_ref, u_ref, sig_ref, pad_ref, *,
-                          offsets, halo, eps):
+def _banded_powers_kernel(bands_ref, x_ref, sh_ref, u_ref, sig_ref,
+                          pad_ref, *, offsets, halo, eps, shifted):
     p = pl.program_id(0)
     n_pad = u_ref.shape[1]
     acc = sig_ref.dtype
@@ -114,6 +114,11 @@ def _banded_powers_kernel(bands_ref, x_ref, u_ref, sig_ref, pad_ref, *,
     for d, off in enumerate(offsets):
         band = bands_ref[d:d + 1, :].astype(acc)              # (1, n_pad)
         w += band * pad_ref[:, pl.ds(halo + off, n_pad)]
+    if shifted:
+        # Newton basis: w = (A - shift_j I) u_{j-1} — same one-pass stream,
+        # the shift is a per-power scalar from the tiny shifts block.
+        sh = pl.load(sh_ref, (pl.ds(0, 1), pl.ds(p, 1)))
+        w -= sh * pad_ref[:, pl.ds(halo, n_pad)]
 
     sigma = jnp.sqrt(jnp.sum(w * w))
     u = w / jnp.maximum(sigma, eps)
@@ -125,13 +130,18 @@ def _banded_powers_kernel(bands_ref, x_ref, u_ref, sig_ref, pad_ref, *,
 @functools.partial(jax.jit,
                    static_argnames=("offsets", "s", "interpret"))
 def banded_powers(bands: jax.Array, x: jax.Array, offsets: tuple, s: int, *,
+                  shifts: jax.Array | None = None,
                   interpret: bool = False):
     """All s normalized powers of a banded operator in one launch.
 
     bands: (nbands, n); offsets: static diagonal shifts (see
     ``spmv.banded_matvec``); x: (n,) starting vector (u_0).  Returns
     ``(u, sigma)`` with u (s, n) — row j-1 is u_j — and sigma (s,), the
-    pre-normalization norms ``||A u_{j-1}||``.
+    pre-normalization norms.  With ``shifts`` (s,) the recurrence is the
+    NEWTON basis ``w = (A - shifts[j] I) u_{j-1}`` (shifts at Chebyshev
+    points of the spectral interval keep the basis conditioned far past
+    the monomial kappa^s wall — see core/sstep.py); the Hessenberg
+    relation becomes ``A u_{j-1} = sigma_j u_j + shifts[j] u_{j-1}``.
     """
     nbands, n = bands.shape
     if len(offsets) != nbands:
@@ -148,16 +158,21 @@ def banded_powers(bands: jax.Array, x: jax.Array, offsets: tuple, s: int, *,
         bands = jnp.pad(bands, ((0, 0), (0, n_pad - n)))
         x = jnp.pad(x, (0, n_pad - n))
     s_pad = tuning._round_up(s, tuning.sublane(acc))
+    shifted = shifts is not None
+    sh = (jnp.zeros(s, acc) if shifts is None
+          else jnp.asarray(shifts, acc).reshape(s))
+    sh = jnp.pad(sh, (0, s_pad - s))[None, :]
 
     u, sig = pl.pallas_call(
         functools.partial(_banded_powers_kernel, offsets=offsets,
-                          halo=halo, eps=eps),
+                          halo=halo, eps=eps, shifted=shifted),
         grid=(s,),
         in_specs=[
             # Both operands are ONE block each: fetched once, VMEM-resident
             # across all s powers.
             pl.BlockSpec((nbands, n_pad), lambda p: (0, 0)),
             pl.BlockSpec((1, n_pad), lambda p: (0, 0)),
+            pl.BlockSpec((1, s_pad), lambda p: (0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((s_pad, n_pad), lambda p: (0, 0)),
@@ -170,7 +185,7 @@ def banded_powers(bands: jax.Array, x: jax.Array, offsets: tuple, s: int, *,
         scratch_shapes=[pltpu.VMEM((1, n_pad + 2 * halo), acc)],
         interpret=interpret,
         name="gmres_sstep_powers_banded",
-    )(bands, x[None, :])
+    )(bands, x[None, :], sh)
     return u[:s, :n], sig[0, :s]
 
 
@@ -361,19 +376,180 @@ def dense_powers(a: jax.Array, x: jax.Array, s: int, *,
 
 
 # --------------------------------------------------------------------------
+# ELL matrix powers (general sparsity)
+# --------------------------------------------------------------------------
+def _ell_powers_kernel(vals_ref, cols_ref, x_ref, sh_ref, u_ref, sig_ref,
+                       cur_ref, *, eps, shifted):
+    p = pl.program_id(0)
+    acc = sig_ref.dtype
+
+    @pl.when(p == 0)
+    def _seed():
+        cur_ref[...] = x_ref[...].astype(acc)
+
+    # One gather-style SpMV over the VMEM-carried operand (same structure
+    # as ``spmv._ell_kernel``, minus the row tiling: values/cols stay whole
+    # so the sparse column pattern can reach any operand row).  Padding
+    # slots carry value 0 at column 0, contributing nothing.
+    g = jnp.take(cur_ref[0, :], cols_ref[...], axis=0).astype(acc)
+    w = jnp.sum(vals_ref[...].astype(acc) * g, axis=1)[None, :]
+    if shifted:
+        sh = pl.load(sh_ref, (pl.ds(0, 1), pl.ds(p, 1)))
+        w -= sh * cur_ref[...]
+
+    sigma = jnp.sqrt(jnp.sum(w * w))
+    u = w / jnp.maximum(sigma, eps)
+    sig_ref[0, p] = sigma
+    u_ref[pl.ds(p, 1), :] = u
+    cur_ref[...] = u                         # operand for the next power
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def ell_powers(values: jax.Array, cols: jax.Array, x: jax.Array, s: int, *,
+               shifts: jax.Array | None = None, interpret: bool = False):
+    """All s normalized powers of an ELL-format operator in one launch.
+
+    values/cols: (n, width) as in ``spmv.ell_matvec``; x: (n,).  The
+    values+cols pair is fetched ONCE and stays VMEM-resident across all s
+    powers (gated by ``tuning.ell_powers_fits``), closing the general-
+    sparsity gap in the s-step cycle: previously only banded operators
+    took the fused-powers path.  ``shifts`` selects the Newton basis as in
+    ``banded_powers``.  Returns ``(u, sigma)``.
+    """
+    n, width = values.shape
+    if cols.shape != (n, width):
+        raise TypeError(f"ell_powers: cols {cols.shape} must match values "
+                        f"{values.shape}")
+    if x.shape != (n,):
+        raise TypeError(f"ell_powers: values {values.shape} need x of "
+                        f"shape ({n},), got {x.shape}")
+    n_pad = tuning._round_up(n, tuning.LANE)
+    acc = _acc_dtype(values.dtype, x.dtype)
+    eps = float(jnp.finfo(acc).tiny) ** 0.5
+    if n_pad != n:
+        values = jnp.pad(values, ((0, n_pad - n), (0, 0)))
+        cols = jnp.pad(cols, ((0, n_pad - n), (0, 0)))
+        x = jnp.pad(x, (0, n_pad - n))
+    s_pad = tuning._round_up(s, tuning.sublane(acc))
+    shifted = shifts is not None
+    sh = (jnp.zeros(s, acc) if shifts is None
+          else jnp.asarray(shifts, acc).reshape(s))
+    sh = jnp.pad(sh, (0, s_pad - s))[None, :]
+
+    u, sig = pl.pallas_call(
+        functools.partial(_ell_powers_kernel, eps=eps, shifted=shifted),
+        grid=(s,),
+        in_specs=[
+            pl.BlockSpec((n_pad, width), lambda p: (0, 0)),
+            pl.BlockSpec((n_pad, width), lambda p: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda p: (0, 0)),
+            pl.BlockSpec((1, s_pad), lambda p: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((s_pad, n_pad), lambda p: (0, 0)),
+            pl.BlockSpec((1, s_pad), lambda p: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s_pad, n_pad), acc),
+            jax.ShapeDtypeStruct((1, s_pad), acc),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, n_pad), acc)],
+        interpret=interpret,
+        name="gmres_sstep_powers_ell",
+    )(values, cols, x[None, :], sh)
+    return u[:s, :n], sig[0, :s]
+
+
+# --------------------------------------------------------------------------
+# Fused Chebyshev preconditioner apply
+# --------------------------------------------------------------------------
+def _banded_cheb_kernel(bands_ref, v_ref, o_ref, zp_ref, *,
+                        offsets, halo, theta, delta, rhos):
+    acc = o_ref.dtype
+    n_pad = o_ref.shape[1]
+    zp_ref[...] = jnp.zeros_like(zp_ref)     # zero the halo once
+    v = v_ref[...].astype(acc)
+    z = v / theta
+    z_old = jnp.zeros_like(v)
+    # The whole three-term recurrence unrolls STATICALLY — theta/delta/rhos
+    # are Python floats baked at trace time — so the band stack is read
+    # from HBM exactly once for all `order` mat-vecs and no intermediate z
+    # ever exists outside VMEM.
+    for rho, rho_old in rhos:
+        zp_ref[:, pl.ds(halo, n_pad)] = z
+        w = jnp.zeros((1, n_pad), acc)
+        for d, off in enumerate(offsets):
+            band = bands_ref[d:d + 1, :].astype(acc)
+            w += band * zp_ref[:, pl.ds(halo + off, n_pad)]
+        z_new = rho * (2.0 / delta * (v - w) + rho_old * (z - z_old)) + z
+        z_old, z = z, z_new
+    o_ref[...] = z
+
+
+@functools.partial(jax.jit, static_argnames=("offsets", "theta", "delta",
+                                             "rhos", "interpret"))
+def banded_cheb_apply(bands: jax.Array, v: jax.Array, offsets: tuple, *,
+                      theta: float, delta: float, rhos: tuple,
+                      interpret: bool = False) -> jax.Array:
+    """z ~= A^{-1} v by the fused Chebyshev recurrence (one launch).
+
+    bands/offsets as in ``spmv.banded_matvec``; theta/delta/rhos from
+    ``core/preconditioners.cheb_coeffs`` (static Python floats — the
+    spectral interval is estimated once at setup).  This is the kernel
+    behind ``ChebyshevPreconditioner`` on single-shard banded operators:
+    len(rhos) mat-vecs for ONE HBM pass over the band stack, gated by
+    ``tuning.cheb_fits``.
+    """
+    nbands, n = bands.shape
+    if len(offsets) != nbands:
+        raise TypeError(f"banded_cheb_apply: {nbands} bands but "
+                        f"{len(offsets)} offsets")
+    if v.shape != (n,):
+        raise TypeError(f"banded_cheb_apply: bands {bands.shape} need v of "
+                        f"shape ({n},), got {v.shape}")
+    halo = max(abs(int(o)) for o in offsets)
+    n_pad = tuning._round_up(n, tuning.LANE)
+    acc = _acc_dtype(bands.dtype, v.dtype)
+    out_dtype = jnp.promote_types(bands.dtype, v.dtype)
+    if n_pad != n:
+        bands = jnp.pad(bands, ((0, 0), (0, n_pad - n)))
+        v = jnp.pad(v, (0, n_pad - n))
+
+    z = pl.pallas_call(
+        functools.partial(_banded_cheb_kernel, offsets=offsets, halo=halo,
+                          theta=float(theta), delta=float(delta),
+                          rhos=tuple(rhos)),
+        in_specs=[
+            pl.BlockSpec((nbands, n_pad), lambda: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_pad), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), acc),
+        scratch_shapes=[pltpu.VMEM((1, n_pad + 2 * halo), acc)],
+        interpret=interpret,
+        name="gmres_precond_cheb_fused",
+    )(bands, v[None, :])
+    return z[0, :n].astype(out_dtype)
+
+
+# --------------------------------------------------------------------------
 # jnp oracle / fallback
 # --------------------------------------------------------------------------
-def matrix_powers_ref(matvec, x: jax.Array, s: int, eps, axis_name=None):
+def matrix_powers_ref(matvec, x: jax.Array, s: int, eps, axis_name=None,
+                      shifts: jax.Array | None = None):
     """s normalized powers via s sequential mat-vecs (the jnp reference).
 
     ``matvec`` is any operator/callable; under ``axis_name`` the per-power
     norm psums over the mesh axis — the reason the row-sharded s-step solve
     stays on this path (the reduction must cross shards between powers).
+    ``shifts`` (s,) selects the Newton basis as in ``banded_powers``.
     """
     from jax import lax
 
-    def power(u, _):
+    def power(u, shift):
         w = matvec(u)
+        if shift is not None:
+            w = w - shift * u
         nrm2 = jnp.vdot(w, w).real
         if axis_name is not None:
             nrm2 = lax.psum(nrm2, axis_name)
@@ -381,5 +557,6 @@ def matrix_powers_ref(matvec, x: jax.Array, s: int, eps, axis_name=None):
         u_next = w / jnp.maximum(sigma, jnp.asarray(eps, w.dtype))
         return u_next, (u_next, sigma)
 
-    _, (u, sigma) = lax.scan(power, x, None, length=s)
+    xs = None if shifts is None else jnp.asarray(shifts).reshape(s)
+    _, (u, sigma) = lax.scan(power, x, xs, length=s)
     return u, sigma

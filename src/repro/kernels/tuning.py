@@ -574,3 +574,69 @@ def fused_step_fits(m1: int, n: int, dtype, budget: int = VMEM_BUDGET,
             + np_ * acc * 2          # w accumulator + orthogonalized copy
             + 2 * b * b * sa)        # double-buffered A tile
     return need <= budget
+
+
+def cheb_fits(n: int, nbands: int, dtype, *, halo: int = 0,
+              budget: int = VMEM_BUDGET) -> bool:
+    """Can the fused Chebyshev-apply kernel keep its working set in VMEM?
+
+    The kernel is grid-free: the whole band stack, the input v and the
+    three recurrence vectors (z, z_old, the stencil accumulator) stay
+    resident for all ``order`` matvecs, plus the halo-padded z scratch.
+    This is the EXPLICIT dispatch gate for ``banded_cheb_apply`` — on
+    overflow (and in tests forcing it) the preconditioner degrades to the
+    psum-safe per-matvec recurrence through the operator.
+    """
+    s = itemsize(dtype)
+    np_ = _round_up(n, LANE)
+    need = (nbands * np_ * s            # resident band stack
+            + np_ * 4 * 4               # v, z, z_old, w (f32)
+            + (np_ + 2 * halo) * 4)     # halo-padded z scratch
+    return need <= budget
+
+
+@persistent_choice
+def choose_trisweep_block(n: int, nbands: int, k: int = 1,
+                          budget: int = VMEM_BUDGET) -> int:
+    """Row-block size for the banded triangular-sweep kernel.
+
+    The sweep is sequential in rows, so the block only sizes the VMEM
+    tiles (bands, v, z, and the (1, k + bm) carry ring) — bigger blocks
+    amortize grid overhead; the floor is the carry depth k (the shift
+    ``zp[:k] = zp[bm:bm+k]`` needs bm >= k).
+    """
+    best = LANE
+    for bm in (128, 256, 512, 1024, 2048, 4096):
+        need = (2 * bm * nbands * 4 + 3 * bm * 4 + (k + bm) * 4)
+        if need <= budget:
+            best = bm
+    return max(best, _round_up(k, LANE))
+
+
+def trisweep_fits(n: int, nbands: int, dtype, *, k: int = 1,
+                  budget: int = VMEM_BUDGET) -> bool:
+    """Can the triangular-sweep kernel hold a row block + carry ring?
+
+    The EXPLICIT dispatch gate for ``kernels/trisolve.banded_trisweep`` —
+    overflow (and tests forcing it) degrades to the lax.scan reference,
+    which computes the identical recurrence.
+    """
+    bm = _round_up(max(k, LANE), LANE)
+    need = 2 * bm * nbands * itemsize(dtype) + 3 * bm * 4 + (k + bm) * 4
+    return need <= budget
+
+
+def ell_powers_fits(n: int, width: int, dtype, s: int,
+                    budget: int = VMEM_BUDGET) -> bool:
+    """Can the ELL matrix-powers kernel keep values+cols+powers in VMEM?
+
+    Mirrors ``powers_fits``: the (s, n) normalized power block, current
+    operand and w accumulator in f32, plus the WHOLE (n, width)
+    values/cols pair resident (the sparse gather may touch any row, and
+    one residency pays for all s powers).  Failing the check sends the
+    s-step block to the jnp reference powers.
+    """
+    np_ = _round_up(n, LANE)
+    vecs = np_ * 4 * (_round_up(s, sublane("float32")) + 2)
+    need = vecs + np_ * width * (itemsize(dtype) + 4)
+    return need <= budget

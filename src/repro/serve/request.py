@@ -70,8 +70,52 @@ def validate_b(b, n: Optional[int] = None, dtype=None) -> np.ndarray:
     return arr
 
 
+def validate_precond(precond, op) -> None:
+    """Admission gate for the server's preconditioner vs its operator.
+
+    A mismatched preconditioner is the one bad parameter that CANNOT be
+    caught per-request: it is baked into the compiled cycle, so a wrong-n
+    or wrong-format M⁻¹ fails on the first tick INSIDE a lane, poisoning
+    every request batched with it.  Validate the pairing once, up front,
+    with the field named — the caller sees ``precond`` in the reason, not
+    a shape error from the middle of a jitted block GEMM.
+
+    Checks (all metadata-only; plain callables without the
+    :class:`~repro.core.preconditioners.Preconditioner` protocol pass
+    through — they advertise nothing to check against):
+
+    - ``precond`` is callable at all;
+    - ``precond.n`` (if advertised) matches the operator's row count;
+    - ``precond.requires_fmt`` (if advertised) matches the operator's
+      format tag — e.g. a dense-only block-Jacobi on a banded or sharded
+      operator is refused here, not inside a lane.
+    """
+    if precond is None:
+        return
+    if not callable(precond):
+        raise AdmissionError(
+            f"precond is not callable: {type(precond).__name__}")
+    name = getattr(precond, "name", type(precond).__name__)
+    shape = getattr(op, "shape", None)
+    op_n = int(shape[0]) if shape is not None else None
+    pc_n = getattr(precond, "n", None)
+    if pc_n is not None and op_n is not None and int(pc_n) != op_n:
+        raise AdmissionError(
+            f"precond '{name}' has n={int(pc_n)}, operator has n={op_n}")
+    fmt = getattr(precond, "requires_fmt", None)
+    if fmt is not None:
+        op_name = type(op).__name__
+        op_fmt = (op_name[:-len("Operator")].lower()
+                  if op_name.endswith("Operator") else "dense")
+        if op_fmt != fmt:
+            raise AdmissionError(
+                f"precond '{name}' requires a {fmt} operator, "
+                f"server operator is {op_fmt}")
+
+
 def validate_params(tol: float, max_restarts: int,
-                    deadline_ticks: Optional[int] = None) -> None:
+                    deadline_ticks: Optional[int] = None,
+                    *, precond=None, op=None) -> None:
     """Admission gate for the stopping contract itself.
 
     A non-finite or non-positive ``tol`` can never be met (or is met
@@ -79,6 +123,11 @@ def validate_params(tol: float, max_restarts: int,
     retire FAILED before its first cycle, and a non-positive deadline
     would TIMEOUT at admission — all of these used to poison a lane or
     wedge the tick loop; now they are REJECTED before touching the queue.
+
+    When ``precond``/``op`` are supplied, the preconditioner/operator
+    pairing is validated too (see :func:`validate_precond`) so a server
+    constructed with a mismatched M⁻¹ is refused before a handle — and
+    its compiled cycle — ever exists.
     """
     tol = float(tol)
     if not np.isfinite(tol) or tol <= 0.0:
@@ -89,6 +138,8 @@ def validate_params(tol: float, max_restarts: int,
     if deadline_ticks is not None and int(deadline_ticks) < 1:
         raise AdmissionError(
             f"deadline_ticks must be >= 1 (or None), got {deadline_ticks}")
+    if precond is not None:
+        validate_precond(precond, op)
 
 
 @dataclasses.dataclass(frozen=True)

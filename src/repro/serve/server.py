@@ -53,7 +53,7 @@ from repro.serve.handles import HandleCache, SolverHandle
 from repro.serve.queue import BackpressuredQueue
 from repro.serve.request import (AdmissionError, FAILED, REJECTED, TIMEOUT,
                                  SolveOutcome, SolveRequest, validate_b,
-                                 validate_params)
+                                 validate_params, validate_precond)
 
 
 class SolverServer:
@@ -76,6 +76,10 @@ class SolverServer:
                  breaker_threshold: int = 3, breaker_cooldown: int = 5,
                  breaker_max_trips: int = 2,
                  straggler_window: int = 50, straggler_zscore: float = 3.0):
+        # Precond/operator mismatch is rejected HERE, before a handle
+        # exists: it is the one parameter a per-request gate cannot
+        # catch, and letting it through fails inside a jitted lane.
+        validate_precond(precond, op)
         cache = handle_cache if handle_cache is not None else HandleCache()
         self.handle: SolverHandle = cache.get(op, m=m, k=k, dtype=dtype,
                                               gs=gs, precond=precond)

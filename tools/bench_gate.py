@@ -22,7 +22,12 @@ fails on perf-model regressions:
      wrapper's fault-free committed-cycle count (fast path AND stepped
      loop) must stay within 2% of the plain solver's restart count, and
      a solve recovered from an injected NaN must converge within +1
-     restart of fault-free — detection/recovery stays off the hot path.
+     restart of fault-free — detection/recovery stays off the hot path;
+  6. absolute invariants on the precond_restarts_* rows: Chebyshev(>=4)
+     and banded ILU(0) must cut restarts >= --precond-restart-factor x
+     (default 2) vs unpreconditioned at identical tol on the 2-D Poisson
+     and convection-diffusion stencils; the reference line-Jacobi rows
+     must merely never be WORSE than unpreconditioned.
 
 Rows are matched by name; rows present only on one side are skipped for
 diff checks (the smoke subset uses smaller cases than the full run) but
@@ -47,7 +52,8 @@ def _rows_by_name(payload):
 def check(current: dict, baseline: dict | None, *, tol: float,
           min_pipeline_ratio: float,
           serve_ideal_slack: float = 1.1,
-          recovery_overhead_slack: float = 1.02) -> list[str]:
+          recovery_overhead_slack: float = 1.02,
+          precond_restart_factor: float = 2.0) -> list[str]:
     fails = []
     cur = _rows_by_name(current)
     base = _rows_by_name(baseline) if baseline else {}
@@ -104,6 +110,24 @@ def check(current: dict, baseline: dict | None, *, tol: float,
                 fails.append(f"{name}: cycles_ideal {ideal} > "
                              f"cycles_sequential {seq} — model arithmetic "
                              f"broken")
+        # 6. preconditioning: Chebyshev(>=4) and banded ILU(0) must cut
+        #    restarts >= precond_restart_factor x on the stencil rows at
+        #    identical tol (the acceptance bar).  line_jacobi rows report
+        #    but are held only to "never worse" — it is the reference
+        #    smoother, not an acceptance vehicle.
+        if "restarts_precond" in r and "restarts_unprecond" in r:
+            rp, ru = r["restarts_precond"], r["restarts_unprecond"]
+            strong = ("chebyshev" in name or "banded_ilu0" in name
+                      or "hlo" in name)
+            factor = precond_restart_factor if strong else 1.0
+            if strong and rp * factor > ru:
+                fails.append(
+                    f"{name}: preconditioned restarts {rp} not "
+                    f">= {factor:.0f}x under unpreconditioned {ru}")
+            if not strong and rp > ru:
+                fails.append(
+                    f"{name}: preconditioned restarts {rp} worse than "
+                    f"unpreconditioned {ru}")
         # 5. self-healing: fault-free overhead <= 2%, recovery within +1
         if "overhead_ratio" in r:
             for key in ("overhead_ratio", "stepped_overhead_ratio"):
@@ -140,6 +164,10 @@ def main(argv=None) -> int:
     ap.add_argument("--recovery-overhead-slack", type=float, default=1.02,
                     help="allowed self-healing/plain cycle ratio on "
                          "recovery_* rows (fault-free path)")
+    ap.add_argument("--precond-restart-factor", type=float, default=2.0,
+                    help="required unprecond/precond restart ratio on the "
+                         "precond_restarts_* stencil rows (chebyshev and "
+                         "banded_ilu0)")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -154,7 +182,8 @@ def main(argv=None) -> int:
     fails = check(current, baseline, tol=args.tol,
                   min_pipeline_ratio=args.min_pipeline_ratio,
                   serve_ideal_slack=args.serve_ideal_slack,
-                  recovery_overhead_slack=args.recovery_overhead_slack)
+                  recovery_overhead_slack=args.recovery_overhead_slack,
+                  precond_restart_factor=args.precond_restart_factor)
     n = len(current.get("rows", []))
     nb = len(baseline.get("rows", [])) if baseline else 0
     matched = len(set(_rows_by_name(current)) & set(_rows_by_name(baseline))
