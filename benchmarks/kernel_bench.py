@@ -277,6 +277,180 @@ def spmv_rows(grids=((64, 64), (128, 128), (256, 256))):
     return _tag(rows)
 
 
+def sell_traffic(n: int, storage_entries: int, ell_width: int,
+                 identity_perm: bool, s: int = 4):
+    """Modeled per-matvec HBM bytes: sliced-ELL vs the plain ELL stream.
+
+    Plain ELL pads EVERY row to the global max width; sliced ELL stores
+    each slice at its own width, so its matrix stream is the actual
+    storage rectangle sum.  A sorted layout additionally reads the int32
+    row permutation to scatter y back (4n bytes); identity-order builds
+    (regular stencils under sort='auto') skip it — that is the
+    never-worse contract the gate enforces on stencil rows.
+    """
+    ell = n * ell_width * (s + 4) + 2 * s * n
+    sell = (storage_entries * (s + 4)
+            + (0 if identity_perm else 4 * n) + 2 * s * n)
+    return ell, sell
+
+
+def sell_spmv_rows(graph_ns=(2048, 4096), grids=((64, 64), (128, 128))):
+    """Sliced-ELL SpMV rows: power-law graphs (the win) + stencils (the
+    never-worse guard).
+
+    Power-law graph Laplacians (core/graphs.py) have hub rows that set
+    plain ELL's global width while the median row is ~100x narrower —
+    the padding plain ELL streams from HBM every matvec is the format's
+    entire cost.  Sliced ELL bins nnz-sorted rows into fixed-height
+    slices padded to their OWN width; the acceptance bar
+    (tools/bench_gate.py rule 7) is a >= 3x modeled traffic cut there
+    and <= 1.05x on the regular stencil rows, where sort='auto' keeps
+    identity order and the format degenerates to ELL.
+    """
+    from repro.core import graphs, stencils
+    from repro.kernels import spmv
+
+    rows = []
+
+    def _row(name, op, ell_op):
+        n = op.shape[0]
+        x = jax.random.normal(jax.random.PRNGKey(1), (n,))
+        sell_fn = _pick(lambda v: spmv.sell_matvec(op.bin_values,
+                                                   op.bin_cols, v,
+                                                   interpret=_interp()),
+                        lambda v: op(v))
+        t = _time(jax.jit(sell_fn), x)
+        width = ell_op.values.shape[1]
+        nnz = int(np.count_nonzero(np.asarray(ell_op.values)))
+        store = int(op.storage_entries)
+        b_ell, b_sell = sell_traffic(n, store, width, op.identity_perm)
+        rows.append({
+            "name": name,
+            "us": t * 1e6,
+            "hbm_bytes_ell": b_ell,
+            "hbm_bytes_sell": b_sell,
+            "traffic_ratio": b_sell / b_ell,
+            "derived": (f"sell/ell_hbm={b_sell / b_ell:.4f} "
+                        f"ell_width={width} bins={len(op.bin_values)} "
+                        f"identity_perm={int(op.identity_perm)} "
+                        f"pad_overhead={store / max(nnz, 1) - 1:.3f} "
+                        f"ell_pad_overhead="
+                        f"{n * width / max(nnz, 1) - 1:.3f} "
+                        f"tpu_mem_bound={b_sell / HBM_BW * 1e6:.2f}us"),
+        })
+
+    for n in graph_ns:
+        op = graphs.graph_laplacian(n, seed=0, fmt="sell", backend="pallas")
+        _row(f"sell_spmv_powerlaw_n{n}", op, op.to_ell())
+    for nx, ny in grids:
+        op = stencils.poisson_2d(nx, ny, fmt="sell", backend="pallas")
+        ell = stencils.poisson_2d(nx, ny, fmt="ell")
+        _row(f"sell_spmv_poisson2d_{nx}x{ny}", op, ell)
+    return _tag(rows)
+
+
+def graph_rows(cases=((1024, 8, 12, 16), (2048, 4, 12, 8))):
+    """PageRank-burst serving rows: sliced-ELL handles under the
+    continuous-batching server.
+
+    Each case submits ``nreq`` personalized-PageRank solves
+    ((I - alpha P) x = (1 - alpha) v, core/graphs.py) of one power-law
+    web graph through ``repro.serve.SolverServer`` keyed on a
+    ``slicedell`` handle, and reports the same packed / sequential /
+    ideal lockstep-cycle contract as the solver_serve_* family (gate
+    rule 4).  The A-traffic column uses the sliced-ELL stream — the
+    matrix every resident lane shares per Arnoldi step — so the row
+    composes the serving win with the format win.
+    """
+    import math
+
+    from repro.core import graphs
+    from repro.serve import SolverServer
+    from repro.serve.handles import operator_fmt
+
+    forced = os.environ.get("REPRO_KERNELS")
+    if MODE == "modeled":
+        os.environ["REPRO_KERNELS"] = "ref"
+    try:
+        rows = []
+        for n, k, m, nreq in cases:
+            op, make_rhs = graphs.pagerank_system(n, seed=0, fmt="sell",
+                                                  backend="pallas")
+            assert operator_fmt(op) == "slicedell", operator_fmt(op)
+            rng = np.random.default_rng(0)
+            # Mixed personalization tolerances, tightest first (the same
+            # longest-processing-time packing the solver_serve rows use):
+            # heterogeneous restart counts are what early retirement packs.
+            tols = [1e-6, 1e-5, 1e-4, 1e-3]
+            work = sorted(tols[i % len(tols)] for i in range(nreq))
+            srv = SolverServer(op, m=m, k=k, max_pending=2 * nreq)
+            t0 = time.perf_counter()
+            rids = [srv.submit(np.asarray(make_rhs(rng.random(n) + 0.1)),
+                               tol=t, max_restarts=100) for t in work]
+            packed = srv.run()
+            wall = time.perf_counter() - t0
+            outs = [srv.results[r] for r in rids]
+            assert all(o.status == "done" for o in outs), \
+                f"pagerank serve solve failed: {[o.status for o in outs]}"
+            restarts = [o.restarts for o in outs]
+            seq = sum(restarts)
+            ideal = max(math.ceil(seq / k), max(restarts))
+            a_step = int(op.storage_entries) * 8  # values + int32 cols
+            rows.append({
+                "name": f"graph_pagerank_serve_n{n}_k{k}_req{nreq}",
+                "us": wall * 1e6 / nreq,
+                "cycles_packed": packed,
+                "cycles_sequential": seq,
+                "cycles_ideal": ideal,
+                "hbm_bytes_packed_A": packed * m * a_step,
+                "hbm_bytes_sequential_A": seq * m * a_step,
+                "traffic_ratio": packed / seq,
+                "derived": (f"packed/sequential_cycles={packed / seq:.3f} "
+                            f"packed/ideal={packed / ideal:.3f} "
+                            f"fmt={srv.handle.key.fmt} "
+                            f"bins={len(op.bin_values)} "
+                            f"mass_err={max(abs(float(np.sum(o.x)) - 1.0) for o in outs):.2e}"),
+            })
+        return _tag(rows)
+    finally:
+        if forced is None:
+            os.environ.pop("REPRO_KERNELS", None)
+        else:
+            os.environ["REPRO_KERNELS"] = forced
+
+
+def _record_measured_blocks(cases=((4096, 9), (16384, 9))):
+    """--measure autotune: race the ELL kernel's row-block candidates on
+    THIS device and overwrite the persistent tuning cache with each
+    winner (``tuning.record_tuned``), so every later operator call that
+    hits the same (n, width, dtype, k) key — solver, server, bench —
+    uses the measured block instead of the VMEM-model guess.  Keys
+    mirror the ``SparseOperator`` call site exactly.
+    """
+    from repro.kernels import spmv, tuning
+
+    recorded = {}
+    for n, width in cases:
+        rng = np.random.default_rng(0)
+        vals = jnp.asarray(rng.standard_normal((n, width)), jnp.float32)
+        cols = jnp.asarray(rng.integers(0, n, (n, width)), jnp.int32)
+        x = jnp.asarray(rng.standard_normal((n,)), jnp.float32)
+        best, best_t = None, float("inf")
+        for bm in (128, 256, 512, 1024):
+            if bm > n:
+                break
+            fn = jax.jit(lambda v, bm=bm: spmv.ell_matvec(
+                vals, cols, v, block_m=bm, interpret=_interp()))
+            t = _time(fn, x, repeats=3)
+            if t < best_t:
+                best, best_t = bm, t
+        key = tuning.record_tuned(tuning.choose_spmv_block, best,
+                                  n, width, "float32", k=1)
+        recorded[key] = best
+        print(f"# autotune: {key} -> block_m={best} ({best_t * 1e6:.0f}us)")
+    return recorded
+
+
 def sstep_powers_traffic(n: int, nbands: int, s: int):
     """Modeled HBM bytes for s Krylov powers: fused banded kernel vs s SpMVs.
 
@@ -1063,6 +1237,11 @@ def main(json_path: str = "BENCH_kernels.json", smoke: bool = False,
          measure: bool = False):
     global MODE
     MODE = _detect_mode() if measure else "modeled"
+    if measure:
+        # Autotune-by-measurement: persist the timing winners BEFORE the
+        # row families run, so their operator calls pick them up.
+        _record_measured_blocks(cases=((4096, 9),) if smoke
+                                else ((4096, 9), (16384, 9)))
     if smoke:
         # CI schema guard: one cheap case per row family — EVERY family,
         # so no row's schema can drift unchecked — through the same code
@@ -1071,6 +1250,8 @@ def main(json_path: str = "BENCH_kernels.json", smoke: bool = False,
                 + fused_step_rows(cases=((96, 97),))
                 + block_matvec_rows(cases=((2048, 8),))
                 + spmv_rows(grids=((64, 64),))
+                + sell_spmv_rows(graph_ns=(512,), grids=((64, 64),))
+                + graph_rows(cases=((256, 4, 10, 6),))
                 + sstep_powers_rows(grids=((64, 64, 4),))
                 + block_gs_rows(cases=((21, 4096, 4),),
                                 batched_cases=((31, 2048, 2),))
@@ -1085,7 +1266,8 @@ def main(json_path: str = "BENCH_kernels.json", smoke: bool = False,
                 + attention_rows(cases=((1, 2, 2, 256, 64),)))
     else:
         rows = (matvec_rows() + gs_rows() + fused_step_rows()
-                + block_matvec_rows() + spmv_rows() + sstep_powers_rows()
+                + block_matvec_rows() + spmv_rows() + sell_spmv_rows()
+                + graph_rows() + sstep_powers_rows()
                 + block_gs_rows() + sharded_rows() + pipelined_rows()
                 + precision_restart_rows() + precond_rows()
                 + solver_serve_rows() + recovery_rows() + attention_rows())

@@ -1,0 +1,80 @@
+"""Power-law graphs + sliced-ELL storage — irregular sparsity done right.
+
+    PYTHONPATH=src python examples/graph_laplacian.py
+
+The stencil examples have the same nonzero count in every row, so plain
+ELL (pad all rows to the max width) wastes nothing.  Real graphs do not
+cooperate: a power-law web graph has a few hub rows with hundreds of
+neighbors and a long tail with a handful, and padding EVERY row to the
+hub width makes the matrix stream mostly zeros.  This walkthrough:
+
+1. Samples a power-law (Chung-Lu) graph and builds its Laplacian in the
+   sliced-ELL format (``SlicedEllOperator``): rows sorted by nonzero
+   count, cut into fixed-height slices, each slice padded only to its
+   own widest row.
+2. Compares storage and modeled HBM traffic against plain ELL — the
+   >= 3x cut the bench gate (tools/bench_gate.py rule 7) enforces.
+3. Solves personalized-PageRank systems (I - alpha P) x = (1 - alpha) v
+   through the continuous-batching ``SolverServer`` on a ``slicedell``
+   handle — a burst of random-walk queries against one shared graph.
+"""
+import numpy as np
+
+from repro.core import graphs
+from repro.serve import SolverServer
+from repro.serve.handles import operator_fmt
+
+
+def main():
+    # -- 1. the graph and its sliced-ELL Laplacian -------------------------
+    n = 1024
+    op = graphs.graph_laplacian(n, seed=0, fmt="sell", backend="pallas")
+    ell = op.to_ell()
+    deg = np.count_nonzero(np.asarray(ell.values), axis=1)
+    print(f"[1] power-law graph Laplacian: n={n}, max degree={deg.max()}, "
+          f"median degree={int(np.median(deg))}, "
+          f"{len(op.bin_values)} slices (heights x widths: "
+          f"{[(v.shape[0], v.shape[1]) for v in op.bin_values]})")
+
+    # -- 2. the storage/traffic story --------------------------------------
+    # Plain ELL pads every row to the hub width; sliced ELL pads each
+    # slice to its own width.  The matrix stream per matvec is 8 bytes an
+    # entry (f32 value + int32 col), so stored entries ~= HBM traffic.
+    ell_entries = ell.values.shape[0] * ell.values.shape[1]
+    nnz = int(deg.sum())
+    store = int(op.storage_entries)
+    print(f"[2] stored entries: ell={ell_entries:,} "
+          f"(pad {ell_entries / nnz - 1:.0%}) sell={store:,} "
+          f"(pad {store / nnz - 1:.0%}) — "
+          f"{ell_entries / store:.1f}x cut, nnz={nnz:,}")
+    assert ell_entries / store >= 3.0, "power-law cut below the gate bar"
+
+    # -- 3. a PageRank burst through the solver server ---------------------
+    # Each request is a personalized random-walk query: same graph (one
+    # handle, keyed fmt='slicedell'), different personalization vector v.
+    alpha = 0.85
+    pr_op, make_rhs = graphs.pagerank_system(n, alpha=alpha, seed=0,
+                                             fmt="sell", backend="pallas")
+    print(f"[3] serving (I - {alpha} P) x = {1 - alpha:.2f} v with a "
+          f"{operator_fmt(pr_op)!r} handle")
+    srv = SolverServer(pr_op, m=12, k=4)
+    rng = np.random.default_rng(1)
+    rids = [srv.submit(np.asarray(make_rhs(rng.random(n) + 0.1)),
+                       tol=1e-5, max_restarts=100) for _ in range(8)]
+    cycles = srv.run()
+    outs = [srv.results[r] for r in rids]
+    restarts = [o.restarts for o in outs]
+    mass = [float(np.sum(o.x)) for o in outs]
+    print(f"    {len(rids)} queries in {cycles} lockstep cycles "
+          f"(sequential would take {sum(restarts)}); statuses="
+          f"{sorted(set(o.status for o in outs))}, "
+          f"max |sum(x) - 1| = {max(abs(s - 1) for s in mass):.1e}")
+
+    assert all(o.status == "done" for o in outs)
+    assert cycles < sum(restarts)
+    assert max(abs(s - 1) for s in mass) < 1e-3   # PageRank mass conservation
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

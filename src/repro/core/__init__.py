@@ -6,22 +6,26 @@ Public API:
                              a thin wrapper over the SAME gmres cycle
   gmres_sstep_sharded        row-sharded communication-avoiding s-step
   strategies.*               the paper's four offload strategies
-  operators.*                dense / sparse / banded / matrix-free operators
+  operators.*                dense / sparse / sliced-ELL / banded /
+                             matrix-free operators
   stencils.*                 classic sparse test problems (Poisson 2D/3D,
                              convection-diffusion) as structured operators
+  graphs.*                   power-law graph workloads (Laplacians,
+                             PageRank-style systems) — the irregular-
+                             sparsity regime the sliced-ELL format targets
   preconditioners.*          Jacobi / block-Jacobi / polynomial
 """
 from repro.core.gmres import gmres, gmres_batched, gmres_jit, GmresResult
 from repro.core.sstep import gmres_sstep
 from repro.core.distributed import (gmres_sharded, gmres_sstep_sharded,
                                     make_sharded_solver, shard_specs)
-from repro.core import (arnoldi, givens, operators, preconditioners,
+from repro.core import (arnoldi, givens, graphs, operators, preconditioners,
                         stencils, strategies)
 
 __all__ = [
     "gmres", "gmres_batched", "gmres_jit", "GmresResult", "gmres_sstep",
     "gmres_sharded", "gmres_sstep_sharded", "make_sharded_solver",
     "shard_specs",
-    "arnoldi", "givens", "operators", "preconditioners", "stencils",
-    "strategies",
+    "arnoldi", "givens", "graphs", "operators", "preconditioners",
+    "stencils", "strategies",
 ]

@@ -54,6 +54,13 @@ def shard_specs(op, axis: str):
                                 ``__call__`` remaps them per shard)
       BandedOperator  bands  -> P(None, axis)     column blocks of the
                                 band stack == row blocks of the matrix
+      SlicedEllOperator        REPLICATED (P(None, ...) everywhere): the
+                                global nnz sort breaks contiguous row
+                                ownership, and the payload is the
+                                COMPRESSED form — its sharded ``__call__``
+                                slices local rows itself (halo path when
+                                the bandwidth bound allows, all-gather
+                                otherwise)
     """
     if isinstance(op, op_mod.DenseOperator):
         return op_mod.DenseOperator(P(axis, None), op.backend)
@@ -62,10 +69,15 @@ def shard_specs(op, axis: str):
                                      op.backend, op.halo)
     if isinstance(op, op_mod.BandedOperator):
         return op_mod.BandedOperator(P(None, axis), op.offsets, op.backend)
+    if isinstance(op, op_mod.SlicedEllOperator):
+        return op_mod.SlicedEllOperator(
+            tuple(P(None, None) for _ in op.bin_values),
+            tuple(P(None, None) for _ in op.bin_cols),
+            P(None), op.backend, op.halo, op.slice_height, op.identity_perm)
     raise TypeError(
         f"gmres_sharded needs an explicit-storage operator (Dense/Sparse/"
-        f"Banded) or a dense array; got {type(op).__name__} — matrix-free "
-        f"operators already compose with shard_map directly via "
+        f"Banded/SlicedEll) or a dense array; got {type(op).__name__} — "
+        f"matrix-free operators already compose with shard_map directly via "
         f"gmres(..., axis_name=...)")
 
 

@@ -1,0 +1,118 @@
+"""Power-law graph workloads: Laplacians and PageRank-style systems.
+
+The paper's benchmarks (and the stencil constructors in
+``core/stencils.py``) live in the REGULAR sparsity regime — every row has
+the same handful of nonzeros.  The serving layer's "many users, many
+graphs" scenario lives in the other one: power-law graphs, where node
+degree spans orders of magnitude and one hub row makes plain ELL's
+pad-to-widest pathological.  That regime is what the sliced-ELL format
+exists for (``operators.SlicedEllOperator``), and these generators are
+its workload: deterministic in ``seed``, host-side numpy construction
+(same contract as ``SparseOperator.from_dense``), returning operators in
+the caller's choice of ``fmt``.
+
+Two linear systems per graph:
+
+  ``graph_laplacian``  L = D - A + shift*I.  Symmetric positive definite
+      (the shift lifts the zero eigenvalue of the connected component),
+      the canonical "diffusion on a network" solve.
+
+  ``pagerank_system``  (I - alpha*P) x = (1 - alpha) v with P = A D^-1
+      column-stochastic: the LINEAR-SYSTEM form of PageRank.  For
+      alpha < 1 every column sums to 1 - alpha + diag > 0, so the matrix
+      is diagonally dominant by columns — nonsymmetric, GMRES territory,
+      and each personalization vector v is one request: a burst of them
+      through ``serve.SolverServer`` is the graph serving demo
+      (``examples/graph_laplacian.py``).
+
+The graph model is Chung-Lu with a pinned hub: node i gets expected
+degree w_i = max_degree * (i + 1)^(-1/(gamma - 1)) (a power law in the
+degree rank), edge (i, j) appears independently with probability
+min(1, w_i w_j / sum(w)), and a deterministic ring i -- i+1 guarantees
+connectivity and min degree 2.  Pinning w_0 = max_degree makes the
+hub regime (max degree >> median degree) a property of the generator,
+not a lucky draw — the bench gate's >= 3x traffic-cut bar needs that.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.operators import (DenseOperator, SlicedEllOperator,
+                                  SparseOperator)
+
+
+def powerlaw_adjacency(n: int, *, gamma: float = 2.3,
+                       max_degree: int | None = None,
+                       seed: int = 0) -> np.ndarray:
+    """Symmetric 0/1 Chung-Lu adjacency (numpy, deterministic in seed).
+
+    ``max_degree`` defaults to n**0.75 — deep in the hub regime for any
+    bench-sized n — and caps at n - 1.
+    """
+    if max_degree is None:
+        max_degree = int(round(n ** 0.75))
+    max_degree = min(int(max_degree), n - 1)
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    w = max_degree * ranks ** (-1.0 / (gamma - 1.0))
+    prob = np.minimum(np.outer(w, w) / w.sum(), 1.0)
+    rng = np.random.default_rng(seed)
+    upper = np.triu(rng.random((n, n)) < prob, k=1)
+    a = (upper | upper.T).astype(np.float64)
+    ring = np.arange(n - 1)
+    a[ring, ring + 1] = 1.0
+    a[ring + 1, ring] = 1.0
+    np.fill_diagonal(a, 0.0)
+    return a
+
+
+def _as_operator(a_np: np.ndarray, fmt: str, dtype, slice_height: int,
+                 backend: str):
+    a_np = a_np.astype(jnp.dtype(dtype).name)
+    if fmt == "sell":
+        return SlicedEllOperator.from_dense(a_np, slice_height=slice_height,
+                                            backend=backend)
+    if fmt == "ell":
+        return SparseOperator.from_dense(a_np, backend=backend)
+    if fmt == "dense":
+        return DenseOperator(jnp.asarray(a_np), backend)
+    raise ValueError(f"unknown fmt {fmt!r}; options: sell, ell, dense")
+
+
+def graph_laplacian(n: int, *, gamma: float = 2.3,
+                    max_degree: int | None = None, seed: int = 0,
+                    shift: float = 1e-2, dtype=jnp.float32,
+                    fmt: str = "sell", slice_height: int = 64,
+                    backend: str = "jnp"):
+    """Shifted graph Laplacian L = D - A + shift*I of a power-law graph."""
+    a = powerlaw_adjacency(n, gamma=gamma, max_degree=max_degree, seed=seed)
+    lap = np.diag(a.sum(axis=1) + shift) - a
+    return _as_operator(lap, fmt, dtype, slice_height, backend)
+
+
+def pagerank_system(n: int, *, alpha: float = 0.85, gamma: float = 2.3,
+                    max_degree: int | None = None, seed: int = 0,
+                    dtype=jnp.float32, fmt: str = "sell",
+                    slice_height: int = 64, backend: str = "jnp"):
+    """PageRank as a linear system: returns (op, make_rhs).
+
+    ``op`` applies I - alpha*P (P column-stochastic on the graph);
+    ``make_rhs(v)`` turns a personalization vector v (nonnegative, will
+    be normalized to sum 1) into the right-hand side (1 - alpha) * v.
+    The solution x of op @ x = make_rhs(v) is the personalized PageRank
+    distribution — sums to 1 up to solver tolerance.
+    """
+    if not 0.0 < alpha < 1.0:
+        raise ValueError(f"alpha must be in (0, 1), got {alpha}")
+    a = powerlaw_adjacency(n, gamma=gamma, max_degree=max_degree, seed=seed)
+    deg = a.sum(axis=0)
+    p_mat = a / np.maximum(deg, 1.0)[None, :]
+    m = np.eye(n) - alpha * p_mat
+    op = _as_operator(m, fmt, dtype, slice_height, backend)
+
+    def make_rhs(v):
+        v = jnp.asarray(v, jnp.dtype(dtype))
+        v = v / jnp.sum(v)
+        return (1.0 - alpha) * v
+
+    return op, make_rhs

@@ -3,13 +3,18 @@
 The paper solves dense ``Ax = b``; production Krylov use is matrix-free
 (Newton--Krylov, preconditioned operators) and — above all — sparse:
 discretized PDEs where A has O(n) nonzeros and SpMV throughput, not dense
-GEMV, dominates the solve.  Four operator classes cover the spectrum:
+GEMV, dominates the solve.  Five operator classes cover the spectrum:
 
-  DenseOperator     explicit (n, n) matrix (the paper's setting)
-  SparseOperator    ELL-format general sparsity (values/cols, fixed width)
-  BandedOperator    DIA-style band stack + static diagonal offsets
-                    (five/seven-point stencils, convection-diffusion)
-  FunctionOperator  matrix-free ``v -> A @ v`` callable
+  DenseOperator      explicit (n, n) matrix (the paper's setting)
+  SparseOperator     ELL-format general sparsity (values/cols, fixed width)
+  SlicedEllOperator  SELL-C-sigma-style sliced ELL: rows sorted by nonzero
+                     count into fixed-height slices, each padded only to
+                     its own widest row — the irregular-sparsity format
+                     (power-law graphs, where plain ELL's pad-to-widest
+                     is pathological)
+  BandedOperator     DIA-style band stack + static diagonal offsets
+                     (five/seven-point stencils, convection-diffusion)
+  FunctionOperator   matrix-free ``v -> A @ v`` callable
 
 Every explicit-storage operator takes ``backend="jnp" | "pallas"``: the
 pallas backend routes mat-vecs through the tiled VMEM kernels
@@ -402,6 +407,323 @@ class BandedOperator:
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
+class SlicedEllOperator:
+    """Sliced-ELL (SELL-C-sigma-style) operator for irregular row patterns.
+
+    Plain ELL pads EVERY row to the widest row's nonzero count — fine for
+    stencils, pathological for power-law graphs where one hub row inflates
+    storage and HBM traffic for all n rows.  Sliced ELL sorts rows by
+    nonzero count (descending, stable), cuts the sorted order into
+    fixed-height slices of ``slice_height`` rows, pads each slice only to
+    its own widest row, and keeps a permutation to recover the original
+    row order.  Consecutive same-width slices (the common case after the
+    sort) are stored as ONE rectangle, so the payload is a short tuple of
+    width BINS:
+
+      bin_values[b]  (rows_b, width_b)  values, sorted-row frame
+      bin_cols[b]    (rows_b, width_b)  int32 GLOBAL column indices
+      perm           (n,) int32 — perm[i] = original row at sorted slot i
+
+    The mat-vec is one row-binned gather kernel launch per bin
+    (``kernels/spmv.sell_matvec``; a handful of launches — the builder
+    agglomerates bins to ``max_bins``) over the shared VMEM-resident
+    operand, then a scatter through ``perm`` back to original order.
+    Traffic is proportional to sum_b rows_b*width_b instead of
+    n*max_width — the whole point of the format.
+
+    When sorting would NOT shrink storage (near-uniform row lengths: the
+    stencils), ``from_dense``/``from_ell`` keep the ORIGINAL row order
+    (``sort="auto"`` — sigma = 1 in SELL-C-sigma terms) so ``perm`` is the
+    identity, the scatter disappears, and the layout degenerates to plain
+    ELL with per-slice widths: sliced ELL is never worse where ELL was
+    already tight.
+
+    Row-sharded solves (``shard_specs`` replicates the payload — the
+    global sort breaks contiguous row ownership, and the payload is the
+    COMPRESSED form): with a usable ``halo`` bound the operator
+    re-materializes its plain-ELL row table once per trace (hoisted out
+    of the Arnoldi loop by XLA LICM, same argument as SparseOperator's
+    column remap), slices the local row block, and rides the standard
+    neighbor halo exchange; otherwise it all-gathers the operand and
+    slices the local output rows.  Power-law graphs have halo ~ n (the
+    hub touches everything), so they take the all-gather path — which is
+    what their structure demands.
+    """
+
+    bin_values: tuple   # of (rows_b, width_b) arrays, nnz-sorted row frame
+    bin_cols: tuple     # of (rows_b, width_b) int32, GLOBAL columns
+    perm: jax.Array     # (n,) int32
+    backend: str = "jnp"
+    halo: Optional[int] = None      # static bandwidth bound (aux data)
+    slice_height: int = 64          # C in SELL-C-sigma (aux data)
+    identity_perm: bool = False     # static: builder kept original order
+
+    def __call__(self, v: jax.Array) -> jax.Array:
+        from repro.kernels import tuning
+
+        k = 1 if v.ndim == 1 else v.shape[1]
+        axis = tuning.shard_axis()
+        if axis is not None:
+            return self._sharded_call(v, axis, k)
+        return self._unsort(self._sorted_matvec(v, k))
+
+    def _sorted_matvec(self, v: jax.Array, k: int) -> jax.Array:
+        """Per-bin SpMV producing the output in the SORTED row frame."""
+        from repro.kernels import spmv, tuning
+
+        n = self.perm.shape[0]
+        if self.backend == "pallas":
+            mode = tuning.kernel_mode()
+            if mode != "ref" and tuning.sell_fits(n, self.max_width,
+                                                  self.dtype, k=k):
+                bms = tuple(
+                    tuning.choose_sell_block(
+                        n, vals.shape[0], vals.shape[1],
+                        jnp.dtype(vals.dtype).name, k=k,
+                        slice_height=self.slice_height)
+                    for vals in self.bin_values)
+                return spmv.sell_matvec(self.bin_values, self.bin_cols, v,
+                                        block_ms=bms,
+                                        interpret=mode == "interpret")
+        return spmv.sell_matvec_ref(self.bin_values, self.bin_cols, v)
+
+    def _unsort(self, y_sorted: jax.Array) -> jax.Array:
+        if self.identity_perm:
+            return y_sorted
+        return jnp.zeros_like(y_sorted).at[self.perm].set(y_sorted)
+
+    def _sharded_call(self, v: jax.Array, axis: str, k: int) -> jax.Array:
+        """Row-sharded matvec over the REPLICATED sliced payload.
+
+        ``v`` is the local (n/P, ...) operand shard; the result is the
+        matching local output shard.  See the class docstring for the two
+        communication patterns (halo vs all-gather).
+        """
+        from repro.kernels import spmv, tuning
+
+        nl = v.shape[0]
+        halo = self.halo
+        p = lax.axis_index(axis)
+        if halo is not None and halo <= nl:
+            # Same per-shard pattern as SparseOperator, over the plain-ELL
+            # row table re-materialized from the bins: a pure function of
+            # solve constants, so XLA LICM hoists it out of the solver's
+            # while_loop — the trade is plain-ELL-padded LOCAL traffic for
+            # O(halo) exchanged bytes.
+            vals, cols = self.to_ell_arrays()
+            width = vals.shape[1]
+            vals_l = lax.dynamic_slice_in_dim(vals, p * nl, nl, 0)
+            cols_l = lax.dynamic_slice_in_dim(cols, p * nl, nl, 0)
+            cols_local = jnp.clip(cols_l - p * nl + halo, 0,
+                                  nl + 2 * halo - 1).astype(jnp.int32)
+            x_halo = spmv.halo_exchange(v, halo, axis, tuning.shard_size())
+            mode = tuning.kernel_mode()
+            if (self.backend == "pallas" and mode != "ref"
+                    and tuning.spmv_fits(nl, width, self.dtype, k=k,
+                                         halo=halo)):
+                bm = tuning.choose_spmv_block(
+                    nl, width, jnp.dtype(self.dtype).name, k=k, halo=halo)
+                return spmv.ell_matvec_halo(vals_l, cols_local, x_halo,
+                                            block_m=bm,
+                                            interpret=mode == "interpret")
+            return spmv.ell_matvec_ref(vals_l, cols_local, x_halo)
+        x_full = lax.all_gather(v, axis, tiled=True)
+        y = self._unsort(self._sorted_matvec(x_full, k))
+        return lax.dynamic_slice_in_dim(y, p * nl, nl, 0)
+
+    # -- format conversions -------------------------------------------------
+    @classmethod
+    def from_dense(cls, a, *, slice_height: int = 64, backend: str = "jnp",
+                   sort: bool | str = "auto",
+                   max_bins: int = 8) -> "SlicedEllOperator":
+        """Compress a dense (n, n) matrix to sliced-ELL form.
+
+        Handles UNSTRUCTURED nonzero patterns: each row's nonzeros are
+        packed independently and the static ``halo`` (bandwidth) bound is
+        recorded from the pattern, exactly like ``SparseOperator.
+        from_dense``.  ``sort="auto"`` sorts rows by nonzero count only
+        when that shrinks slice storage by >= 10% (see class docstring);
+        pass True/False to force.  Host-side numpy, like every
+        ``from_dense`` here.
+        """
+        a_np = np.asarray(a)
+        n = a_np.shape[0]
+        mask = a_np != 0
+        nnz = mask.sum(axis=1)
+        wtab = max(int(nnz.max()) if n else 0, 1)
+        order = np.argsort(~mask, axis=1, kind="stable")[:, :wtab]
+        vals = np.take_along_axis(a_np, order, axis=1)
+        keep = np.take_along_axis(mask, order, axis=1)
+        row_vals = np.where(keep, vals, 0).astype(a_np.dtype)
+        row_cols = np.where(keep, order, 0)
+        rows, nz_cols = np.nonzero(mask)
+        halo = int(np.abs(nz_cols - rows).max()) if rows.size else 0
+        return cls._build(row_vals, row_cols, nnz, slice_height, backend,
+                          halo, sort=sort, max_bins=max_bins)
+
+    @classmethod
+    def from_ell(cls, sp: SparseOperator, *, slice_height: int = 64,
+                 backend: str | None = None, sort: bool | str = "auto",
+                 max_bins: int = 8) -> "SlicedEllOperator":
+        """Re-slice a plain-ELL operator (value-0 slots become padding).
+
+        Genuine stored zeros are dropped — same semantics as
+        ``from_dense`` on the materialized matrix.
+        """
+        vals_np = np.asarray(sp.values)
+        cols_np = np.asarray(sp.cols)
+        mask = vals_np != 0
+        nnz = mask.sum(axis=1)
+        # Pack each row's nonzero slots first (stable, order-preserving).
+        order = np.argsort(~mask, axis=1, kind="stable")
+        keep = np.take_along_axis(mask, order, axis=1)
+        row_vals = np.where(keep, np.take_along_axis(vals_np, order, 1), 0)
+        row_cols = np.where(keep, np.take_along_axis(cols_np, order, 1), 0)
+        halo = sp.halo
+        if halo is None:
+            r, c = np.nonzero(mask)
+            halo = int(np.abs(cols_np[r, c] - r).max()) if r.size else 0
+        return cls._build(row_vals.astype(vals_np.dtype), row_cols, nnz,
+                          slice_height,
+                          sp.backend if backend is None else backend,
+                          halo, sort=sort, max_bins=max_bins)
+
+    @classmethod
+    def _build(cls, row_vals, row_cols, nnz, slice_height, backend, halo,
+               *, sort="auto", max_bins=8) -> "SlicedEllOperator":
+        """Shared host-side builder over a packed per-row nonzero table.
+
+        ``row_vals``/``row_cols`` are (n, w) numpy arrays with each row's
+        nonzeros packed FIRST (slots >= nnz[i] hold value 0 at column 0).
+        Slices the (possibly sorted) row order into ``slice_height``
+        chunks, then greedily merges adjacent slices until at most
+        ``max_bins`` rectangles remain — each merge pads the smaller
+        slice up to the wider one, and the merge order minimizes the
+        padding added, so the bin count (= kernel launch count) is bounded
+        while the storage stays near the per-slice optimum.
+        """
+        n = row_vals.shape[0]
+        c = max(int(slice_height), 1)
+
+        def slice_storage(order):
+            return sum(
+                len(order[s0:s0 + c]) * int(nnz[order[s0:s0 + c]].max())
+                for s0 in range(0, n, c)) if n else 0
+
+        ident = np.arange(n)
+        by_nnz = np.argsort(-nnz, kind="stable")
+        if sort == "auto":
+            use_sort = slice_storage(by_nnz) < 0.9 * slice_storage(ident)
+        else:
+            use_sort = bool(sort)
+        order = by_nnz if use_sort else ident
+        # Per-slice exact widths (>= 1 so padding slots exist), merged
+        # into [row_start, row_end, width) bins.
+        bins = []
+        for s0 in range(0, n, c):
+            h = min(c, n - s0)
+            w = max(int(nnz[order[s0:s0 + h]].max()), 1)
+            if bins and bins[-1][2] == w:
+                bins[-1][1] += h
+            else:
+                bins.append([s0, s0 + h, w])
+        if not bins:
+            bins = [[0, 0, 1]]
+
+        def merge_cost(i):
+            (a0, a1, aw), (b0, b1, bw) = bins[i], bins[i + 1]
+            w = max(aw, bw)
+            return (a1 - a0) * (w - aw) + (b1 - b0) * (w - bw)
+
+        while len(bins) > max(int(max_bins), 1):
+            i = min(range(len(bins) - 1), key=merge_cost)
+            (a0, a1, aw), (b0, b1, bw) = bins[i], bins[i + 1]
+            bins[i:i + 2] = [[a0, b1, max(aw, bw)]]
+
+        bin_values, bin_cols = [], []
+        for r0, r1, w in bins:
+            rows = order[r0:r1]
+            bin_values.append(jnp.asarray(row_vals[rows][:, :w]))
+            bin_cols.append(
+                jnp.asarray(row_cols[rows][:, :w].astype(np.int32)))
+        return cls(tuple(bin_values), tuple(bin_cols),
+                   jnp.asarray(order.astype(np.int32)), backend, halo,
+                   c, bool(np.array_equal(order, ident)))
+
+    def to_ell_arrays(self):
+        """Plain-ELL (values, cols) row table in ORIGINAL row order.
+
+        Width = the widest bin.  Pure jnp — usable under jit/shard_map,
+        where it is a function of solve constants and gets hoisted out of
+        solver loops (the sharded halo path relies on this).
+        """
+        n = self.perm.shape[0]
+        w = self.max_width
+        vs = [jnp.pad(v, ((0, 0), (0, w - v.shape[1])))
+              for v in self.bin_values]
+        cs = [jnp.pad(col, ((0, 0), (0, w - col.shape[1])))
+              for col in self.bin_cols]
+        values = (jnp.zeros((n, w), self.dtype)
+                  .at[self.perm].set(jnp.concatenate(vs, axis=0)))
+        cols = (jnp.zeros((n, w), jnp.int32)
+                .at[self.perm].set(jnp.concatenate(cs, axis=0)))
+        return values, cols
+
+    def to_ell(self, backend: str | None = None) -> SparseOperator:
+        """Expand back to a plain-ELL operator (pad-to-widest)."""
+        values, cols = self.to_ell_arrays()
+        return SparseOperator(values, cols,
+                              self.backend if backend is None else backend,
+                              self.halo)
+
+    def todense(self) -> jax.Array:
+        """Materialize the dense (n, n) matrix (tests / small systems)."""
+        n = self.perm.shape[0]
+        a = jnp.zeros((n, n), self.dtype)
+        start = 0
+        for vals, cols in zip(self.bin_values, self.bin_cols):
+            rb, wb = vals.shape
+            orig = self.perm[start:start + rb]
+            rows = jnp.repeat(orig, wb)
+            a = a.at[rows, cols.reshape(-1)].add(vals.reshape(-1))
+            start += rb
+        return a
+
+    # -- format statistics (static python ints; bench/docs read these) ------
+    @property
+    def max_width(self) -> int:
+        return max(int(v.shape[1]) for v in self.bin_values)
+
+    @property
+    def storage_entries(self) -> int:
+        """Stored slots incl. slice padding: sum_b rows_b * width_b."""
+        return sum(int(v.shape[0]) * int(v.shape[1])
+                   for v in self.bin_values)
+
+    @property
+    def shape(self):
+        n = self.perm.shape[0]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return self.bin_values[0].dtype
+
+    def tree_flatten(self):
+        return ((self.bin_values, self.bin_cols, self.perm),
+                (self.backend, self.halo, self.slice_height,
+                 self.identity_perm))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        bin_values, bin_cols, perm = children
+        backend, halo, slice_height, identity_perm = aux
+        return cls(tuple(bin_values), tuple(bin_cols), perm, backend, halo,
+                   slice_height, identity_perm)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
 class FunctionOperator:
     """Matrix-free operator ``v -> A @ v``.
 
@@ -432,7 +754,30 @@ class FunctionOperator:
 
 # Operators with explicit matrix storage: their (n, k) multi-RHS __call__
 # lets the block solver stream the matrix ONCE for all k lanes.
-EXPLICIT_OPERATORS = (DenseOperator, SparseOperator, BandedOperator)
+EXPLICIT_OPERATORS = (DenseOperator, SparseOperator, BandedOperator,
+                      SlicedEllOperator)
+
+
+def with_dtype(op, dtype):
+    """The same explicit operator with its matrix storage cast to ``dtype``.
+
+    Structure (cols/offsets/perm/halo) is untouched — only the value
+    stream changes.  This is how the solvers build a reduced-precision
+    operand stream (``compute_dtype=bf16``) while keeping the original
+    operator for full-precision residual recomputation.
+    """
+    if isinstance(op, DenseOperator):
+        return DenseOperator(op.a.astype(dtype), op.backend)
+    if isinstance(op, SparseOperator):
+        return SparseOperator(op.values.astype(dtype), op.cols, op.backend,
+                              op.halo)
+    if isinstance(op, BandedOperator):
+        return BandedOperator(op.bands.astype(dtype), op.offsets, op.backend)
+    if isinstance(op, SlicedEllOperator):
+        return SlicedEllOperator(
+            tuple(v.astype(dtype) for v in op.bin_values), op.bin_cols,
+            op.perm, op.backend, op.halo, op.slice_height, op.identity_perm)
+    raise TypeError(f"with_dtype: no explicit storage on {type(op).__name__}")
 
 
 def as_operator(a) -> Callable[[jax.Array], jax.Array]:

@@ -84,6 +84,8 @@ def _op_nnz(op) -> float:
         return float(op.bands.shape[0] * op.bands.shape[1])
     if isinstance(op, op_mod.SparseOperator):
         return float(op.values.shape[0] * op.values.shape[1])
+    if isinstance(op, op_mod.SlicedEllOperator):
+        return float(op.storage_entries)
     if isinstance(op, op_mod.DenseOperator):
         return float(op.a.shape[0] * op.a.shape[1])
     n = _op_dim(op) or 0
@@ -168,8 +170,30 @@ def _diag_of(op) -> jax.Array:
         n = op.values.shape[0]
         hit = op.cols == jnp.arange(n)[:, None]
         return jnp.sum(jnp.where(hit, op.values, 0), axis=1)
+    if isinstance(op, op_mod.SlicedEllOperator):
+        # Per bin, a row's diagonal hit is where a stored GLOBAL column
+        # equals the row's ORIGINAL index; scatter the sorted-frame result
+        # back through perm.  (Padding slots: value 0, so a spurious
+        # col-0 match on original row 0 adds exactly 0.)
+        return _sell_rowreduce(
+            op, lambda vals, cols, orig:
+                jnp.sum(jnp.where(cols == orig[:, None], vals, 0), axis=1))
     raise ValueError(f"jacobi needs explicit storage to read diag(A); got "
                      f"{type(op).__name__}")
+
+
+def _sell_rowreduce(op, fn) -> jax.Array:
+    """Apply ``fn(vals, cols, orig_rows) -> (rows_b,)`` per sliced-ELL bin
+    and scatter the concatenated result back to original row order."""
+    parts, start = [], 0
+    for vals, cols in zip(op.bin_values, op.bin_cols):
+        rb = vals.shape[0]
+        parts.append(fn(vals, cols, op.perm[start:start + rb]))
+        start += rb
+    out = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    if op.identity_perm:
+        return out
+    return jnp.zeros_like(out).at[op.perm].set(out)
 
 
 class JacobiPreconditioner(Preconditioner):
@@ -323,6 +347,11 @@ def _row_sums_and_diag(op) -> Tuple[jax.Array, jax.Array]:
     if isinstance(op, op_mod.SparseOperator):
         return (jnp.sum(jnp.abs(op.values.astype(jnp.float32)), axis=1),
                 _diag_of(op).astype(jnp.float32))
+    if isinstance(op, op_mod.SlicedEllOperator):
+        sums = _sell_rowreduce(
+            op, lambda vals, cols, orig:
+                jnp.sum(jnp.abs(vals.astype(jnp.float32)), axis=1))
+        return sums, _diag_of(op).astype(jnp.float32)
     if isinstance(op, op_mod.DenseOperator):
         a = op.a.astype(jnp.float32)
         return jnp.sum(jnp.abs(a), axis=1), jnp.diagonal(a)

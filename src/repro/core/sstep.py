@@ -82,8 +82,9 @@ from jax import lax
 from repro.core import arnoldi, givens
 from repro.core.gmres import (Diagnostics, GmresResult, check_precond,
                               classify_residuals)
-from repro.core.operators import (BandedOperator, DenseOperator,
-                                  SparseOperator, as_operator)
+from repro.core.operators import (EXPLICIT_OPERATORS, BandedOperator,
+                                  DenseOperator, SparseOperator, as_operator,
+                                  with_dtype)
 
 
 def _leja_perm(s: int) -> tuple:
@@ -292,14 +293,21 @@ def _block_step(powers_fn, gs_pass, v_basis, h, k_start: int, s: int, eps,
     """
     m1p, n_pad = v_basis.shape
     m1 = h.shape[0]                      # live rows: m + 1
+    # Two precisions, same split as the standard cycle's compute_dtype
+    # path: the STREAMS (basis rows, power block — the O(n) traffic) live
+    # in the basis dtype, while the replicated (s x s)/(m x s) algebra —
+    # CholQR, Hessenberg recurrence — runs in h's dtype (b.dtype).  The
+    # block-GS passes already accumulate in promote(stream, f32), so a
+    # bf16 basis halves the streamed bytes without bf16 dot products.
     dtype = v_basis.dtype
+    hdt = h.dtype
 
     # ---- s mat-vecs, no inner products (communication: matvec only) -----
     # One fused launch on the kernel path: A is streamed once for the whole
     # block (banded) or once per power (dense), u_j never round-trips.
     u_cols, sigma = powers_fn(v_basis[k_start, :n])
     u_cols = u_cols.astype(dtype)        # (s, n) power basis; A u_{j-1} =
-    sigma = sigma.astype(dtype)          # sigma[j] u_j
+    sigma = sigma.astype(hdt)            # sigma[j] u_j
     if n_pad != n:                       # cheap (s, n_pad) copy; the BASIS
         u_cols = jnp.pad(u_cols, ((0, 0), (0, n_pad - n)))  # is never re-padded
 
@@ -312,13 +320,13 @@ def _block_step(powers_fn, gs_pass, v_basis, h, k_start: int, s: int, eps,
         # mid-cycle and the power basis collapsed.  The floor is the
         # scale-free breakdown guard, NOT an absolute 1.0: a system scaled
         # by c must produce the same solve (only a true zero Gram hits it).
-        g = g.astype(dtype)
-        guard = jnp.asarray(jnp.finfo(dtype).tiny ** 0.5, dtype)
+        g = g.astype(hdt)
+        guard = jnp.asarray(jnp.finfo(hdt).tiny ** 0.5, hdt)
         ridge = jnp.maximum(jnp.max(jnp.diagonal(g)), guard) * eps
-        g = g + ridge * jnp.eye(s, dtype=dtype)
+        g = g + ridge * jnp.eye(s, dtype=hdt)
         return jnp.linalg.cholesky(g).mT                  # upper
 
-    eye_s = jnp.eye(s, dtype=dtype)
+    eye_s = jnp.eye(s, dtype=hdt)
     if gram is None:
         c1, w1, g1 = gs_pass(v_basis, u_cols, eye_s, row_mask)
     else:
@@ -333,7 +341,10 @@ def _block_step(powers_fn, gs_pass, v_basis, h, k_start: int, s: int, eps,
         c2, w2, g2, c_hat2 = gs_pass(v_basis, w1.astype(dtype), t1,
                                      row_mask, gram)
     r2 = cholqr_factor(g2)
-    q = jax.scipy.linalg.solve_triangular(r2.mT, w2.astype(dtype),
+    # Back-substitute in the algebra dtype (w2 arrives in the passes' f32
+    # accumulator); the result is quantized ONCE, where it joins the
+    # stored basis stream.
+    q = jax.scipy.linalg.solve_triangular(r2.mT, w2.astype(hdt),
                                           lower=True)
     if gram is not None:
         # Extend the maintained Gram matrix by the s rows just built.
@@ -348,12 +359,12 @@ def _block_step(powers_fn, gs_pass, v_basis, h, k_start: int, s: int, eps,
         gram = lax.dynamic_update_slice(gram, diag, (k_start + 1, k_start + 1))
     # Padded basis rows are masked to zero in C, so the Hessenberg algebra
     # below runs at the live (m+1) row count.
-    c_tot = (c1[:m1] + c2[:m1] @ r1).astype(dtype)  # (m1, s)
+    c_tot = (c1[:m1].astype(hdt) + c2[:m1].astype(hdt) @ r1)  # (m1, s)
     r_tot = r2 @ r1                                 # (s, s) upper
 
     # ---- exact Hessenberg columns from the power recurrence --------------
     # X_j in the (m+1)-row global frame; q_l lives at basis row k_start+1+l.
-    xs = [jnp.zeros((m1,), dtype).at[k_start].set(1.0)]   # X_0 = e_k
+    xs = [jnp.zeros((m1,), hdt).at[k_start].set(1.0)]     # X_0 = e_k
     for j in range(1, s + 1):
         xj = c_tot[:, j - 1]
         xj = lax.dynamic_update_slice(xj, r_tot[:, j - 1], (k_start + 1,))
@@ -374,7 +385,8 @@ def _block_step(powers_fn, gs_pass, v_basis, h, k_start: int, s: int, eps,
     corr = h @ s1_masked[: h.shape[1]]                    # (m1, s)
     h_new = jnp.linalg.solve(s1r.T, (s2 - corr).T).T      # (m1, s)
 
-    v_basis = lax.dynamic_update_slice(v_basis, q, (k_start + 1, 0))
+    v_basis = lax.dynamic_update_slice(v_basis, q.astype(dtype),
+                                       (k_start + 1, 0))
     h = lax.dynamic_update_slice(h, h_new, (0, k_start))
     return v_basis, h, gram
 
@@ -384,7 +396,8 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
                 axis_name: Optional[str] = None,
                 gs: str = "cgs2", history: int = 8,
                 precond: Optional[Callable] = None,
-                basis: str = "monomial") -> GmresResult:
+                basis: str = "monomial",
+                compute_dtype=None) -> GmresResult:
     """Restarted s-step GMRES(m = s * blocks).
 
     ``a`` may be any operator ``gmres`` accepts; ``BandedOperator`` /
@@ -415,12 +428,22 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
     conditioned past the monomial kappa^s wall (sharded banded solves keep
     the monomial CA halo kernel; newton there runs the per-power psum
     reference).
+
+    ``compute_dtype``: storage dtype for the STREAMED arrays — the basis
+    carry and the power block — mirroring the standard cycle's option
+    (PR 3's fused path).  ``bf16`` halves basis traffic AND, for explicit
+    operators, downcasts the operand stream of A inside the power block
+    (the matrix-powers / SpMV kernels accumulate in f32 in-register); the
+    replicated CholQR/Hessenberg/Givens algebra and the restart-boundary
+    residual recompute stay in ``b.dtype``, so tolerance checks are
+    honest.  None keeps everything in ``b.dtype``.
     """
     matvec = as_operator(a)
     if x0 is None:
         x0 = jnp.zeros_like(b)
     n = b.shape[0]
     dtype = b.dtype
+    basis_dtype = dtype if compute_dtype is None else jnp.dtype(compute_dtype)
     eps = jnp.asarray(jnp.finfo(dtype).eps * 100, dtype)   # relative factor
     guard = jnp.asarray(jnp.finfo(dtype).tiny ** 0.5, dtype)
     m = s * blocks
@@ -432,16 +455,24 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
     check_precond(precond)
     shifts = _newton_shifts(matvec, s) if basis == "newton" else None
     identity_pc = precond is None or getattr(precond, "is_identity", False)
+    # A compute dtype narrower than A's storage also downcasts the A
+    # stream inside the power block — the original operator is kept for
+    # the restart-boundary residual (full-precision convergence checks).
+    power_op = matvec
+    if (isinstance(matvec, EXPLICIT_OPERATORS)
+            and jnp.dtype(basis_dtype).itemsize
+            < jnp.dtype(matvec.dtype).itemsize):
+        power_op = with_dtype(matvec, basis_dtype)
     powers_fn, gs_pass, basis_shape, single_reduce = _make_block_fns(
-        matvec, n, s, m + 1, dtype, axis_name, gs, precond=precond,
+        power_op, n, s, m + 1, basis_dtype, axis_name, gs, precond=precond,
         shifts=shifts)
     gacc = jnp.promote_types(dtype, jnp.float32)
 
     def cycle(x):
         r = b - matvec(x)
         beta = arnoldi.norm(r, axis_name)
-        v = jnp.zeros(basis_shape, dtype).at[0, :n].set(
-            r / jnp.maximum(beta, guard))
+        v = jnp.zeros(basis_shape, basis_dtype).at[0, :n].set(
+            (r / jnp.maximum(beta, guard)).astype(basis_dtype))
         h = jnp.zeros((m + 1, m), dtype)
         # Identity init is exact where it matters: rows beyond the current
         # block are only ever touched against zero (masked) columns.
@@ -470,7 +501,7 @@ def gmres_sstep(a, b, x0=None, *, s: int = 4, blocks: int = 5,
         giv, _ = lax.fori_loop(
             0, m, fold, (givens.init(m, beta, dtype), beta <= tol_abs))
         y = givens.solve(giv)
-        dx = y @ v[:m, :n]
+        dx = y @ v[:m, :n].astype(dtype)
         # Right preconditioning: the basis spans the M^{-1}-Krylov space,
         # so the update un-preconditions (x solves A x = b, untransformed).
         return x + (dx if identity_pc else precond(dx))

@@ -20,7 +20,9 @@ Conventions (unit grid spacing, Dirichlet boundaries):
 
 Every constructor takes ``fmt`` to pick the operator class the same system
 comes back as — "banded" (native), "ell" (exercises the gather SpMV
-kernel), or "dense" (``DenseOperator``; small grids only) — and
+kernel), "sell" (sliced ELL; on these near-uniform rows it degenerates to
+identity order — the never-worse-than-ELL baseline the bench gate holds
+it to), or "dense" (``DenseOperator``; small grids only) — and
 ``backend`` ("jnp" | "pallas") which is forwarded to the operator.
 Grid points are ordered x-fastest: site (ix, iy, iz) is row
 ``ix + nx * (iy + ny * iz)``.
@@ -29,7 +31,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.operators import BandedOperator, DenseOperator
+from repro.core.operators import (BandedOperator, DenseOperator,
+                                  SlicedEllOperator)
 
 
 def _assemble(bands, offsets, fmt: str, backend: str):
@@ -38,9 +41,12 @@ def _assemble(bands, offsets, fmt: str, backend: str):
         return op
     if fmt == "ell":
         return op.to_ell()
+    if fmt == "sell":
+        return SlicedEllOperator.from_ell(op.to_ell())
     if fmt == "dense":
         return DenseOperator(op.todense(), backend)
-    raise ValueError(f"unknown fmt {fmt!r}; options: banded, ell, dense")
+    raise ValueError(f"unknown fmt {fmt!r}; options: banded, ell, sell, "
+                     f"dense")
 
 
 def poisson_2d(nx: int, ny: int | None = None, *, dtype=jnp.float32,

@@ -17,6 +17,18 @@ ELL (``ell_matvec``) — general sparsity.  A is (values, cols), both
   it once per row block, and for the O(n)-nonzero regime x is the small
   array anyway (``tuning.spmv_fits`` gates the residency).
 
+Sliced ELL (``sell_matvec``) — irregular sparsity (SELL-C-sigma style).
+  Plain ELL's pad-to-widest is pathological when row lengths span orders
+  of magnitude (power-law graphs: one hub row inflates every row's
+  storage).  Here rows are sorted by nonzero count, cut into fixed-height
+  slices each padded only to its own widest row, and same-width slices
+  are merged into a handful of rectangular width BINS — the matvec is one
+  ``_ell_kernel`` launch per bin over the shared VMEM-resident operand
+  (column indices stay GLOBAL, so x needs no permutation), producing the
+  output in the sorted-row frame.  The caller (``SlicedEllOperator``)
+  owns the row permutation and scatters the result back; traffic is
+  proportional to sum_b rows_b*width_b instead of n*max_width.
+
 Banded / stencil (``banded_matvec``) — structured grids.  A is a DIA-style
   band stack (nbands, n) plus a static tuple of diagonal ``offsets``:
   ``y[i] = sum_d bands[d, i] * x[i + offsets[d]]`` with out-of-range reads
@@ -147,6 +159,69 @@ def ell_matvec_ref(values: jax.Array, cols: jax.Array,
     if x.ndim == 2:
         vals = vals[:, :, None]
     return jnp.sum(vals * g, axis=1).astype(compute_dtype)
+
+
+# --------------------------------------------------------------------------
+# Sliced-ELL (SELL-C-sigma) row-binned kernel entry points
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("block_ms", "interpret"))
+def sell_matvec(bin_values: tuple, bin_cols: tuple, x: jax.Array, *,
+                block_ms: tuple | None = None,
+                interpret: bool = False) -> jax.Array:
+    """Sliced-ELL SpMV in the SORTED-row frame: one launch per width bin.
+
+    ``bin_values[b]`` / ``bin_cols[b]`` are (rows_b, width_b) rectangles —
+    contiguous runs of nnz-sorted rows padded to the bin's width, with
+    int32 GLOBAL column indices (padding slots: value 0 at column 0).
+    ``x`` is the full (n,) or (n, k) operand, resident in VMEM for every
+    launch.  Returns the (sum_b rows_b,) or (sum_b rows_b, k) output in
+    bin order — the caller scatters it back through its row permutation.
+
+    ``block_ms``: optional per-bin row-block tuple (``choose_sell_block``
+    per bin); each bin's row count is padded up to its block like
+    ``ell_matvec`` pads the grid — but only the bin's rows, never x.
+    """
+    bin_values = tuple(bin_values)
+    bin_cols = tuple(bin_cols)
+    if not bin_values or len(bin_values) != len(bin_cols):
+        raise TypeError(f"sell_matvec: {len(bin_values)} value bins vs "
+                        f"{len(bin_cols)} cols bins (need >= 1, matching)")
+    if block_ms is not None and len(block_ms) != len(bin_values):
+        raise TypeError(f"sell_matvec: {len(block_ms)} block_ms for "
+                        f"{len(bin_values)} bins")
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    outs = []
+    for i, (vals, cols) in enumerate(zip(bin_values, bin_cols)):
+        rb, wb = vals.shape
+        if cols.shape != (rb, wb):
+            raise TypeError(f"sell_matvec: bin {i} cols {cols.shape} must "
+                            f"match values {vals.shape}")
+        bm = min(block_ms[i] if block_ms is not None else 512, rb)
+        rp = (rb + bm - 1) // bm * bm
+        if rp != rb:
+            # Pad ONLY the bin's rows to the tile grid (value 0 at column
+            # 0, in-bounds in x) — unlike ``ell_matvec``'s recursive pad,
+            # x must stay untouched: its length is n, not rows_b.
+            vals = jnp.pad(vals, ((0, rp - rb), (0, 0)))
+            cols = jnp.pad(cols, ((0, rp - rb), (0, 0)))
+        compute_dtype, acc_dtype = _acc_dtypes(vals.dtype, x.dtype)
+        out = _ell_pallas(vals, cols, x.astype(compute_dtype), bm, interpret,
+                          acc_dtype, "gmres_spmv_sell")
+        outs.append(out[:rb].astype(compute_dtype))
+    y = jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
+    return y[:, 0] if squeeze else y
+
+
+def sell_matvec_ref(bin_values: tuple, bin_cols: tuple,
+                    x: jax.Array) -> jax.Array:
+    """Pure-jnp sliced-ELL SpMV oracle, sorted-row frame (see sell_matvec)."""
+    if not bin_values or len(bin_values) != len(bin_cols):
+        raise TypeError(f"sell_matvec_ref: {len(bin_values)} value bins vs "
+                        f"{len(bin_cols)} cols bins (need >= 1, matching)")
+    outs = [ell_matvec_ref(v, c, x) for v, c in zip(bin_values, bin_cols)]
+    return jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
 
 
 # --------------------------------------------------------------------------

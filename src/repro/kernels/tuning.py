@@ -313,6 +313,33 @@ def clear_tune_cache(disk: bool = False) -> None:
                 pass
 
 
+def record_tuned(choice_fn, value, *args, **kwargs) -> str:
+    """Overwrite the persistent cache entry for ``choice_fn(*args, **kwargs)``.
+
+    This is the WRITE path of autotune-by-measurement (``kernel_bench
+    --measure``): ``persistent_choice`` lookups give a disk entry
+    precedence over recomputing the VMEM model, so recording a measured
+    winner here re-tunes every later call with the same key — in this
+    process (the lru shadow is dropped) and in every future one (the JSON
+    survives restarts).  The key is built exactly like the read path's,
+    including the ambient topology, so record under the same
+    ``shard_context`` the kernel will run under.  Returns the key.
+    """
+    if not hasattr(choice_fn, "__wrapped__"):
+        raise TypeError(f"record_tuned wants a @persistent_choice function, "
+                        f"got {choice_fn!r}")
+    kw = tuple(sorted(kwargs.items()))
+    key = f"{choice_fn.__name__}|{args}|{kw}|p{shard_size()}"
+    disk = _disk_load()
+    # JSON round-trips tuples as lists; store the list form so the entry
+    # is identical whether it was written here or by a model lookup that
+    # got persisted and re-read (``_decode`` restores tuples either way).
+    disk[key] = list(value) if isinstance(value, tuple) else value
+    _disk_store(disk)
+    choice_fn.cache_clear()
+    return key
+
+
 @persistent_choice
 def choose_matvec_blocks(m: int, n: int, dtype_name: str = "float32",
                          k: int = 1, budget: int = VMEM_BUDGET):
@@ -387,6 +414,49 @@ def spmv_fits(n: int, width: int, dtype, k: int = 1, halo: int = 0,
             + _round_up(n + 2 * halo, LANE) * k * 4    # resident x (+ halo)
             + sub * k * 4)                             # output tile
     return need <= budget
+
+
+@persistent_choice
+def choose_sell_block(n: int, rows: int, width: int,
+                      dtype_name: str = "float32", k: int = 1,
+                      slice_height: int = 64,
+                      budget: int = VMEM_BUDGET) -> int:
+    """Pick ``block_m`` for ONE width bin of the sliced-ELL SpMV kernel.
+
+    A bin is just an ELL rectangle — (rows, width) values + int32 cols in
+    the sorted-row frame gathering from the GLOBAL (n, k) operand resident
+    in VMEM — so the working-set model matches ``choose_spmv_block``.  Two
+    differences: the resident-operand term uses the global ``n`` (column
+    indices are global; the operand is shared by every bin's launch, not
+    sliced per bin), and candidates step in multiples of ``slice_height``
+    so a grid step covers whole slices (a block boundary inside a slice
+    would split the one rectangle the format guarantees is dense).
+    """
+    s = itemsize(dtype_name)
+    sub = sublane(dtype_name)
+    resident = _round_up(n, LANE) * k * 4   # x, promoted to f32
+    c = max(int(slice_height), sub)
+    best = c
+    bm = c
+    while bm <= 4096:
+        need = 2 * bm * width * (s + 4) + resident + bm * k * 4
+        if need <= budget:
+            best = bm
+        bm *= 2
+    return min(best, _round_up(rows, sub))
+
+
+def sell_fits(n: int, width: int, dtype, k: int = 1,
+              budget: int = VMEM_BUDGET) -> bool:
+    """Can the sliced-ELL kernel keep the full operand x in VMEM?
+
+    ``width`` is the WIDEST bin's padded width: the per-bin launches share
+    one resident (n, k) operand (column indices are global), so the
+    binding residency constraint is plain ELL's at the widest bin — which
+    is at most plain ELL's own, since bin widths never exceed the global
+    max row width.
+    """
+    return spmv_fits(n, width, dtype, k=k, halo=0, budget=budget)
 
 
 @persistent_choice

@@ -215,3 +215,43 @@ def test_recovery_overhead_slack_is_configurable():
     assert bench_gate.check(_payload([row]), None, tol=0.05,
                             min_pipeline_ratio=2.0,
                             recovery_overhead_slack=1.05) == []
+
+
+GOOD_SELL_ROW = {
+    "name": "sell_spmv_powerlaw_n4096", "us": 0.0, "derived": "x",
+    "mode": "modeled", "hbm_bytes_ell": 900_000, "hbm_bytes_sell": 200_000,
+}
+
+
+def test_sell_powerlaw_traffic_cut_passes():
+    assert bench_gate.check(_payload([dict(GOOD_SELL_ROW)]), None, tol=0.05,
+                            min_pipeline_ratio=2.0) == []
+
+
+def test_sell_powerlaw_below_factor_fails():
+    row = dict(GOOD_SELL_ROW, hbm_bytes_sell=400_000)   # only 2.25x cut
+    fails = bench_gate.check(_payload([row]), None, tol=0.05,
+                             min_pipeline_ratio=2.0)
+    assert any("power-law" in f for f in fails)
+
+
+def test_sell_traffic_factor_is_configurable():
+    row = dict(GOOD_SELL_ROW, hbm_bytes_sell=400_000)
+    assert bench_gate.check(_payload([row]), None, tol=0.05,
+                            min_pipeline_ratio=2.0,
+                            sell_traffic_factor=2.0) == []
+
+
+def test_sell_stencil_never_worse_passes():
+    row = dict(GOOD_SELL_ROW, name="sell_spmv_poisson2d_64x64",
+               hbm_bytes_sell=930_000)                  # 1.033x: within slack
+    assert bench_gate.check(_payload([row]), None, tol=0.05,
+                            min_pipeline_ratio=2.0) == []
+
+
+def test_sell_stencil_beyond_slack_fails():
+    row = dict(GOOD_SELL_ROW, name="sell_spmv_poisson2d_64x64",
+               hbm_bytes_sell=990_000)                  # 1.1x ELL
+    fails = bench_gate.check(_payload([row]), None, tol=0.05,
+                             min_pipeline_ratio=2.0)
+    assert any("never-worse" in f for f in fails)

@@ -1,0 +1,407 @@
+"""Sliced-ELL subsystem: kernel, operator, workloads, solvers, serving.
+
+Mirrors tests/test_sparse.py for the irregular-sparsity format: the
+row-binned ``sell_matvec`` kernel vs its jnp oracle (Pallas interpreter
+on CPU), ``SlicedEllOperator`` vs dense materialization across builders
+and dtypes, the power-law graph workloads (core/graphs.py), gmres /
+gmres_batched / gmres_sstep convergence parity vs dense, the sharded
+path on fake devices, and a PageRank burst end-to-end through
+``SolverServer`` with a ``slicedell`` handle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gmres, gmres_batched, graphs, stencils
+from repro.core.operators import (SlicedEllOperator, SparseOperator,
+                                  with_dtype)
+from repro.core.sstep import gmres_sstep
+from repro.kernels import spmv, tuning
+
+
+def _powerlaw_dense(n, seed=0, dtype=np.float32, shuffle=True):
+    """Dense power-law-ish matrix with a diagonally dominant diagonal.
+
+    Row i carries ~max(2, n//8/(i+1)) off-diagonal nonzeros; rows are
+    shuffled so the nnz sort is NOT the identity — the permutation path
+    must do real work.
+    """
+    rng = np.random.default_rng(seed)
+    a = np.zeros((n, n), np.float64)
+    for i in range(n):
+        k = max(2, (n // 8) // (i + 1))
+        cols = rng.choice(n, size=min(k, n), replace=False)
+        a[i, cols] = rng.normal(size=len(cols))
+    if shuffle:
+        p = rng.permutation(n)
+        a = a[p][:, p]
+    np.fill_diagonal(a, 0.0)
+    a[np.arange(n), np.arange(n)] = 2.0 * np.abs(a).sum(axis=1) + 1.0
+    return a.astype(dtype)
+
+
+def _bins_of(a_np, slice_height=16, **kw):
+    op = SlicedEllOperator.from_dense(a_np, slice_height=slice_height, **kw)
+    return op.bin_values, op.bin_cols, op.perm
+
+
+# --------------------------------------------------------------------------
+# row-binned kernel vs the jnp oracle
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n,c", [(200, 16), (256, 64), (130, 8)])
+def test_sell_kernel_matches_reference(n, c):
+    a = _powerlaw_dense(n, seed=n)
+    bv, bc, _ = _bins_of(a, slice_height=c)
+    x = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    y_k = spmv.sell_matvec(bv, bc, x, interpret=True)
+    y_r = spmv.sell_matvec_ref(bv, bc, x)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_sell_kernel_multi_rhs_and_blocks():
+    a = _powerlaw_dense(192, seed=3)
+    bv, bc, _ = _bins_of(a, slice_height=16)
+    x = jax.random.normal(jax.random.PRNGKey(5), (192, 6))
+    bms = tuple(64 for _ in bv)          # forces the per-bin row padding
+    y_k = spmv.sell_matvec(bv, bc, x, block_ms=bms, interpret=True)
+    y_r = spmv.sell_matvec_ref(bv, bc, x)
+    assert y_k.shape == y_r.shape
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_sell_kernel_bf16_values():
+    """bf16 bin storage, f32 operand: f32 accumulation in-kernel."""
+    a = _powerlaw_dense(160, seed=7)
+    op = SlicedEllOperator.from_dense(a, slice_height=16)
+    opb = with_dtype(op, jnp.bfloat16)
+    x = jax.random.normal(jax.random.PRNGKey(9), (160,))
+    y_k = spmv.sell_matvec(opb.bin_values, opb.bin_cols, x, interpret=True)
+    assert y_k.dtype == jnp.float32         # f32 accumulation, not bf16
+    # Kernel output is in sorted row order; scatter through perm to compare.
+    y = np.zeros(160, np.float32)
+    y[np.asarray(opb.perm)] = np.asarray(y_k)
+    np.testing.assert_allclose(y, a @ np.asarray(x), rtol=3e-2, atol=3e-2)
+
+
+def test_sell_kernel_validates_shapes():
+    a = _powerlaw_dense(64)
+    bv, bc, _ = _bins_of(a)
+    with pytest.raises(TypeError):
+        spmv.sell_matvec(bv, bc[:-1], jnp.zeros((64,)), interpret=True)
+    with pytest.raises(TypeError):
+        spmv.sell_matvec(bv, bc, jnp.zeros((64,)),
+                         block_ms=(8,) * (len(bv) + 1), interpret=True)
+    with pytest.raises(TypeError):
+        spmv.sell_matvec((), (), jnp.zeros((64,)), interpret=True)
+
+
+# --------------------------------------------------------------------------
+# operator: builders, conversions, dispatch vs dense materialization
+# --------------------------------------------------------------------------
+def test_operator_matches_dense_both_backends():
+    a = _powerlaw_dense(200, seed=1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (200,))
+    want = a @ np.asarray(x)
+    for backend in ("jnp", "pallas"):
+        op = SlicedEllOperator.from_dense(a, slice_height=16,
+                                          backend=backend)
+        np.testing.assert_allclose(np.asarray(op(x)), want,
+                                   rtol=3e-5, atol=3e-5)
+        xb = jax.random.normal(jax.random.PRNGKey(4), (200, 3))
+        np.testing.assert_allclose(np.asarray(op(xb)), a @ np.asarray(xb),
+                                   rtol=3e-5, atol=3e-5)
+
+
+def test_sorted_build_cuts_storage_and_matches():
+    """The hub-row case the format exists for: sorted slicing must cut
+    stored entries well below plain ELL's n * max_width."""
+    a = _powerlaw_dense(256, seed=2)
+    op = SlicedEllOperator.from_dense(a, slice_height=16)
+    ell = SparseOperator.from_dense(a)
+    assert not op.identity_perm             # shuffled rows -> real sort
+    assert op.storage_entries < 0.5 * ell.values.shape[0] * ell.values.shape[1]
+    np.testing.assert_allclose(np.asarray(op.todense()), a, atol=0)
+
+
+def test_stencil_build_degenerates_to_identity():
+    """Near-uniform rows (sort='auto'): keep original order, no perm cost,
+    never worse than plain ELL."""
+    op = stencils.poisson_2d(16, 16, fmt="sell")
+    ell = stencils.poisson_2d(16, 16, fmt="ell")
+    assert isinstance(op, SlicedEllOperator)
+    assert op.identity_perm
+    assert op.storage_entries <= ell.values.shape[0] * ell.values.shape[1]
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    np.testing.assert_allclose(np.asarray(op(x)), np.asarray(ell(x)),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_from_ell_to_ell_roundtrip():
+    a = _powerlaw_dense(130, seed=5)
+    sp = SparseOperator.from_dense(a)
+    op = SlicedEllOperator.from_ell(sp, slice_height=8)
+    assert op.halo == sp.halo
+    np.testing.assert_allclose(np.asarray(op.todense()), a, atol=0)
+    back = op.to_ell()
+    np.testing.assert_allclose(np.asarray(back.todense()), a, atol=0)
+
+
+def test_max_bins_caps_launch_count():
+    a = _powerlaw_dense(512, seed=6)
+    op = SlicedEllOperator.from_dense(a, slice_height=8, max_bins=3)
+    assert len(op.bin_values) <= 3
+    np.testing.assert_allclose(np.asarray(op.todense()), a, atol=0)
+
+
+def test_pytree_roundtrip_and_jit():
+    a = _powerlaw_dense(96, seed=8)
+    op = SlicedEllOperator.from_dense(a, slice_height=16, backend="pallas")
+    leaves, treedef = jax.tree_util.tree_flatten(op)
+    op2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert (op2.backend, op2.halo, op2.slice_height, op2.identity_perm) == \
+        (op.backend, op.halo, op.slice_height, op.identity_perm)
+    x = jax.random.normal(jax.random.PRNGKey(3), (96,))
+    y = jax.jit(lambda o, v: o(v))(op, x)
+    np.testing.assert_allclose(np.asarray(y), a @ np.asarray(x),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_ref_env_override(monkeypatch):
+    """REPRO_KERNELS=ref must keep the pallas-backend operator correct."""
+    monkeypatch.setenv("REPRO_KERNELS", "ref")
+    a = _powerlaw_dense(128, seed=9)
+    op = SlicedEllOperator.from_dense(a, slice_height=16, backend="pallas")
+    x = jax.random.normal(jax.random.PRNGKey(7), (128,))
+    np.testing.assert_allclose(np.asarray(op(x)), a @ np.asarray(x),
+                               rtol=3e-5, atol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# pseudo-hypothesis sweep: random patterns x slice heights x operands x dtype
+# (the strategy-driven version lives in tests/test_properties.py)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,c,k,dtype", [
+    (11, 1, 1, jnp.float32),
+    (12, 8, 1, jnp.float32),
+    (13, 16, 4, jnp.float32),
+    (14, 64, 1, jnp.bfloat16),
+    (15, 32, 2, jnp.bfloat16),
+])
+def test_random_pattern_matches_dense(seed, c, k, dtype):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(40, 220))
+    a = _powerlaw_dense(n, seed=seed)
+    op = SlicedEllOperator.from_dense(
+        a.astype(jnp.dtype(dtype).name if dtype != jnp.bfloat16 else
+                 np.float32), slice_height=c)
+    if dtype == jnp.bfloat16:
+        op = with_dtype(op, jnp.bfloat16)
+    shape = (n,) if k == 1 else (n, k)
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    want = np.asarray(op.todense(), np.float32) @ np.asarray(x)
+    got = np.asarray(op(x), np.float32)
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+# --------------------------------------------------------------------------
+# graph workloads
+# --------------------------------------------------------------------------
+def test_powerlaw_adjacency_contract():
+    a = graphs.powerlaw_adjacency(128, seed=0)
+    assert np.array_equal(a, a.T)
+    assert np.all(np.diag(a) == 0)
+    deg = a.sum(axis=1)
+    assert deg.min() >= 2                   # ring guarantees this
+    assert deg.max() >= 4 * np.median(deg)  # hub regime
+    assert np.array_equal(a, graphs.powerlaw_adjacency(128, seed=0))
+    assert not np.array_equal(a, graphs.powerlaw_adjacency(128, seed=1))
+
+
+def test_graph_laplacian_formats_agree():
+    ops = {fmt: graphs.graph_laplacian(96, seed=3, fmt=fmt, slice_height=16)
+           for fmt in ("sell", "ell", "dense")}
+    x = jax.random.normal(jax.random.PRNGKey(2), (96,))
+    want = np.asarray(ops["dense"](x))
+    for fmt in ("sell", "ell"):
+        np.testing.assert_allclose(np.asarray(ops[fmt](x)), want,
+                                   rtol=3e-5, atol=3e-5)
+    assert isinstance(ops["sell"], SlicedEllOperator)
+    # Chung-Lu places hubs at low indices, so rows arrive near-sorted and
+    # either order works — but slicing must still beat flat ELL padding.
+    ell = ops["ell"]
+    assert ops["sell"].storage_entries < \
+        0.7 * ell.values.shape[0] * ell.values.shape[1]
+
+
+def test_pagerank_solution_is_a_distribution():
+    op, make_rhs = graphs.pagerank_system(128, seed=4, fmt="sell")
+    b = make_rhs(jnp.ones(128))
+    res = gmres(op, b, m=20, tol=1e-6, max_restarts=50)
+    assert bool(res.converged)
+    x = np.asarray(res.x)
+    assert abs(x.sum() - 1.0) < 1e-4        # PageRank mass conservation
+    assert x.min() > -1e-6
+
+
+# --------------------------------------------------------------------------
+# solvers end-to-end (interpret-mode kernels on CPU)
+# --------------------------------------------------------------------------
+def test_gmres_convergence_parity_sell_vs_dense():
+    n = 192
+    op = graphs.graph_laplacian(n, seed=5, fmt="sell", shift=1.0,
+                               backend="pallas")
+    dn = graphs.graph_laplacian(n, seed=5, fmt="dense", shift=1.0)
+    b = jax.random.normal(jax.random.PRNGKey(5), (n,))
+    rs = gmres(op, b, m=30, tol=1e-6, max_restarts=60)
+    rd = gmres(dn, b, m=30, tol=1e-6, max_restarts=60)
+    assert bool(rs.converged) and bool(rd.converged)
+    assert abs(int(rs.restarts) - int(rd.restarts)) <= 1
+    np.testing.assert_allclose(np.asarray(rs.x), np.asarray(rd.x),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gmres_batched_block_path_on_sell():
+    n, k = 128, 3
+    op = graphs.graph_laplacian(n, seed=6, fmt="sell", shift=1.0,
+                               backend="pallas")
+    bs = jax.random.normal(jax.random.PRNGKey(6), (k, n))
+    res = gmres_batched(op, bs, m=25, tol=1e-6, max_restarts=60)
+    dense = np.asarray(op.todense())
+    for i in range(k):
+        r = np.linalg.norm(dense @ np.asarray(res.x[i]) - np.asarray(bs[i]))
+        assert r <= 1e-6 * np.linalg.norm(np.asarray(bs[i])) * 1.5
+
+
+def test_gmres_sstep_on_sell_operator():
+    n = 128
+    op = graphs.graph_laplacian(n, seed=7, fmt="sell", shift=1.0)
+    b = jax.random.normal(jax.random.PRNGKey(7), (n,))
+    res = gmres_sstep(op, b, s=2, blocks=8, tol=1e-6, max_restarts=60)
+    assert bool(res.converged)
+    r = np.asarray(op.todense()) @ np.asarray(res.x) - np.asarray(b)
+    assert np.linalg.norm(r) <= 2e-6 * np.linalg.norm(np.asarray(b)) * 2
+
+
+def test_sell_with_jacobi_precond():
+    n = 128
+    op = graphs.graph_laplacian(n, seed=8, fmt="sell", shift=1.0)
+    from repro.core import preconditioners as pc
+    b = jax.random.normal(jax.random.PRNGKey(8), (n,))
+    res = gmres(op, b, m=20, tol=1e-6, max_restarts=60,
+                precond=pc.jacobi(op))
+    assert bool(res.converged)
+    # diag/row-sum extraction must match the dense materialization
+    d = np.asarray(pc._diag_of(op))
+    np.testing.assert_allclose(d, np.diag(np.asarray(op.todense())),
+                               rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# sstep x compute_dtype=bf16 (satellite: parity like the PR 3 fused path)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("gs", ["cgs2", "cgs2_pipelined"])
+def test_sstep_bf16_compute_dtype_parity(gs):
+    op = stencils.poisson_2d(16, 16)
+    b = jnp.sin(jnp.arange(256, dtype=jnp.float32))
+    r32 = gmres_sstep(op, b, s=4, blocks=5, tol=1e-5, max_restarts=60, gs=gs)
+    rbf = gmres_sstep(op, b, s=4, blocks=5, tol=1e-5, max_restarts=60, gs=gs,
+                      compute_dtype=jnp.bfloat16)
+    assert bool(r32.converged) and bool(rbf.converged)
+    # Convergence checks run on the full-precision residual, so both meet
+    # the SAME tol; bf16 streams may cost extra restarts but not accuracy.
+    a = np.asarray(op.todense())
+    for res in (r32, rbf):
+        rnorm = np.linalg.norm(a @ np.asarray(res.x) - np.asarray(b))
+        assert rnorm <= 1e-5 * np.linalg.norm(np.asarray(b)) * 1.5
+    np.testing.assert_allclose(np.asarray(rbf.x), np.asarray(r32.x),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_sstep_bf16_downcasts_operand_stream():
+    """The power block must stream A in bf16 (with_dtype), while the
+    restart-boundary residual stays f32 — spy on the powers input."""
+    from repro.core import sstep as sstep_mod
+    seen = []
+    orig = sstep_mod._make_block_fns
+
+    def spy(op, *a, **kw):
+        seen.append(op.dtype)
+        return orig(op, *a, **kw)
+
+    sstep_mod._make_block_fns = spy
+    try:
+        op = stencils.poisson_2d(8, 8)
+        b = jnp.ones((64,), jnp.float32)
+        res = gmres_sstep(op, b, s=2, blocks=4, tol=1e-4, max_restarts=40,
+                          compute_dtype=jnp.bfloat16)
+    finally:
+        sstep_mod._make_block_fns = orig
+    assert seen == [jnp.bfloat16]
+    assert res.residual.dtype == jnp.float32
+    assert bool(res.converged)
+
+
+# --------------------------------------------------------------------------
+# sharded path (fake devices in a subprocess — XLA flag must precede jax)
+# --------------------------------------------------------------------------
+def test_sharded_sell_matches_single_device_8dev():
+    import json as _json
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent("""
+        import json, jax, jax.numpy as jnp
+        from repro.compat import make_mesh
+        from repro.core import gmres, gmres_sharded, graphs
+        mesh = make_mesh((8,), ('model',))
+        op = graphs.graph_laplacian(256, seed=9, fmt='sell', shift=1.0)
+        b = jax.random.normal(jax.random.PRNGKey(9), (256,))
+        res_d = gmres_sharded(mesh, 'model', op, b, m=20, tol=1e-6,
+                              max_restarts=60)
+        res_s = gmres(op, b, m=20, tol=1e-6, max_restarts=60)
+        err = float(jnp.linalg.norm(res_d.x - res_s.x)
+                    / jnp.linalg.norm(res_s.x))
+        print(json.dumps({"converged": bool(res_d.converged), "err": err}))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = src
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    got = _json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["converged"]
+    assert got["err"] < 2e-3
+
+
+# --------------------------------------------------------------------------
+# serving: PageRank burst through SolverServer with a slicedell handle
+# --------------------------------------------------------------------------
+def test_pagerank_burst_through_solver_server():
+    from repro.serve import SolverServer
+    from repro.serve.handles import operator_fmt
+    n, k = 96, 3
+    op, make_rhs = graphs.pagerank_system(n, seed=10, fmt="sell")
+    assert operator_fmt(op) == "slicedell"
+    srv = SolverServer(op, m=12, k=k)
+    rng = np.random.default_rng(10)
+    rhss = {}
+    for _ in range(7):
+        b = np.asarray(make_rhs(rng.random(n) + 0.1))
+        rhss[srv.submit(b, tol=1e-6, max_restarts=60)] = b
+    srv.run()
+    assert srv.handle.key.fmt == "slicedell"
+    assert set(srv.results) == set(rhss)
+    dense = np.asarray(op.todense())
+    for rid, b in rhss.items():
+        out = srv.results[rid]
+        assert out.status == "done", (rid, out.status)
+        x = np.asarray(out.x)
+        assert abs(x.sum() - 1.0) < 1e-3    # each solve is a distribution
+        assert np.linalg.norm(dense @ x - b) <= 1e-6 * np.linalg.norm(b) * 2

@@ -106,6 +106,34 @@ def test_clear_disk_removes_file(tmp_cache):
     assert not os.path.exists(tmp_cache)
 
 
+def test_record_tuned_overwrites_model_choice(tmp_cache):
+    """Autotune-by-measurement: a recorded timing winner must outrank the
+    VMEM-model choice for the same key — now and after a cache reload."""
+    modeled = tuning.choose_spmv_block(4096, 9, "float32", k=1)
+    measured = 128 if modeled != 128 else 256
+    key = tuning.record_tuned(tuning.choose_spmv_block, measured,
+                              4096, 9, "float32", k=1)
+    assert key.startswith("choose_spmv_block|")
+    assert tuning.choose_spmv_block(4096, 9, "float32", k=1) == measured
+    # Survives a full in-memory drop (the restart story).
+    tuning.clear_tune_cache()
+    assert tuning.choose_spmv_block(4096, 9, "float32", k=1) == measured
+    # Other keys are untouched by the overwrite.
+    assert tuning.choose_spmv_block(4096, 9, "float32", k=4) != measured or \
+        tuning.choose_spmv_block.__wrapped__(4096, 9, "float32", k=4) == measured
+
+
+def test_record_tuned_tuple_values(tmp_cache):
+    tuning.record_tuned(tuning.choose_matvec_blocks, (64, 256), 512, 2048)
+    got = tuning.choose_matvec_blocks(512, 2048)
+    assert got == (64, 256) and isinstance(got, tuple)
+
+
+def test_record_tuned_rejects_plain_functions():
+    with pytest.raises(TypeError):
+        tuning.record_tuned(lambda n: n, 128, 64)
+
+
 def test_gs_payload_fits_gate():
     """The explicit dispatch gate for the single-reduce payload kernel."""
     assert tuning.gs_payload_fits(33, 8192, "float32")

@@ -28,6 +28,13 @@ fails on perf-model regressions:
      (default 2) vs unpreconditioned at identical tol on the 2-D Poisson
      and convection-diffusion stencils; the reference line-Jacobi rows
      must merely never be WORSE than unpreconditioned.
+  7. absolute invariants on the sliced-ELL rows (hbm_bytes_sell vs
+     hbm_bytes_ell): on power-law rows ("powerlaw" in the name) sliced
+     ELL must cut modeled SpMV traffic >= --sell-traffic-factor x
+     (default 3) below plain ELL; on every other such row (regular
+     stencils, where the format degenerates to identity-order ELL) it
+     must stay within --sell-stencil-slack (default 1.05x) — the
+     never-worse contract that makes "sell" safe as a default.
 
 Rows are matched by name; rows present only on one side are skipped for
 diff checks (the smoke subset uses smaller cases than the full run) but
@@ -53,7 +60,9 @@ def check(current: dict, baseline: dict | None, *, tol: float,
           min_pipeline_ratio: float,
           serve_ideal_slack: float = 1.1,
           recovery_overhead_slack: float = 1.02,
-          precond_restart_factor: float = 2.0) -> list[str]:
+          precond_restart_factor: float = 2.0,
+          sell_traffic_factor: float = 3.0,
+          sell_stencil_slack: float = 1.05) -> list[str]:
     fails = []
     cur = _rows_by_name(current)
     base = _rows_by_name(baseline) if baseline else {}
@@ -128,6 +137,24 @@ def check(current: dict, baseline: dict | None, *, tol: float,
                 fails.append(
                     f"{name}: preconditioned restarts {rp} worse than "
                     f"unpreconditioned {ru}")
+        # 7. sliced-ELL vs plain ELL modeled traffic: >= factor x cut on
+        #    power-law rows (the format's reason to exist), never worse
+        #    than sell_stencil_slack on regular stencils (the safe-default
+        #    contract: identity-order degeneration costs ~nothing).
+        if "hbm_bytes_sell" in r and "hbm_bytes_ell" in r:
+            ratio = r["hbm_bytes_sell"] / r["hbm_bytes_ell"]
+            if "powerlaw" in name:
+                if ratio * sell_traffic_factor > 1.0:
+                    fails.append(
+                        f"{name}: sliced-ELL traffic {ratio:.3f}x ELL, "
+                        f"needs <= {1 / sell_traffic_factor:.3f}x "
+                        f"({sell_traffic_factor:.0f}x cut) on power-law "
+                        f"sparsity")
+            elif ratio > sell_stencil_slack:
+                fails.append(
+                    f"{name}: sliced-ELL traffic {ratio:.3f}x ELL on a "
+                    f"regular stencil, must stay <= "
+                    f"{sell_stencil_slack:.2f}x (never-worse contract)")
         # 5. self-healing: fault-free overhead <= 2%, recovery within +1
         if "overhead_ratio" in r:
             for key in ("overhead_ratio", "stepped_overhead_ratio"):
@@ -168,6 +195,12 @@ def main(argv=None) -> int:
                     help="required unprecond/precond restart ratio on the "
                          "precond_restarts_* stencil rows (chebyshev and "
                          "banded_ilu0)")
+    ap.add_argument("--sell-traffic-factor", type=float, default=3.0,
+                    help="required ELL/sliced-ELL modeled traffic cut on "
+                         "power-law sell_spmv_* rows")
+    ap.add_argument("--sell-stencil-slack", type=float, default=1.05,
+                    help="allowed sliced-ELL/ELL traffic ratio on regular-"
+                         "stencil sell_spmv_* rows (never-worse contract)")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -183,7 +216,9 @@ def main(argv=None) -> int:
                   min_pipeline_ratio=args.min_pipeline_ratio,
                   serve_ideal_slack=args.serve_ideal_slack,
                   recovery_overhead_slack=args.recovery_overhead_slack,
-                  precond_restart_factor=args.precond_restart_factor)
+                  precond_restart_factor=args.precond_restart_factor,
+                  sell_traffic_factor=args.sell_traffic_factor,
+                  sell_stencil_slack=args.sell_stencil_slack)
     n = len(current.get("rows", []))
     nb = len(baseline.get("rows", [])) if baseline else 0
     matched = len(set(_rows_by_name(current)) & set(_rows_by_name(baseline))
